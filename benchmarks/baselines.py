@@ -1,0 +1,70 @@
+"""Non-trigger orchestration baselines (the paper compares against cloud
+services we cannot call offline; these are their architectural stand-ins).
+
+* ``DirectOrchestrator``  — Composer-style centralized always-on driver: calls
+  the thread pool directly and blocks on futures.  The overhead floor.
+* ``PollingOrchestrator`` — original-Lithops-style client: fires tasks, then
+  polls a result store at a fixed interval (the S3-polling pattern §1).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List
+
+
+class DirectOrchestrator:
+    def __init__(self, max_workers: int = 64):
+        self.pool = ThreadPoolExecutor(max_workers=max_workers)
+
+    def run_sequence(self, fn: Callable, n: int, x: Any = 0) -> Any:
+        for _ in range(n):
+            x = self.pool.submit(fn, x).result()
+        return x
+
+    def run_parallel(self, fn: Callable, items: List[Any]) -> List[Any]:
+        return [f.result() for f in [self.pool.submit(fn, it) for it in items]]
+
+    def shutdown(self):
+        self.pool.shutdown(wait=False)
+
+
+class PollingOrchestrator:
+    def __init__(self, max_workers: int = 64, poll_interval: float = 0.01):
+        self.pool = ThreadPoolExecutor(max_workers=max_workers)
+        self.poll_interval = poll_interval
+        self.results: Dict[str, Any] = {}
+        self.polls = 0
+        self._lock = threading.Lock()
+
+    def _run(self, key: str, fn: Callable, arg: Any) -> None:
+        out = fn(arg)
+        with self._lock:
+            self.results[key] = out
+
+    def _wait(self, keys: List[str]) -> List[Any]:
+        while True:
+            with self._lock:
+                if all(k in self.results for k in keys):
+                    return [self.results[k] for k in keys]
+            self.polls += 1
+            time.sleep(self.poll_interval)
+
+    def run_sequence(self, fn: Callable, n: int, x: Any = 0) -> Any:
+        for i in range(n):
+            key = f"s{i}"
+            self.pool.submit(self._run, key, fn, x)
+            x = self._wait([key])[0]
+        return x
+
+    def run_parallel(self, fn: Callable, items: List[Any]) -> List[Any]:
+        keys = []
+        for i, it in enumerate(items):
+            key = f"p{i}"
+            keys.append(key)
+            self.pool.submit(self._run, key, fn, it)
+        return self._wait(keys)
+
+    def shutdown(self):
+        self.pool.shutdown(wait=False)

@@ -1,0 +1,111 @@
+"""Fig 9 / Fig 10 reproduction: orchestration overhead for sequential and
+parallel (fork-join) workflows, Triggerflow DAG engine vs the Direct and
+Polling baselines.
+
+overhead(g) = exec_time(g) − Σ exec_time(f_i)   (paper §6.3)
+
+Task durations are scaled down 20× vs the paper (0.15 s instead of 3 s
+sequential; 0.5 s instead of 20 s parallel) so the suite stays minutes-long;
+overheads are absolute and comparable across systems.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import Triggerflow
+from repro.core.dag import DAG, MapOperator, PythonOperator
+
+from .baselines import DirectOrchestrator, PollingOrchestrator
+
+SEQ_TASK_S = 0.15
+PAR_TASK_S = 0.5
+SEQ_NS = (5, 10, 20, 40, 80)
+PAR_NS = (5, 20, 80, 320)
+
+
+def _sleep_task(x):
+    time.sleep(SEQ_TASK_S)
+    return (x or 0) + 1
+
+
+def _par_task(x):
+    time.sleep(PAR_TASK_S)
+    return x
+
+
+def tf_sequence(n: int) -> float:
+    tf = Triggerflow()  # threaded functions, worker driven inline
+    dag = DAG(f"seq{n}")
+    prev = None
+    for i in range(n):
+        op = dag.add(PythonOperator(f"t{i}", _sleep_task))
+        if prev is not None:
+            prev >> op
+        prev = op
+    dag.deploy(tf, f"seq{n}")
+    t0 = time.perf_counter()
+    res = dag.run(tf, f"seq{n}", timeout=n * SEQ_TASK_S * 4 + 30)
+    dt = time.perf_counter() - t0
+    assert res["status"] == "succeeded", res
+    tf.shutdown()
+    return dt - n * SEQ_TASK_S
+
+
+def tf_parallel(n: int) -> float:
+    tf = Triggerflow(backend=None)
+    tf.backend._max_workers = max(n + 8, 64)
+    dag = DAG(f"par{n}")
+    gen = dag.add(PythonOperator("gen", lambda x: list(range(n))))
+    fan = dag.add(MapOperator("fan", _par_task))
+    red = dag.add(PythonOperator("red", lambda xs: len(xs)))
+    gen >> fan >> red
+    dag.deploy(tf, f"par{n}")
+    t0 = time.perf_counter()
+    res = dag.run(tf, f"par{n}", timeout=PAR_TASK_S * 8 + 60)
+    dt = time.perf_counter() - t0
+    assert res["status"] == "succeeded" and res["result"] == n, res
+    tf.shutdown()
+    return dt - PAR_TASK_S
+
+
+def baseline_sequence(orch, n: int) -> float:
+    t0 = time.perf_counter()
+    orch.run_sequence(_sleep_task, n)
+    dt = time.perf_counter() - t0
+    orch.shutdown()
+    return dt - n * SEQ_TASK_S
+
+
+def baseline_parallel(orch, n: int) -> float:
+    t0 = time.perf_counter()
+    out = orch.run_parallel(_par_task, list(range(n)))
+    dt = time.perf_counter() - t0
+    assert len(out) == n
+    orch.shutdown()
+    return dt - PAR_TASK_S
+
+
+def run() -> List[Dict]:
+    rows = []
+    for n in SEQ_NS:
+        o_tf = tf_sequence(n)
+        o_direct = baseline_sequence(DirectOrchestrator(), n)
+        o_poll = baseline_sequence(PollingOrchestrator(), n)
+        rows.append({
+            "name": f"overhead.seq.n{n}",
+            "us_per_call": o_tf / n * 1e6,
+            "derived": f"tf={o_tf:.3f}s direct={o_direct:.3f}s "
+                       f"poll={o_poll:.3f}s (n={n})",
+        })
+    for n in PAR_NS:
+        o_tf = tf_parallel(n)
+        o_direct = baseline_parallel(DirectOrchestrator(max_workers=n + 8), n)
+        o_poll = baseline_parallel(PollingOrchestrator(max_workers=n + 8), n)
+        rows.append({
+            "name": f"overhead.par.n{n}",
+            "us_per_call": o_tf / n * 1e6,
+            "derived": f"tf={o_tf:.3f}s direct={o_direct:.3f}s "
+                       f"poll={o_poll:.3f}s (n={n})",
+        })
+    return rows

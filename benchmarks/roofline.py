@@ -1,0 +1,69 @@
+"""§Roofline collector: reads results/dryrun/*.json and emits the
+per-(arch × shape) baseline table rows + the markdown table for
+EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh: str = "single") -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fraction_of_roofline(cell: dict) -> float:
+    """Achievable fraction: ideal compute time / modelled step time
+    (bounded by the max of the three terms, assuming perfect overlap)."""
+    t = cell["roofline"]
+    ideal = cell["model_flops"] / cell["n_devices"] / 197e12
+    step_t = max(t["t_compute"], t["t_memory"], t["t_collective"])
+    return ideal / step_t if step_t else 0.0
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | dominant | "
+            "useful_flops | roofline_frac | HBM GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(mesh):
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | skipped "
+                        f"(long-context n/a) | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | FAILED: {c['error'][:60]} "
+                        f"| | | | | | |")
+            continue
+        t = c["roofline"]
+        frac = fraction_of_roofline(c)
+        mem_gb = c["memory"]["peak_est_bytes"] / 2 ** 30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {t['t_compute']:.3e} | "
+            f"{t['t_memory']:.3e} | {t['t_collective']:.3e} | {c['dominant'][2:]} | "
+            f"{c['useful_flops_ratio']:.2f} | {frac:.3f} | {mem_gb:.1f} |")
+    return "\n".join(rows)
+
+
+def run() -> List[Dict]:
+    out = []
+    for c in load_cells("single"):
+        if c["status"] != "ok":
+            continue
+        t = c["roofline"]
+        frac = fraction_of_roofline(c)
+        out.append({
+            "name": f"roofline.{c['arch']}.{c['shape']}",
+            "us_per_call": max(t["t_compute"], t["t_memory"],
+                               t["t_collective"]) * 1e6,
+            "derived": (f"dom={c['dominant'][2:]} frac={frac:.3f} "
+                        f"useful={c['useful_flops_ratio']:.2f} "
+                        f"mem={c['memory']['peak_est_bytes'] / 2**30:.1f}GB"),
+        })
+    return out

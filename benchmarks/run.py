@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement) and writes
+the raw rows to results/benchmarks.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--only load_test,overhead]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("load_test", "Table 1 — events/s per worker"),
+    ("overhead", "Fig 9/10 — seq + parallel DAG overhead vs baselines"),
+    ("event_sourcing", "Fig 11/12 — workflow-as-code replay overhead"),
+    ("autoscaling", "Fig 8 — KEDA-style scale up/down to zero"),
+    ("fault_tolerance", "Fig 13 — worker kill + recovery"),
+    ("montage", "Fig 14-16 — nested state machine, scale-to-zero"),
+    ("fedlearn_bench", "Fig 17 — federated learning rounds"),
+    ("roofline", "§Roofline — per (arch × shape) dry-run terms"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else [s for s, _ in SUITES]
+
+    all_rows = []
+    failures = 0
+    print("name,us_per_call,derived")
+    for suite, desc in SUITES:
+        if suite not in chosen:
+            continue
+        mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{suite}.FAILED,0,see stderr")
+            failures += 1
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.2f},\"{r['derived']}\"")
+            all_rows.append({k: v for k, v in r.items() if k != "timeline"})
+        sys.stdout.flush()
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the Rich Trigger API in 60 lines.
+
+Builds a tiny fan-out/fan-in workflow directly from triggers (no DAG/ASL
+sugar), showing the paper's core mechanics: ECA triggers, counter-join
+conditions with dynamic expected counts (introspection), and workflow results.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import Triggerflow, make_trigger, register_pyfunc
+
+
+def main() -> None:
+    tf = Triggerflow(inline_functions=True)
+    tf.create_workflow("quickstart")
+
+    # the "serverless functions"
+    tf.backend.register("split", lambda text: text.split())
+    tf.backend.register("score", lambda word: len(word))
+
+    # action code for the final join
+    register_pyfunc("finish", lambda ctx, ev, p: ctx.workflow_result(
+        {"status": "succeeded", "result": sum(ctx["results"])}))
+
+    tf.add_trigger("quickstart", [
+        # $init → split the input
+        make_trigger("$init",
+                     action={"name": "invoke", "fn": "split",
+                             "args": "trigger based orchestration of serverless workflows",
+                             "subject": "split.done"}),
+        # split.done → fan out one scorer per word; sets the join's expected
+        # count dynamically via trigger-context introspection (§5.1)
+        make_trigger("split.done",
+                     action={"name": "map_invoke", "fn": "score",
+                             "subject": "score.done", "join_trigger": "join"}),
+        # aggregation trigger: counter condition joins all scorer events
+        make_trigger("score.done", condition={"name": "counter"},
+                     action={"name": "pyfunc", "func": "finish"},
+                     trigger_id="join"),
+    ])
+
+    tf.init_workflow("quickstart")
+    result = tf.run_until_complete("quickstart", timeout=10)
+    print("workflow result:", result)
+    assert result == {"status": "succeeded",
+                      "result": len("triggerbasedorchestrationofserverlessworkflows")}
+    print("OK — total characters scored:", result["result"])
+
+
+if __name__ == "__main__":
+    main()

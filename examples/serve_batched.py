@@ -1,0 +1,52 @@
+"""Serving example: trigger-orchestrated batched inference.
+
+Requests arrive as CloudEvents; a counter-condition batcher trigger fires a
+prefill+decode generation batch on the mesh; per-request termination events
+carry the generated tokens.  No requests → no events → the worker scales to
+zero (run with the KEDA autoscaler to see it).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+from repro.core import KedaAutoscaler, Triggerflow
+from repro.models import ModelConfig
+from repro.serving.engine import ServingEngine
+
+
+def tiny_model() -> ModelConfig:
+    return ModelConfig(arch="serve-demo", family="dense", n_layers=4,
+                       d_model=256, n_heads=4, n_kv_heads=2, d_ff=688,
+                       vocab=1000, head_dim=64, q_chunk=128, kv_chunk=128)
+
+
+def main() -> None:
+    tf = Triggerflow(inline_functions=True)
+    engine = ServingEngine(tiny_model(), tf, "serve", max_batch=4,
+                           max_new_tokens=12, max_len=128)
+    engine.deploy()
+    scaler = KedaAutoscaler(tf, poll_interval=0.05, grace_period=0.4).start()
+
+    print("submitting 8 requests...")
+    for i in range(8):
+        engine.submit(f"req-{i}", [10 + i, 20 + i, 30 + i])
+
+    deadline = time.time() + 60
+    while engine.served < 8 and time.time() < deadline:
+        time.sleep(0.05)
+    w = tf.worker("serve")
+    done = [e for e in w.event_log if e.subject.startswith("serve|done|")]
+    for e in sorted(done, key=lambda e: e.subject):
+        r = e.data["result"]
+        print(f"  {r['id']}: {r['tokens']}")
+    print(f"served={engine.served} in {engine.batches} batches "
+          f"(max_batch={engine.max_batch})")
+    time.sleep(1.0)
+    scaler._tick()
+    print("workers after idle (scale-to-zero):", scaler.timeline[-1][1])
+    scaler.stop()
+    tf.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+# The paper's primary contribution: the Rich Trigger (ECA) service.
+from .actions import ACTIONS, PYFUNCS, action, pyfunc, register_action, register_pyfunc
+from .autoscaler import KedaAutoscaler
+from .conditions import CONDITIONS, condition, register_condition
+from .context import TriggerContext
+from .events import (
+    TYPE_FAILURE,
+    TYPE_INIT,
+    TYPE_TERMINATION,
+    TYPE_TIMEOUT,
+    TYPE_WORKFLOW_END,
+    CloudEvent,
+    failure_event,
+    termination_event,
+)
+from .eventstore import EventStore, FileEventStore, MemoryEventStore
+from .functions import FunctionBackend, TimerSource
+from .service import Triggerflow
+from .statestore import FileStateStore, MemoryStateStore, StateStore
+from .triggers import Trigger, make_trigger, new_trigger_id
+from .worker import TFWorker
+
+__all__ = [
+    "ACTIONS", "CONDITIONS", "PYFUNCS", "CloudEvent", "EventStore",
+    "FileEventStore", "FileStateStore", "FunctionBackend", "KedaAutoscaler",
+    "MemoryEventStore", "MemoryStateStore", "StateStore", "TFWorker",
+    "TimerSource", "Trigger", "TriggerContext", "Triggerflow", "TYPE_FAILURE",
+    "TYPE_INIT", "TYPE_TERMINATION", "TYPE_TIMEOUT", "TYPE_WORKFLOW_END",
+    "action", "condition", "failure_event", "make_trigger", "new_trigger_id",
+    "pyfunc", "register_action", "register_condition", "register_pyfunc",
+    "termination_event",
+]

@@ -1,0 +1,125 @@
+"""Action registry (paper §3.2: Actions are user-defined computations fired
+when a Condition matches).
+
+An action is ``fn(context, event, params) -> None``.  Like conditions, actions
+are referenced by registry name + JSON params.  The generic ``pyfunc`` action
+dispatches to runtime-registered callables — that is the extension point the
+DAG / state-machine / workflow-as-code orchestrators build on.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+from .events import CloudEvent, termination_event
+
+ActionFn = Callable[[Any, CloudEvent, Dict[str, Any]], None]
+
+ACTIONS: Dict[str, ActionFn] = {}
+# Runtime-registered python callables used by the ``pyfunc`` action.
+PYFUNCS: Dict[str, Callable] = {}
+
+
+def action(name: str) -> Callable[[ActionFn], ActionFn]:
+    def deco(fn: ActionFn) -> ActionFn:
+        ACTIONS[name] = fn
+        return fn
+
+    return deco
+
+
+def register_action(name: str, fn: ActionFn) -> None:
+    ACTIONS[name] = fn
+
+
+def register_pyfunc(name: str, fn: Callable) -> None:
+    PYFUNCS[name] = fn
+
+
+def pyfunc(name: str) -> Callable[[Callable], Callable]:
+    def deco(fn: Callable) -> Callable:
+        PYFUNCS[name] = fn
+        return fn
+
+    return deco
+
+
+@action("noop")
+def _noop(ctx, event, params) -> None:
+    return None
+
+
+@action("invoke")
+def _invoke(ctx, event, params) -> None:
+    """Asynchronously invoke a backend 'serverless function'.
+
+    Input chaining (§5.2): if ``pass_result`` is set, the previous state's
+    output (the activating event's result) becomes this function's input.
+    """
+    args = params.get("args")
+    if params.get("pass_result") and isinstance(event.data, dict):
+        args = event.data.get("result")
+    ctx.invoke(params["fn"], args, params["subject"], delay=params.get("delay", 0.0))
+
+
+@action("map_invoke")
+def _map_invoke(ctx, event, params) -> None:
+    """Fan out N invocations and *introspect* the downstream join trigger to
+    set its expected aggregation count (§5.1: dynamic condition update —
+    the map width may be unknown until execution)."""
+    items = params.get("items")
+    if items is None and isinstance(event.data, dict):
+        items = event.data.get("result")
+    items = list(items if items is not None else [])
+    join_trigger = params.get("join_trigger")
+    if join_trigger:
+        ctx.get_trigger_context(join_trigger)["expected"] = len(items)
+    for it in items:
+        ctx.invoke(params["fn"], it, params["subject"], delay=params.get("delay", 0.0))
+
+
+@action("produce")
+def _produce(ctx, event, params) -> None:
+    """Produce a termination event into the worker's internal sink (§5.2)."""
+    result = params.get("result")
+    if params.get("pass_result") and isinstance(event.data, dict):
+        result = event.data.get("result")
+    ctx.produce(termination_event(params["subject"], result=result))
+
+
+@action("workflow_end")
+def _workflow_end(ctx, event, params) -> None:
+    result = params.get("result")
+    if params.get("pass_result") and isinstance(event.data, dict):
+        result = event.data.get("result")
+    status = params.get("status", "succeeded")
+    ctx.workflow_result({"status": status, "result": result})
+
+
+@action("chain")
+def _chain(ctx, event, params) -> None:
+    for spec in params.get("actions", []):
+        run_action(spec, ctx, event)
+
+
+@action("intercepted")
+def _intercepted(ctx, event, params) -> None:
+    """Dynamic trigger interception (Def. 5): run the interceptor, then the
+    original action unless the interceptor cancelled it via context."""
+    run_action(params["interceptor"], ctx, event)
+    if not ctx.get("cancel_inner", False):
+        run_action(params["inner"], ctx, event)
+
+
+@action("pyfunc")
+def _pyfunc(ctx, event, params) -> None:
+    PYFUNCS[params["func"]](ctx, event, params)
+
+
+def run_action(spec: Dict[str, Any], ctx, event: CloudEvent) -> None:
+    ACTIONS[spec["name"]](ctx, event, spec)
+
+
+def run_condition(spec: Dict[str, Any], ctx, event: CloudEvent) -> bool:
+    from .conditions import CONDITIONS
+
+    return CONDITIONS[spec["name"]](ctx, event, spec)

@@ -1,0 +1,182 @@
+"""Condition registry (paper §3.2: Conditions are user-defined active rules).
+
+Conditions are referenced by name + JSON params so triggers stay serializable.
+A condition is ``fn(context, event, params) -> bool``; it may mutate the
+context (stateful composite event detection: counters, aggregation) and MUST
+be idempotent w.r.t. re-delivered events (§3.4) — the built-in aggregators
+offer an ``exactly_once`` param that dedups by event id inside the context.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict
+
+from .events import TYPE_FAILURE, TYPE_TIMEOUT, CloudEvent
+
+ConditionFn = Callable[[Any, CloudEvent, Dict[str, Any]], bool]
+
+CONDITIONS: Dict[str, ConditionFn] = {}
+
+
+def condition(name: str) -> Callable[[ConditionFn], ConditionFn]:
+    def deco(fn: ConditionFn) -> ConditionFn:
+        CONDITIONS[name] = fn
+        return fn
+
+    return deco
+
+
+def register_condition(name: str, fn: ConditionFn) -> None:
+    """Third-party extension point (paper: extensible at all levels)."""
+    CONDITIONS[name] = fn
+
+
+def _result_of(event: CloudEvent) -> Any:
+    if isinstance(event.data, dict) and "result" in event.data:
+        return event.data["result"]
+    return event.data
+
+
+@condition("true")
+def _true(ctx, event, params) -> bool:
+    return True
+
+
+@condition("false")
+def _false(ctx, event, params) -> bool:
+    return False
+
+
+def _dedup(ctx, event, params) -> bool:
+    """Returns True if this event was already counted (skip it)."""
+    if not params.get("exactly_once", False):
+        return False
+    seen = ctx.get("seen_ids") or []
+    if event.id in seen:
+        return True
+    seen.append(event.id)
+    ctx["seen_ids"] = seen
+    return False
+
+
+@condition("counter")
+def _counter(ctx, event, params) -> bool:
+    """Composite-event aggregation: fire after ``expected`` activations.
+
+    ``expected`` is read from the context first so an upstream Map action can
+    set it dynamically via introspection (§5.1); falls back to params.
+    Aggregates each event's result into ``ctx['results']`` unless
+    ``aggregate=False`` (pure join counters for the Table 1 load test).
+    """
+    if event.type == TYPE_FAILURE:
+        # failures never satisfy a join; a companion failure trigger handles them
+        ctx["failures"] = ctx.get("failures", 0) + 1
+        return False
+    if _dedup(ctx, event, params):
+        return ctx.get("count", 0) >= int(ctx.get("expected", params.get("expected", 1)))
+    cnt = ctx.get("count", 0) + 1
+    ctx["count"] = cnt
+    if params.get("aggregate", True):
+        results = ctx.get("results") or []
+        results.append(_result_of(event))
+        ctx["results"] = results
+    expected = int(ctx.get("expected", params.get("expected", 1)))
+    if cnt >= expected:
+        # snapshot for the action, then optionally reset so persistent join
+        # triggers can be re-fired (ASL loops, FL rounds)
+        ctx["fired_results"] = ctx.get("results") or []
+        if params.get("reset_on_fire"):
+            ctx["count"] = 0
+            ctx["results"] = []
+            if params.get("exactly_once"):
+                ctx["seen_ids"] = []
+        return True
+    return False
+
+
+@condition("threshold_join")
+def _threshold_join(ctx, event, params) -> bool:
+    """Federated-learning style aggregation (§5.4): fire when ``fraction`` of
+    the expected events arrived, or immediately on a timeout event — so
+    stragglers and failed clients cannot hang the workflow."""
+    if event.type == TYPE_TIMEOUT:
+        ctx["timed_out"] = True
+        return ctx.get("count", 0) >= int(params.get("min_events", 1))
+    if event.type == TYPE_FAILURE:
+        ctx["failures"] = ctx.get("failures", 0) + 1
+        return False
+    if _dedup(ctx, event, params):
+        return False
+    cnt = ctx.get("count", 0) + 1
+    ctx["count"] = cnt
+    results = ctx.get("results") or []
+    results.append(_result_of(event))
+    ctx["results"] = results
+    expected = int(ctx.get("expected", params.get("expected", 1)))
+    frac = float(params.get("fraction", 1.0))
+    return cnt >= max(1, math.ceil(expected * frac))
+
+
+_OPS = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "is_present": lambda a, b: a is not None,
+    "str_eq": lambda a, b: str(a) == str(b),
+    "bool_eq": lambda a, b: bool(a) == bool(b),
+}
+
+
+def _extract(data: Any, var: str) -> Any:
+    """ASL-ish '$.a.b' JSON-path extraction."""
+    cur = data
+    for part in var.lstrip("$.").split("."):
+        if not part:
+            continue
+        if isinstance(cur, dict):
+            cur = cur.get(part)
+        else:
+            return None
+    return cur
+
+
+@condition("rules")
+def _rules(ctx, event, params) -> bool:
+    """ASF Choice-state rules (§5.2): first matching rule decides the next
+    state, recorded in ``ctx['matched_next']`` for the action to read."""
+    data = event.data if isinstance(event.data, dict) else {"result": event.data}
+    for rule in params.get("rules", []):
+        val = _extract(data, rule["var"])
+        try:
+            ok = _OPS[rule["op"]](val, rule.get("value"))
+        except TypeError:
+            ok = False
+        if ok:
+            ctx["matched_next"] = rule["next"]
+            return True
+    if params.get("default"):
+        ctx["matched_next"] = params["default"]
+        return True
+    return False
+
+
+@condition("event_type")
+def _event_type(ctx, event, params) -> bool:
+    return event.type == params.get("type", "")
+
+
+@condition("python")
+def _python(ctx, event, params) -> bool:
+    """Escape hatch for programmable conditions: a restricted expression over
+    ``event`` / ``context`` (extensibility demo; used in tests)."""
+    expr = params.get("expr", "True")
+    return bool(
+        eval(  # noqa: S307 - deliberate, restricted namespace
+            expr,
+            {"__builtins__": {"len": len, "min": min, "max": max, "sum": sum}},
+            {"event": event, "context": ctx, "data": event.data},
+        )
+    )

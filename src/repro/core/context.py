@@ -1,0 +1,95 @@
+"""Per-trigger fault-tolerant Context with computational reflection (§3.2).
+
+The Context is a key-value structure holding trigger state (join counters,
+aggregated results, ...).  It also exposes the *introspection/interception*
+surface the paper describes:
+
+* read/modify the context of *other* triggers (e.g. a Map action sets the
+  expected join count on the downstream aggregation trigger, §5.1/§5.2),
+* dynamically add/enable/disable triggers (§5.3 dynamic triggers),
+* produce events into the worker's internal event sink so that condition/
+  action code can fire downstream triggers (§5.2 sub-state-machine
+  termination events),
+* access the committed event log for event-sourcing replay (§5.3).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Dict, List, Optional
+
+from .events import CloudEvent
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .worker import TFWorker
+
+
+class TriggerContext(dict):
+    """dict subclass: the JSON-serializable payload *is* the dict content."""
+
+    def __init__(self, data: Dict[str, Any], worker: "TFWorker", trigger_id: str):
+        super().__init__(data)
+        self._worker = worker
+        self.trigger_id = trigger_id
+        self.workflow = worker.workflow
+        self.dirty = False
+
+    # -- mutation tracking (what the checkpoint persists) ---------------------
+    def __setitem__(self, k, v) -> None:
+        self.dirty = True
+        super().__setitem__(k, v)
+
+    def update(self, *a, **kw) -> None:  # type: ignore[override]
+        self.dirty = True
+        super().update(*a, **kw)
+
+    def setdefault(self, k, default=None):  # type: ignore[override]
+        if k not in self:
+            self.dirty = True
+        return super().setdefault(k, default)
+
+    def pop(self, *a):  # type: ignore[override]
+        self.dirty = True
+        return super().pop(*a)
+
+    # -- introspection / reflection (paper Def. 5) ----------------------------
+    def get_trigger_context(self, trigger_id: str) -> "TriggerContext":
+        return self._worker.context_of(trigger_id)
+
+    def add_trigger(self, trigger) -> str:
+        """Dynamically register a trigger from inside condition/action code."""
+        return self._worker.add_dynamic_trigger(trigger)
+
+    def enable_trigger(self, trigger_id: str) -> None:
+        self._worker.set_trigger_enabled(trigger_id, True)
+
+    def disable_trigger(self, trigger_id: str) -> None:
+        self._worker.set_trigger_enabled(trigger_id, False)
+
+    def intercept_trigger(self, trigger_id: str, action_spec: Dict[str, Any]) -> None:
+        self._worker.intercept(trigger_id, action_spec)
+
+    # -- event production ------------------------------------------------------
+    def produce(self, event: CloudEvent) -> None:
+        """Emit into the worker's internal sink (processed later this batch)."""
+        self._worker.sink(event)
+
+    def invoke(self, fn_name: str, args: Any, subject: str, **kw) -> None:
+        """Asynchronously invoke a registered 'serverless function' (§3.2 Action)."""
+        self._worker.backend.invoke(self.workflow, fn_name, args, subject, **kw)
+
+    def timeout(self, subject: str, delay: float, data: Any = None) -> None:
+        """Schedule a timeout event via the timer event source (§5.4)."""
+        from .events import TYPE_TIMEOUT
+
+        self._worker.timers.after(
+            self.workflow, delay, CloudEvent(subject=subject, type=TYPE_TIMEOUT, data=data))
+
+    # -- event sourcing --------------------------------------------------------
+    def committed_events(self) -> List[CloudEvent]:
+        return self._worker.event_store.committed_events(self.workflow)
+
+    def local_events(self) -> List[CloudEvent]:
+        """Events retained in worker memory (native-scheduler fast replay, §6.3.2)."""
+        return self._worker.event_log
+
+    def workflow_result(self, value: Any) -> None:
+        self._worker.set_result(value)

@@ -1,0 +1,85 @@
+"""CloudEvents 1.0 subset used by Triggerflow.
+
+The paper (§3.2) matches events to triggers via the ``subject`` field and
+describes the event kind via ``type``.  Termination/failure events use
+``type`` to notify success (+result) or failure (+error info).  Every event
+carries a unique ``id`` used for at-least-once dedup (§3.4).
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+SPECVERSION = "1.0"
+
+# Well-known event types (paper §3.2 / §5).
+TYPE_INIT = "event.triggerflow.init"
+TYPE_TERMINATION = "event.triggerflow.termination.success"
+TYPE_FAILURE = "event.triggerflow.termination.failure"
+TYPE_TIMEOUT = "event.triggerflow.timeout"
+TYPE_WORKFLOW_END = "event.triggerflow.workflow.end"
+
+_counter = itertools.count()
+
+
+def _new_id() -> str:
+    # uuid4 is comparatively expensive; the paper only requires uniqueness.
+    return f"{uuid.getnode():x}-{next(_counter):x}"
+
+
+@dataclass(frozen=True)
+class CloudEvent:
+    """Immutable CloudEvent.  ``subject`` routes to triggers, ``type`` filters."""
+
+    subject: str
+    type: str = TYPE_TERMINATION
+    data: Any = None
+    source: str = "triggerflow"
+    id: str = field(default_factory=_new_id)
+    time: Optional[float] = None
+    specversion: str = SPECVERSION
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "specversion": self.specversion,
+            "id": self.id,
+            "source": self.source,
+            "subject": self.subject,
+            "type": self.type,
+            "time": self.time,
+            "data": self.data,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), separators=(",", ":"))
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "CloudEvent":
+        return CloudEvent(
+            subject=d["subject"],
+            type=d.get("type", TYPE_TERMINATION),
+            data=d.get("data"),
+            source=d.get("source", "triggerflow"),
+            id=d["id"],
+            time=d.get("time"),
+            specversion=d.get("specversion", SPECVERSION),
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "CloudEvent":
+        return CloudEvent.from_dict(json.loads(s))
+
+
+def termination_event(subject: str, result: Any = None, **extra: Any) -> CloudEvent:
+    data = {"result": result}
+    data.update(extra)
+    return CloudEvent(subject=subject, type=TYPE_TERMINATION, data=data)
+
+
+def failure_event(subject: str, error: str, **extra: Any) -> CloudEvent:
+    data = {"error": error}
+    data.update(extra)
+    return CloudEvent(subject=subject, type=TYPE_FAILURE, data=data)

@@ -1,0 +1,353 @@
+"""At-least-once event stores + Dead Letter Queue (paper §3.4, §4.2).
+
+The contract every store implements (mirroring Kafka/Redis-Streams usage in
+the paper):
+
+* ``publish`` appends events to a per-workflow stream.
+* ``consume`` returns *uncommitted* events in arrival order.  Events may be
+  re-delivered after a crash/restart (at-least-once) — consumers must dedup
+  by event id and tolerate reordering.
+* ``commit`` marks events processed; committed events are never re-delivered.
+* A per-workflow DLQ holds events whose trigger is currently disabled
+  (out-of-order sequences, §3.4); they are re-enqueued on ``redrive``.
+
+Two backends: in-memory (fast path, Table 1 load tests) and a durable
+append-only JSONL file store (crash/restart fault tolerance, Fig 13).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from collections import deque
+from typing import Dict, Iterable, List, Optional
+
+from .events import CloudEvent
+
+
+class EventStore:
+    """Interface."""
+
+    def create_stream(self, workflow: str) -> None:
+        raise NotImplementedError
+
+    def publish(self, workflow: str, event: CloudEvent) -> None:
+        raise NotImplementedError
+
+    def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
+        for e in events:
+            self.publish(workflow, e)
+
+    def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
+        """Return up to ``max_events`` uncommitted events (without removing them)."""
+        raise NotImplementedError
+
+    def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
+        raise NotImplementedError
+
+    def is_committed(self, workflow: str, event_id: str) -> bool:
+        raise NotImplementedError
+
+    def lag(self, workflow: str) -> int:
+        """Number of uncommitted events (the KEDA scaling metric)."""
+        raise NotImplementedError
+
+    def to_dlq(self, workflow: str, event: CloudEvent) -> None:
+        raise NotImplementedError
+
+    def redrive(self, workflow: str) -> int:
+        """Move all DLQ events back into the stream.  Returns count."""
+        raise NotImplementedError
+
+    def dlq_size(self, workflow: str) -> int:
+        raise NotImplementedError
+
+    def workflows(self) -> List[str]:
+        raise NotImplementedError
+
+    def committed_events(self, workflow: str) -> List[CloudEvent]:
+        """All committed events in commit order (event-sourcing replay, §5.3)."""
+        raise NotImplementedError
+
+
+class MemoryEventStore(EventStore):
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._pending: Dict[str, deque] = {}
+        self._committed: Dict[str, dict] = {}  # id -> CloudEvent, insertion ordered
+        self._dlq: Dict[str, deque] = {}
+
+    def create_stream(self, workflow: str) -> None:
+        with self._lock:
+            self._pending.setdefault(workflow, deque())
+            self._committed.setdefault(workflow, {})
+            self._dlq.setdefault(workflow, deque())
+
+    def publish(self, workflow: str, event: CloudEvent) -> None:
+        with self._lock:
+            self._pending.setdefault(workflow, deque()).append(event)
+
+    def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
+        with self._lock:
+            self._pending.setdefault(workflow, deque()).extend(events)
+
+    def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
+        with self._lock:
+            q = self._pending.get(workflow)
+            if not q:
+                return []
+            n = min(len(q), max_events)
+            return [q[i] for i in range(n)]
+
+    def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
+        ids = set(event_ids)
+        if not ids:
+            return
+        with self._lock:
+            q = self._pending.get(workflow, deque())
+            committed = self._committed.setdefault(workflow, {})
+            keep = deque()
+            for e in q:
+                if e.id in ids:
+                    committed[e.id] = e
+                else:
+                    keep.append(e)
+            self._pending[workflow] = keep
+
+    def is_committed(self, workflow: str, event_id: str) -> bool:
+        with self._lock:
+            return event_id in self._committed.get(workflow, {})
+
+    def lag(self, workflow: str) -> int:
+        with self._lock:
+            q = self._pending.get(workflow)
+            return len(q) if q else 0
+
+    def to_dlq(self, workflow: str, event: CloudEvent) -> None:
+        with self._lock:
+            self._dlq.setdefault(workflow, deque()).append(event)
+            q = self._pending.get(workflow)
+            if q:
+                self._pending[workflow] = deque(e for e in q if e.id != event.id)
+
+    def redrive(self, workflow: str) -> int:
+        with self._lock:
+            dlq = self._dlq.get(workflow)
+            if not dlq:
+                return 0
+            n = len(dlq)
+            self._pending.setdefault(workflow, deque()).extend(dlq)
+            dlq.clear()
+            return n
+
+    def dlq_size(self, workflow: str) -> int:
+        with self._lock:
+            return len(self._dlq.get(workflow, ()))
+
+    def workflows(self) -> List[str]:
+        with self._lock:
+            return list(self._pending.keys())
+
+    def committed_events(self, workflow: str) -> List[CloudEvent]:
+        with self._lock:
+            return list(self._committed.get(workflow, {}).values())
+
+
+class FileEventStore(EventStore):
+    """Durable append-only JSONL log per workflow + committed-id set.
+
+    Layout: ``<root>/<workflow>.log`` (one JSON event per line, append-only),
+    ``<root>/<workflow>.committed`` (one event id per line, append-only),
+    ``<root>/<workflow>.dlq`` (JSONL).  A restarted process reconstructs the
+    uncommitted set = log - committed, which is exactly the paper's
+    "the event broker will send again uncommitted events" recovery semantics.
+    """
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.RLock()
+        # In-memory mirrors for speed; files are the source of truth.
+        self._pending: Dict[str, deque] = {}
+        self._committed_ids: Dict[str, set] = {}
+        self._committed_order: Dict[str, List[CloudEvent]] = {}
+        self._dlq: Dict[str, deque] = {}
+        self._offsets: Dict[str, int] = {}  # log bytes already mirrored
+        for fn in os.listdir(root):
+            if fn.endswith(".log"):
+                self._load(fn[: -len(".log")])
+
+    def refresh(self, workflow: str) -> int:
+        """Pick up events appended by *other* store instances sharing the log
+        (e.g. a crashed worker's still-running tasks publishing terminations).
+        Returns the number of new events mirrored."""
+        log_p, _, _ = self._paths(workflow)
+        if not os.path.exists(log_p):
+            return 0
+        with self._lock:
+            off = self._offsets.get(workflow, 0)
+            size = os.path.getsize(log_p)
+            if size <= off:
+                return 0
+            with open(log_p) as f:
+                f.seek(off)
+                chunk = f.read()
+            # only consume whole lines (a concurrent writer may be mid-append)
+            last_nl = chunk.rfind("\n")
+            if last_nl < 0:
+                return 0
+            self._offsets[workflow] = off + last_nl + 1
+            committed = self._committed_ids.get(workflow, set())
+            known = {e.id for e in self._pending.get(workflow, ())}
+            known |= {e.id for e in self._dlq.get(workflow, ())}
+            n = 0
+            for line in chunk[:last_nl].splitlines():
+                line = line.strip()
+                if not line:
+                    continue
+                ev = CloudEvent.from_json(line)
+                if ev.id in committed or ev.id in known:
+                    continue
+                self._pending.setdefault(workflow, deque()).append(ev)
+                n += 1
+            return n
+
+    # -- persistence helpers -------------------------------------------------
+    def _paths(self, wf: str):
+        safe = wf.replace("/", "_")
+        return (
+            os.path.join(self.root, f"{safe}.log"),
+            os.path.join(self.root, f"{safe}.committed"),
+            os.path.join(self.root, f"{safe}.dlq"),
+        )
+
+    def _load(self, wf: str) -> None:
+        log_p, com_p, dlq_p = self._paths(wf)
+        events: List[CloudEvent] = []
+        if os.path.exists(log_p):
+            with open(log_p) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        events.append(CloudEvent.from_json(line))
+        committed: set = set()
+        if os.path.exists(com_p):
+            with open(com_p) as f:
+                committed = {line.strip() for line in f if line.strip()}
+        by_id = {e.id: e for e in events}
+        self._committed_ids[wf] = committed
+        self._committed_order[wf] = [by_id[i] for i in committed if i in by_id]
+        dlq: deque = deque()
+        if os.path.exists(dlq_p):
+            with open(dlq_p) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        dlq.append(CloudEvent.from_json(line))
+        self._dlq[wf] = dlq
+        dlq_ids = {e.id for e in dlq}
+        self._pending[wf] = deque(
+            e for e in events if e.id not in committed and e.id not in dlq_ids
+        )
+        self._offsets[wf] = os.path.getsize(log_p) if os.path.exists(log_p) else 0
+
+    def _append(self, path: str, lines: List[str]) -> None:
+        with open(path, "a") as f:
+            f.write("\n".join(lines) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    # -- EventStore ----------------------------------------------------------
+    def create_stream(self, workflow: str) -> None:
+        with self._lock:
+            if workflow not in self._pending:
+                self._pending[workflow] = deque()
+                self._committed_ids[workflow] = set()
+                self._committed_order[workflow] = []
+                self._dlq[workflow] = deque()
+                log_p, _, _ = self._paths(workflow)
+                open(log_p, "a").close()
+
+    def publish(self, workflow: str, event: CloudEvent) -> None:
+        self.publish_batch(workflow, [event])
+
+    def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
+        events = list(events)
+        if not events:
+            return
+        with self._lock:
+            self.create_stream(workflow)
+            self.refresh(workflow)  # mirror foreign appends before ours
+            log_p, _, _ = self._paths(workflow)
+            self._append(log_p, [e.to_json() for e in events])
+            self._offsets[workflow] = os.path.getsize(log_p)
+            self._pending[workflow].extend(events)
+
+    def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
+        with self._lock:
+            self.refresh(workflow)
+            q = self._pending.get(workflow)
+            if not q:
+                return []
+            n = min(len(q), max_events)
+            return [q[i] for i in range(n)]
+
+    def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
+        ids = set(event_ids)
+        if not ids:
+            return
+        with self._lock:
+            _, com_p, _ = self._paths(workflow)
+            self._append(com_p, sorted(ids))
+            self._committed_ids.setdefault(workflow, set()).update(ids)
+            keep = deque()
+            for e in self._pending.get(workflow, deque()):
+                if e.id in ids:
+                    self._committed_order.setdefault(workflow, []).append(e)
+                else:
+                    keep.append(e)
+            self._pending[workflow] = keep
+
+    def is_committed(self, workflow: str, event_id: str) -> bool:
+        with self._lock:
+            return event_id in self._committed_ids.get(workflow, set())
+
+    def lag(self, workflow: str) -> int:
+        with self._lock:
+            self.refresh(workflow)
+            q = self._pending.get(workflow)
+            return len(q) if q else 0
+
+    def to_dlq(self, workflow: str, event: CloudEvent) -> None:
+        with self._lock:
+            _, _, dlq_p = self._paths(workflow)
+            self._append(dlq_p, [event.to_json()])
+            self._dlq.setdefault(workflow, deque()).append(event)
+            q = self._pending.get(workflow)
+            if q:
+                self._pending[workflow] = deque(e for e in q if e.id != event.id)
+
+    def redrive(self, workflow: str) -> int:
+        with self._lock:
+            dlq = self._dlq.get(workflow)
+            if not dlq:
+                return 0
+            n = len(dlq)
+            self._pending.setdefault(workflow, deque()).extend(dlq)
+            dlq.clear()
+            _, _, dlq_p = self._paths(workflow)
+            if os.path.exists(dlq_p):
+                os.remove(dlq_p)
+            return n
+
+    def dlq_size(self, workflow: str) -> int:
+        with self._lock:
+            return len(self._dlq.get(workflow, ()))
+
+    def workflows(self) -> List[str]:
+        with self._lock:
+            return list(self._pending.keys())
+
+    def committed_events(self, workflow: str) -> List[CloudEvent]:
+        with self._lock:
+            return list(self._committed_order.get(workflow, []))

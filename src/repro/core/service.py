@@ -1,0 +1,147 @@
+"""Triggerflow service facade (paper Fig. 1 API):
+
+``create_workflow`` / ``add_trigger`` / ``add_event_source`` / ``get_state``
+plus ``publish`` and worker lifecycle management.  The service wires together
+the event store, the state store (database), the function backend, the timer
+source and the controller/autoscaler.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Union
+
+from .events import TYPE_INIT, CloudEvent
+from .eventstore import EventStore, MemoryEventStore
+from .functions import FunctionBackend, TimerSource
+from .statestore import MemoryStateStore, StateStore
+from .triggers import Trigger
+from .worker import TFWorker
+
+
+class Triggerflow:
+    def __init__(
+        self,
+        event_store: Optional[EventStore] = None,
+        state_store: Optional[StateStore] = None,
+        backend: Optional[FunctionBackend] = None,
+        inline_functions: bool = False,
+        commit_policy: str = "on_fire",
+    ) -> None:
+        self.event_store = event_store or MemoryEventStore()
+        self.state_store = state_store or MemoryStateStore()
+        self.backend = backend or FunctionBackend(self.event_store, inline=inline_functions)
+        self.timers = TimerSource(self.event_store)
+        self.commit_policy = commit_policy
+        self._workers: Dict[str, TFWorker] = {}
+        self._threads: Dict[str, threading.Thread] = {}
+        self._lock = threading.RLock()
+
+    # -- Fig. 1 API -----------------------------------------------------------
+    def create_workflow(self, workflow: str, meta: Optional[Dict[str, Any]] = None) -> None:
+        self.event_store.create_stream(workflow)
+        m = {"status": "created"}
+        m.update(meta or {})
+        self.state_store.put_workflow(workflow, m)
+
+    def add_trigger(self, workflow: str, trigger: Union[Trigger, Iterable[Trigger]]) -> List[str]:
+        triggers = [trigger] if isinstance(trigger, Trigger) else list(trigger)
+        worker = self._workers.get(workflow)
+        ids = []
+        for trg in triggers:
+            if worker is not None:
+                ids.append(worker.add_trigger(trg))
+            else:
+                self.state_store.put_trigger(workflow, trg.trigger_id, trg.to_dict())
+                ids.append(trg.trigger_id)
+        return ids
+
+    def add_event_source(self, workflow: str, source) -> None:
+        """Attach an external event source: anything with ``start(publish_fn)``."""
+        source.start(lambda ev: self.event_store.publish(workflow, ev))
+
+    def get_state(self, workflow: str) -> Optional[Dict[str, Any]]:
+        return self.state_store.get_workflow(workflow)
+
+    def get_trigger_context(self, workflow: str, trigger_id: str) -> Dict[str, Any]:
+        worker = self._workers.get(workflow)
+        if worker is not None:
+            return dict(worker.context_of(trigger_id))
+        return self.state_store.get_contexts(workflow).get(trigger_id, {})
+
+    # -- events ------------------------------------------------------------------
+    def publish(self, workflow: str, event: CloudEvent) -> None:
+        self.event_store.publish(workflow, event)
+
+    def init_workflow(self, workflow: str, data: Any = None, subject: str = "$init") -> None:
+        self.publish(workflow, CloudEvent(subject=subject, type=TYPE_INIT, data=data))
+
+    def timeout(self, workflow: str, subject: str, delay: float) -> None:
+        from .events import TYPE_TIMEOUT
+
+        self.timers.after(workflow, delay, CloudEvent(subject=subject, type=TYPE_TIMEOUT))
+
+    # -- interception (Def. 5) ------------------------------------------------------
+    def intercept(
+        self,
+        workflow: str,
+        interceptor_action: Dict[str, Any],
+        trigger_id: Optional[str] = None,
+        condition_name: Optional[str] = None,
+    ) -> None:
+        worker = self.worker(workflow)
+        if trigger_id is not None:
+            worker.intercept(trigger_id, interceptor_action)
+        elif condition_name is not None:
+            worker.intercept_by_condition(condition_name, interceptor_action)
+        else:
+            raise ValueError("need trigger_id or condition_name")
+
+    # -- worker lifecycle -----------------------------------------------------------
+    def worker(self, workflow: str) -> TFWorker:
+        with self._lock:
+            w = self._workers.get(workflow)
+            if w is None:
+                w = TFWorker(
+                    workflow,
+                    self.event_store,
+                    self.state_store,
+                    self.backend,
+                    commit_policy=self.commit_policy,
+                    timers=self.timers,
+                )
+                self._workers[workflow] = w
+            return w
+
+    def evict_worker(self, workflow: str) -> None:
+        """Drop the in-memory worker (simulates a pod being reclaimed/crashed);
+        a later ``worker()`` call reconstructs state from the stores."""
+        with self._lock:
+            w = self._workers.pop(workflow, None)
+            if w is not None:
+                w.stop()
+
+    def start_worker(self, workflow: str, idle_timeout: Optional[float] = None) -> threading.Thread:
+        w = self.worker(workflow)
+        th = threading.Thread(
+            target=w.run_forever, kwargs={"idle_timeout": idle_timeout},
+            name=f"tf-worker-{workflow}", daemon=True,
+        )
+        with self._lock:
+            self._threads[workflow] = th
+        th.start()
+        return th
+
+    def worker_alive(self, workflow: str) -> bool:
+        th = self._threads.get(workflow)
+        return th is not None and th.is_alive()
+
+    def run_until_complete(self, workflow: str, timeout: float = 60.0) -> Any:
+        return self.worker(workflow).run_until_complete(timeout=timeout)
+
+    def shutdown(self) -> None:
+        for w in self._workers.values():
+            w.stop()
+        for th in self._threads.values():
+            th.join(timeout=2.0)
+        self.timers.cancel_all()
+        self.backend.shutdown()

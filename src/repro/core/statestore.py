@@ -1,0 +1,160 @@
+"""Workflow/trigger/context database (paper §4: "A Database, responsible for
+storing workflow information, such as triggers, context, etc.").
+
+Checkpointing contract (§3.4): each time a trigger fires, the contexts of all
+activated triggers are persisted *before* the consumed events are committed to
+the event store.  A restarted worker therefore reloads trigger definitions and
+the last checkpointed contexts, and replays uncommitted events on top.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, List, Optional
+
+
+class StateStore:
+    def put_workflow(self, workflow: str, meta: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def get_workflow(self, workflow: str) -> Optional[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def delete_workflow(self, workflow: str) -> None:
+        raise NotImplementedError
+
+    def workflows(self) -> List[str]:
+        raise NotImplementedError
+
+    def put_trigger(self, workflow: str, trigger_id: str, spec: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def get_triggers(self, workflow: str) -> Dict[str, Dict[str, Any]]:
+        raise NotImplementedError
+
+    def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
+        """Atomically persist a batch of trigger contexts (the checkpoint)."""
+        raise NotImplementedError
+
+    def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
+        raise NotImplementedError
+
+
+class MemoryStateStore(StateStore):
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._wf: Dict[str, Dict[str, Any]] = {}
+        self._triggers: Dict[str, Dict[str, Dict[str, Any]]] = {}
+        self._contexts: Dict[str, Dict[str, Dict[str, Any]]] = {}
+
+    def put_workflow(self, workflow: str, meta: Dict[str, Any]) -> None:
+        with self._lock:
+            self._wf[workflow] = dict(meta)
+            self._triggers.setdefault(workflow, {})
+            self._contexts.setdefault(workflow, {})
+
+    def get_workflow(self, workflow: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            return self._wf.get(workflow)
+
+    def delete_workflow(self, workflow: str) -> None:
+        with self._lock:
+            self._wf.pop(workflow, None)
+            self._triggers.pop(workflow, None)
+            self._contexts.pop(workflow, None)
+
+    def workflows(self) -> List[str]:
+        with self._lock:
+            return list(self._wf.keys())
+
+    def put_trigger(self, workflow: str, trigger_id: str, spec: Dict[str, Any]) -> None:
+        with self._lock:
+            self._triggers.setdefault(workflow, {})[trigger_id] = spec
+
+    def get_triggers(self, workflow: str) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._triggers.get(workflow, {}).items()}
+
+    def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
+        with self._lock:
+            store = self._contexts.setdefault(workflow, {})
+            for tid, ctx in contexts.items():
+                store[tid] = json.loads(json.dumps(ctx))  # deep copy, JSON-safe
+
+    def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._contexts.get(workflow, {}).items()}
+
+
+class FileStateStore(StateStore):
+    """Durable JSON-file state store: ``<root>/<wf>/{meta,triggers,contexts}.json``."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.RLock()
+
+    def _dir(self, wf: str) -> str:
+        d = os.path.join(self.root, wf.replace("/", "_"))
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    def _write(self, path: str, obj: Any) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(obj, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic
+
+    def _read(self, path: str, default: Any) -> Any:
+        if not os.path.exists(path):
+            return default
+        with open(path) as f:
+            return json.load(f)
+
+    def put_workflow(self, workflow: str, meta: Dict[str, Any]) -> None:
+        with self._lock:
+            self._write(os.path.join(self._dir(workflow), "meta.json"), meta)
+
+    def get_workflow(self, workflow: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            p = os.path.join(self.root, workflow.replace("/", "_"), "meta.json")
+            return self._read(p, None)
+
+    def delete_workflow(self, workflow: str) -> None:
+        with self._lock:
+            d = os.path.join(self.root, workflow.replace("/", "_"))
+            if os.path.isdir(d):
+                for fn in os.listdir(d):
+                    os.remove(os.path.join(d, fn))
+                os.rmdir(d)
+
+    def workflows(self) -> List[str]:
+        with self._lock:
+            return [d for d in os.listdir(self.root) if os.path.isdir(os.path.join(self.root, d))]
+
+    def put_trigger(self, workflow: str, trigger_id: str, spec: Dict[str, Any]) -> None:
+        with self._lock:
+            p = os.path.join(self._dir(workflow), "triggers.json")
+            triggers = self._read(p, {})
+            triggers[trigger_id] = spec
+            self._write(p, triggers)
+
+    def get_triggers(self, workflow: str) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            p = os.path.join(self.root, workflow.replace("/", "_"), "triggers.json")
+            return self._read(p, {})
+
+    def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
+        with self._lock:
+            p = os.path.join(self._dir(workflow), "contexts.json")
+            stored = self._read(p, {})
+            stored.update(contexts)
+            self._write(p, stored)
+
+    def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            p = os.path.join(self.root, workflow.replace("/", "_"), "contexts.json")
+            return self._read(p, {})

@@ -1,0 +1,280 @@
+"""TF-Worker: the per-workflow event processor (paper §4).
+
+Processing pipeline per batch (§3.2 trigger life-cycle + §3.4 fault tolerance):
+
+  consume → dedup by event id → match triggers by subject (+type) →
+  **activate** (evaluate Condition over the shared Context) →
+  **fire** (run Action; transient triggers deactivate) →
+  checkpoint: persist dirty contexts → commit processed events → redrive DLQ.
+
+Crash-consistency contract: contexts are persisted *before* events are
+committed, so after a crash the event broker re-delivers uncommitted events
+and replaying them over the last checkpointed contexts reconstructs the state
+(conditions are idempotent; the built-in aggregators can additionally dedup by
+event id inside their context for exactly-once counting across the
+persist/commit window).
+
+Out-of-order sequences: an event whose trigger exists but is *disabled* goes
+to the Dead Letter Queue and is redriven when any trigger state changes
+(exactly the A→B example in §3.4).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+from .actions import run_action, run_condition
+from .context import TriggerContext
+from .events import TYPE_INIT, CloudEvent
+from .eventstore import EventStore
+from .functions import FunctionBackend
+from .statestore import StateStore
+from .triggers import Trigger
+
+
+class WorkerStats:
+    __slots__ = ("events_processed", "activations", "fires", "batches", "dlq_events")
+
+    def __init__(self) -> None:
+        self.events_processed = 0
+        self.activations = 0
+        self.fires = 0
+        self.batches = 0
+        self.dlq_events = 0
+
+
+class TFWorker:
+    def __init__(
+        self,
+        workflow: str,
+        event_store: EventStore,
+        state_store: StateStore,
+        backend: FunctionBackend,
+        batch_size: int = 512,
+        commit_policy: str = "on_fire",  # "on_fire" (paper) | "every_batch"
+        keep_event_log: bool = True,
+        timers=None,
+    ) -> None:
+        self.workflow = workflow
+        self.event_store = event_store
+        self.state_store = state_store
+        self.backend = backend
+        self.timers = timers
+        self.batch_size = batch_size
+        self.commit_policy = commit_policy
+        self.keep_event_log = keep_event_log
+
+        self.lock = threading.RLock()
+        self.triggers: Dict[str, Trigger] = {}
+        self._by_subject: Dict[str, List[Trigger]] = {}
+        self._contexts: Dict[str, TriggerContext] = {}
+        self._seen: set = set()          # processed-but-uncommitted event ids
+        self._sink: List[CloudEvent] = []  # internal event buffer (§5.2)
+        self.event_log: List[CloudEvent] = []  # native event-sourcing log (§5.3)
+        self.stats = WorkerStats()
+        self.finished = False
+        self.result: Any = None
+        self._stop = threading.Event()
+        self._trigger_state_dirty = False
+        self.last_active = time.monotonic()
+
+        self._recover()
+
+    # -- recovery / registration -------------------------------------------------
+    def _recover(self) -> None:
+        """Reload trigger defs + last checkpointed contexts (restart path)."""
+        specs = self.state_store.get_triggers(self.workflow)
+        ckpt = self.state_store.get_contexts(self.workflow)
+        for tid, spec in specs.items():
+            trg = Trigger.from_dict(spec)
+            if tid in ckpt:
+                trg.context = ckpt[tid]
+            self._index(trg)
+        meta = self.state_store.get_workflow(self.workflow) or {}
+        if meta.get("status") in ("succeeded", "failed"):
+            self.finished = True
+            self.result = meta.get("result")
+
+    def _index(self, trg: Trigger) -> None:
+        self.triggers[trg.trigger_id] = trg
+        for subj in trg.activation_events:
+            self._by_subject.setdefault(subj, []).append(trg)
+
+    def add_trigger(self, trg: Trigger, persist: bool = True) -> str:
+        with self.lock:
+            self._index(trg)
+            if persist:
+                self.state_store.put_trigger(self.workflow, trg.trigger_id, trg.to_dict())
+        return trg.trigger_id
+
+    def add_dynamic_trigger(self, trg: Trigger) -> str:
+        tid = self.add_trigger(trg)
+        self._trigger_state_dirty = True
+        return tid
+
+    def set_trigger_enabled(self, trigger_id: str, enabled: bool) -> None:
+        with self.lock:
+            trg = self.triggers[trigger_id]
+            trg.enabled = enabled
+            self._trigger_state_dirty = True
+
+    def intercept(self, trigger_id: str, interceptor_action: Dict[str, Any]) -> None:
+        """Wrap a trigger's action with an interceptor (Def. 5)."""
+        with self.lock:
+            trg = self.triggers[trigger_id]
+            trg.action = {"name": "intercepted", "interceptor": interceptor_action,
+                          "inner": trg.action}
+            self.state_store.put_trigger(self.workflow, trigger_id, trg.to_dict())
+
+    def intercept_by_condition(self, condition_name: str, interceptor_action: Dict[str, Any]) -> int:
+        n = 0
+        with self.lock:
+            for trg in self.triggers.values():
+                if trg.condition.get("name") == condition_name:
+                    self.intercept(trg.trigger_id, interceptor_action)
+                    n += 1
+        return n
+
+    # -- context plumbing ---------------------------------------------------------
+    def context_of(self, trigger_id: str) -> TriggerContext:
+        ctx = self._contexts.get(trigger_id)
+        if ctx is None:
+            trg = self.triggers[trigger_id]
+            ctx = TriggerContext(trg.context, self, trigger_id)
+            self._contexts[trigger_id] = ctx
+        return ctx
+
+    def sink(self, event: CloudEvent) -> None:
+        """Internal event production from condition/action code (§5.2)."""
+        self._sink.append(event)
+        self.event_store.publish(self.workflow, event)
+
+    def set_result(self, value: Any) -> None:
+        self.finished = True
+        self.result = value
+        meta = self.state_store.get_workflow(self.workflow) or {}
+        meta.update({"status": (value or {}).get("status", "succeeded"), "result": value})
+        self.state_store.put_workflow(self.workflow, meta)
+
+    # -- the hot loop ---------------------------------------------------------------
+    def _process_one(self, event: CloudEvent) -> bool:
+        """Activate matching triggers for one event.  Returns True if any fired."""
+        fired = False
+        matches = self._by_subject.get(event.subject)
+        if not matches:
+            # Unknown subject: drop (but count). Sequenced-but-disabled triggers
+            # are handled below; a totally unknown event has nothing to wait for.
+            self.stats.dlq_events += 1
+            return False
+        any_enabled = False
+        for trg in matches:
+            if not trg.enabled:
+                continue
+            if trg.event_type and trg.event_type != event.type:
+                continue
+            any_enabled = True
+            ctx = self.context_of(trg.trigger_id)
+            self.stats.activations += 1
+            try:
+                ok = run_condition(trg.condition, ctx, event)
+            except Exception:  # noqa: BLE001
+                traceback.print_exc()
+                ok = False
+            if ok:
+                try:
+                    run_action(trg.action, ctx, event)
+                except Exception:  # noqa: BLE001
+                    traceback.print_exc()
+                self.stats.fires += 1
+                fired = True
+                if trg.transient:
+                    trg.enabled = False
+                    self._trigger_state_dirty = True
+        if not any_enabled:
+            # All candidate triggers disabled → out-of-order event → DLQ (§3.4).
+            self.event_store.to_dlq(self.workflow, event)
+            self._seen.discard(event.id)
+            self.stats.dlq_events += 1
+            return False
+        return fired
+
+    def run_once(self, max_events: Optional[int] = None) -> int:
+        """Process one batch.  Returns number of events processed."""
+        with self.lock:
+            batch = self.event_store.consume(self.workflow, max_events or self.batch_size)
+            if not batch and not self._sink:
+                return 0
+            processed_ids: List[str] = []
+            fired_any = False
+            queue = list(batch)
+            i = 0
+            while i < len(queue):
+                event = queue[i]
+                i += 1
+                if event.id in self._seen or self.event_store.is_committed(self.workflow, event.id):
+                    continue  # at-least-once dedup (§3.4)
+                self._seen.add(event.id)
+                if self.keep_event_log:
+                    self.event_log.append(event)
+                self.stats.events_processed += 1
+                if self._process_one(event):
+                    fired_any = True
+                if event.id in self._seen:  # not DLQ'd
+                    processed_ids.append(event.id)
+                # Drain internally-produced events in the same batch (§5.2).
+                if self._sink:
+                    queue.extend(self._sink)
+                    self._sink.clear()
+            self.stats.batches += 1
+            if processed_ids:
+                self.last_active = time.monotonic()
+            # Checkpoint: contexts first, then commit (§3.4 ordering).
+            if fired_any or (self.commit_policy == "every_batch" and processed_ids):
+                self._checkpoint(processed_ids)
+                if fired_any and self.event_store.dlq_size(self.workflow):
+                    n = self.event_store.redrive(self.workflow)
+                    if n:
+                        # redriven events must be reprocessable
+                        pass
+            return len(processed_ids)
+
+    def _checkpoint(self, processed_ids: List[str]) -> None:
+        dirty = {tid: dict(ctx) for tid, ctx in self._contexts.items() if ctx.dirty}
+        if dirty:
+            self.state_store.put_contexts(self.workflow, dirty)
+            for ctx in self._contexts.values():
+                ctx.dirty = False
+        if self._trigger_state_dirty:
+            for tid, trg in self.triggers.items():
+                self.state_store.put_trigger(self.workflow, tid, trg.to_dict())
+            self._trigger_state_dirty = False
+        self.event_store.commit(self.workflow, processed_ids)
+        for eid in processed_ids:
+            self._seen.discard(eid)
+
+    # -- loops ------------------------------------------------------------------------
+    def run_until_complete(self, timeout: float = 60.0, poll: float = 0.001) -> Any:
+        """Drive the worker until the workflow ends (deterministic mode)."""
+        deadline = time.monotonic() + timeout
+        while not self.finished:
+            n = self.run_once()
+            if n == 0:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"workflow {self.workflow} did not finish")
+                time.sleep(poll)
+        return self.result
+
+    def run_forever(self, poll: float = 0.002, idle_timeout: Optional[float] = None) -> None:
+        """Threaded mode; exits on stop(), workflow end, or idle_timeout
+        (the latter is how KEDA-style scale-to-zero reclaims the worker)."""
+        while not self._stop.is_set() and not self.finished:
+            n = self.run_once()
+            if n == 0:
+                if idle_timeout is not None and time.monotonic() - self.last_active > idle_timeout:
+                    return
+                time.sleep(poll)
+
+    def stop(self) -> None:
+        self._stop.set()

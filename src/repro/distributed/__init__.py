@@ -1,0 +1,2 @@
+from .hlo_analysis import collective_bytes, roofline_terms
+from .sharding import Resolver, replicated, shardings_for

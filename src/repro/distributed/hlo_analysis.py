@@ -1,0 +1,111 @@
+"""Roofline-term extraction from compiled SPMD executables.
+
+``cost_analysis()`` provides per-device HLO FLOPs and bytes accessed.
+Collective traffic is NOT in cost_analysis, so we parse the post-SPMD HLO
+text and sum operand bytes of every collective op, weighted by its on-wire
+cost on a ring: all-reduce ≈ 2×size (reduce-scatter + all-gather phases),
+all-gather / reduce-scatter / all-to-all / collective-permute ≈ 1×size.
+
+Collectives inside ``while`` loop bodies (scanned layer stacks!) execute
+trip-count times; we multiply ops found in a loop body computation by the
+loop's trip count, recovered from the canonical XLA counter pattern.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)(?!-done)\b")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(r"while\(.*\).*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"trip_count=(\d+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Returns per-collective-kind on-wire bytes (per device) + totals."""
+    # 1) find trip counts for while bodies
+    trip_counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if " while(" in line and "body=" in line:
+            m = _WHILE_RE.search(line)
+            t = _TRIP_RE.search(line)
+            if m:
+                trip_counts[m.group(1)] = int(t.group(1)) if t else 1
+    # 2) walk computations, accumulating collectives weighted by trip count
+    current_comp = None
+    comp_ops: Dict[str, list] = {}
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            current_comp = mc.group(1)
+            comp_ops.setdefault(current_comp, [])
+            continue
+        mo = _OP_RE.match(line)
+        if mo and current_comp is not None:
+            shape_str, kind = mo.group(1), mo.group(2)
+            kind = kind.replace("-start", "")
+            comp_ops[current_comp].append((kind, _shape_bytes(shape_str)))
+
+    totals: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for comp, ops in comp_ops.items():
+        mult = trip_counts.get(comp, 1)
+        for kind, nbytes in ops:
+            totals[kind] += _WIRE_FACTOR[kind] * nbytes * mult
+            counts[kind] += mult
+    out = {f"bytes_{k}": v for k, v in totals.items()}
+    out.update({f"count_{k}": counts[k] for k in _COLLECTIVES})
+    out["bytes_total"] = sum(totals.values())
+    return out
+
+
+# TPU v5e hardware model (per chip) — see the brief.
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (~ per-chip injection, 1 link)
+
+
+def roofline_terms(cost: dict, coll: dict, n_devices: int) -> Dict[str, float]:
+    """cost = compiled.cost_analysis() (per-device); coll = collective_bytes().
+
+    Returns the three roofline terms in seconds (per device)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("bytes_total", 0.0))
+    return {
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_accessed / HBM_BW,
+        "t_collective": cbytes / ICI_BW,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": cbytes,
+    }

@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules (MaxText-style), resolved per tensor.
+
+Mesh axes: ``('data','model')`` single-pod, ``('pod','data','model')``
+multi-pod.  'pod' + 'data' carry data parallelism + FSDP; 'model' carries
+tensor/expert parallelism (heads, ffn, vocab, experts) and optional
+activation sequence-sharding (sequence parallelism between blocks).
+
+Resolution is *shape-aware*: a mesh axis is applied to a dim only when the dim
+is divisible by the axis size (e.g. granite's single KV head or llama3.2's 24
+heads simply stay replicated on a 16-way model axis instead of failing).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Param, is_param
+from repro.models.model import ModelConfig
+
+# logical axis -> preferred mesh axes (in priority order per logical axis)
+def default_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rules: Dict[str, Any] = {
+        # activations
+        "batch": data_axes,
+        "seq": (),
+        "act_seq": ("model",) if cfg.seq_shard_activations else (),
+        # params
+        "embed": ("data",),        # FSDP dim
+        "embed2": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head": (),
+        "ffn": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "layers": (),
+        # caches
+        "seq_kv": (),
+    }
+    return rules
+
+
+class Resolver:
+    """Callable: (logical axes tuple, shape) -> PartitionSpec (or None)."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh,
+                 overrides: Optional[Dict[str, Tuple[str, ...]]] = None):
+        self.mesh = mesh
+        self.rules = default_rules(cfg, mesh)
+        if overrides:
+            self.rules.update(overrides)
+        self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(self, axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        out = []
+        used = set()
+        for name, dim in zip(axes, shape):
+            mesh_axes = self.rules.get(name, ()) if name else ()
+            applied = []
+            size = 1
+            for ma in mesh_axes:
+                if ma in used or ma not in self.sizes:
+                    continue
+                s = self.sizes[ma]
+                if dim % (size * s) == 0:
+                    applied.append(ma)
+                    size *= s
+            used.update(applied)
+            if not applied:
+                out.append(None)
+            elif len(applied) == 1:
+                out.append(applied[0])
+            else:
+                out.append(tuple(applied))
+        return P(*out)
+
+    def sharding(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    # activation resolver protocol for layers.lsc
+    def __call__(self, axes, shape):
+        if len(axes) != len(shape):
+            axes = tuple(axes) + (None,) * (len(shape) - len(axes))
+        return self.sharding(axes, shape)
+
+
+def shardings_for(tree_boxed, resolver: Resolver):
+    """Boxed (Param) shape tree -> matching NamedSharding tree (unboxed)."""
+
+    def one(p: Param):
+        val = p.value
+        shape = val.shape if hasattr(val, "shape") else ()
+        return resolver.sharding(p.axes, shape)
+
+    return jax.tree_util.tree_map(one, tree_boxed, is_leaf=is_param)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def tree_replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda _: replicated(mesh), tree)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the event-join kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .event_join import event_join_counts
+
+
+@partial(jax.jit, static_argnames=("block_events", "interpret"))
+def event_join(events, counts, expected, block_events: int = 1024,
+               interpret: bool = False):
+    return event_join_counts(events, counts, expected,
+                             block_events=block_events, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the event-join kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def join_counts_ref(events, counts, expected):
+    """events [N] int32 (−1 padding), counts/expected [T] int32."""
+    T = counts.shape[0]
+    valid = events >= 0
+    add = jnp.zeros((T,), jnp.int32).at[jnp.where(valid, events, 0)].add(
+        valid.astype(jnp.int32))
+    new_counts = counts + add
+    return new_counts, (new_counts >= expected).astype(jnp.int32)

@@ -1,0 +1,25 @@
+"""Jitted public wrapper: [B,S,H,D] layout in, GQA folded for the kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q [B,S,Hq,D], k/v [B,S,Hkv,Dv] → [B,S,Hq,Dv]."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    # fold batch×head with head-major inner order so kv index math is b//G
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dv)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out.reshape(B, Hq, S, Dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_attention(q, k, v, causal: bool = True):
+    """q [B,S,Hq,D], k/v [B,S,Hkv,Dv].  O(S²) reference."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p.astype(v.dtype), v)
+    return out.reshape(B, S, Hq, v.shape[-1])

@@ -1,0 +1,25 @@
+"""Jitted wrapper: [B,S,H,P] model layout → fused SSD kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, Bm, Cm, a, chunk: int = 128, interpret: bool = False):
+    """x [B,S,H,P], dt [B,S,H], Bm/Cm [B,S,N] (shared across heads),
+    a [H] → (y [B,S,H,P], state [B,H,N,P])."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Bf = jnp.repeat(Bm[:, None], H, axis=1).reshape(B * H, S, N)
+    Cf = jnp.repeat(Cm[:, None], H, axis=1).reshape(B * H, S, N)
+    af = jnp.tile(a, B)
+    y, state = ssd_scan(xf, dtf, Bf, Cf, af, chunk=chunk, interpret=interpret)
+    return (y.reshape(B, H, S, P).transpose(0, 2, 1, 3),
+            state.reshape(B, H, N, P))

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD kernel: the plain time recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, Bm, Cm, a):
+    """x [BH,S,P], dt [BH,S], Bm/Cm [BH,S,N], a [BH].
+    h_t = exp(a·dt_t)·h_{t-1} + dt_t·B_t⊗x_t ;  y_t = C_t·h_t"""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(a.astype(f32) * dt_t)                      # [BH]
+        h = da[:, None, None] * h + jnp.einsum(
+            "b,bn,bp->bnp", dt_t, b_t.astype(f32), x_t.astype(f32))
+        y = jnp.einsum("bn,bnp->bp", c_t.astype(f32), h)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), f32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (x.transpose(1, 0, 2), dt.astype(f32).transpose(1, 0),
+         Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), hT

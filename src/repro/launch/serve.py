@@ -1,0 +1,42 @@
+"""Serving launcher: trigger-batched generation with scale-to-zero.
+
+    python -m repro.launch.serve --arch yi-9b --smoke --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import ARCHS, get_config
+from repro.core import KedaAutoscaler, Triggerflow
+from repro.serving.engine import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tf = Triggerflow(inline_functions=True)
+    eng = ServingEngine(cfg, tf, "serve", max_batch=args.max_batch,
+                        max_new_tokens=args.max_new_tokens, max_len=256)
+    eng.deploy()
+    scaler = KedaAutoscaler(tf, poll_interval=0.05, grace_period=0.5).start()
+    t0 = time.time()
+    for i in range(args.requests):
+        eng.submit(f"req-{i}", [1 + i, 2 + i, 3 + i])
+    while eng.served < args.requests and time.time() - t0 < 300:
+        time.sleep(0.05)
+    print(f"served {eng.served} requests in {eng.batches} batches, "
+          f"{time.time() - t0:.1f}s")
+    scaler.stop()
+    tf.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell — the
+dry-run lowers against these; nothing is ever allocated."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.models import Model, ModelConfig
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    s = SHAPES[shape_name]
+    B, S = s["batch"], s["seq"]
+    kind = s["kind"]
+    if kind == "decode":
+        if cfg.family == "audio":
+            return {"tokens": _sds((B, cfg.codebooks, 1), I32)}
+        return {"tokens": _sds((B, 1), I32)}
+    if cfg.family == "audio":
+        batch = {"tokens": _sds((B, cfg.codebooks, S), I32)}
+        if kind == "train":
+            batch["targets"] = _sds((B, cfg.codebooks, S), I32)
+        return batch
+    batch = {"tokens": _sds((B, S), I32)}
+    if kind == "train":
+        batch["targets"] = _sds((B, S), I32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), cfg.dtype)
+        batch["patch_positions"] = _sds((B, cfg.n_patches), I32)
+        batch["positions3"] = _sds((B, S, 3), I32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str):
+    """Boxed cache shape tree (Param leaves with ShapeDtypeStruct values)."""
+    s = SHAPES[shape_name]
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(s["batch"], s["seq"]))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Everything the step function needs, as ShapeDtypeStructs."""
+    s = SHAPES[shape_name]
+    out = {"kind": s["kind"], "batch": batch_specs(cfg, shape_name)}
+    if s["kind"] == "decode":
+        out["cache"] = cache_specs(cfg, shape_name)
+    return out

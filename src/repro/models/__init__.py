@@ -1,0 +1,5 @@
+from .common import KeyGen, Param, axes_tree, is_param, make_param, unbox
+from .model import Model, ModelConfig
+
+__all__ = ["KeyGen", "Model", "ModelConfig", "Param", "axes_tree", "is_param",
+           "make_param", "unbox"]

@@ -1,0 +1,69 @@
+"""Shared model plumbing: boxed parameters carrying logical sharding axes.
+
+Every parameter is created as ``Param(value, axes)`` where ``axes`` is a tuple
+of *logical* axis names (one per dim, ``None`` = unsharded).  The distributed
+layer resolves logical axes → mesh axes (MaxText-style rules).  ``Param`` is a
+pytree with ``axes`` as static aux data, so ``jax.eval_shape`` over an init
+function yields the parameter *shapes and axes* without allocating — which is
+exactly what the multi-pod dry-run needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree):
+    """Boxed params → plain arrays."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_tree(tree):
+    """Boxed params → logical-axes pytree (same structure as ``unbox``)."""
+    return jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+# -- initializers -----------------------------------------------------------------
+def make_param(key, shape, axes, scale: Optional[float] = None,
+               dtype=jnp.bfloat16, init: str = "normal") -> Param:
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            scale = shape[0] ** -0.5  # fan-in on dim 0 by convention
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Param(v, tuple(axes))
+
+
+class KeyGen:
+    """Deterministic key splitter so init functions stay tidy."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub

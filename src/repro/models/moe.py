@@ -1,0 +1,93 @@
+"""Mixture-of-Experts layer: sort-based capacity dispatch (Megablocks-style,
+TPU-native adaptation).
+
+Instead of the classic one-hot dispatch einsum (T×E×C×D FLOPs — ruinous at
+160 experts), tokens are argsorted by expert id and gathered into dense
+[E, C, D] groups, so expert matmul FLOPs are exactly
+``tokens × top_k × capacity_factor × expert_FFN`` — matching MODEL_FLOPS for
+MoE in the roofline.  Gathers/scatters are memory ops, not FLOPs.  Tokens
+beyond an expert's capacity are dropped (contribute only via residual/shared
+experts), standard Switch behaviour.
+
+Sharding: experts over the 'model' mesh axis (expert parallelism), tokens over
+'data' — the gather across them lowers to the EP all-to-all exchange.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, make_param
+from .layers import lsc, mlp_forward, mlp_init
+
+
+def moe_init(keys: KeyGen, d_model: int, d_ff_expert: int, n_experts: int,
+             n_shared: int = 0):
+    p = {
+        "router": make_param(keys(), (d_model, n_experts), ("embed", None),
+                             scale=d_model ** -0.5),
+        "wg": make_param(keys(), (n_experts, d_model, d_ff_expert),
+                         ("experts", "embed", "ffn"), scale=d_model ** -0.5),
+        "wu": make_param(keys(), (n_experts, d_model, d_ff_expert),
+                         ("experts", "embed", "ffn"), scale=d_model ** -0.5),
+        "wd": make_param(keys(), (n_experts, d_ff_expert, d_model),
+                         ("experts", "ffn", "embed"), scale=d_ff_expert ** -0.5),
+    }
+    if n_shared > 0:
+        p["shared"] = mlp_init(keys, d_model, d_ff_expert * n_shared)
+    return p
+
+
+def moe_forward(params, x, top_k: int, capacity_factor: float = 1.25,
+                router_in_fp32: bool = True):
+    """x [B,S,D] -> [B,S,D].  Returns (out, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    E = params["router"].shape[-1]
+    xf = x.reshape(T, D)
+
+    rl = xf.astype(jnp.float32) @ params["router"].astype(jnp.float32) \
+        if router_in_fp32 else xf @ params["router"]
+    probs = jax.nn.softmax(rl.astype(jnp.float32), axis=-1)  # [T,E]
+    top_p, top_e = jax.lax.top_k(probs, top_k)               # [T,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * top_k)
+    aux_loss = E * jnp.sum(me * ce)
+
+    TK = T * top_k
+    cap = int(max(1, -(-TK // E) * capacity_factor))
+    flat_e = top_e.reshape(TK)
+    flat_p = top_p.reshape(TK)
+
+    # sort token-slots by expert; each expert owns a contiguous range
+    sort_idx = jnp.argsort(flat_e)                    # [TK]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    slot = offsets[:, None] + jnp.arange(cap)[None, :]          # [E,C]
+    valid = jnp.arange(cap)[None, :] < counts[:, None]
+    slot = jnp.minimum(slot, TK - 1)
+    token_slot = jnp.take(sort_idx, slot, axis=0)               # [E,C] -> flat slots
+    token_idx = token_slot // top_k                             # [E,C] -> tokens
+    gate = jnp.take(flat_p, token_slot, axis=0) * valid         # [E,C] fp32
+
+    expert_in = jnp.take(xf, token_idx.reshape(-1), axis=0).reshape(E, cap, D)
+    expert_in = lsc(expert_in, "experts", None, None)
+    g = jnp.einsum("ecd,edf->ecf", expert_in, params["wg"])
+    u = jnp.einsum("ecd,edf->ecf", expert_in, params["wu"])
+    h = jax.nn.silu(g) * u
+    h = lsc(h, "experts", None, "ffn")
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["wd"])
+    out_e = out_e * gate[..., None].astype(out_e.dtype)
+
+    out = jnp.zeros((T, D), out_e.dtype).at[token_idx.reshape(-1)].add(
+        out_e.reshape(E * cap, D))
+    out = lsc(out.reshape(B, S, D), "batch", "seq", None)
+
+    if "shared" in params:
+        out = out + mlp_forward(params["shared"], x)
+    return out, aux_loss

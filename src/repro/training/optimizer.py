@@ -1,0 +1,74 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping (no optax
+dependency).  Moments are fp32 and shard exactly like their parameters
+(ZeRO-3-equivalent under the FSDP rules), params may stay bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1) -> Callable:
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return schedule
+
+
+@dataclasses.dataclass
+class AdamW:
+    lr: Callable = warmup_cosine(3e-4)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> Dict[str, Any]:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: (g.astype(jnp.float32) * scale), grads)
+        else:
+            gnorm = global_norm(grads)
+            grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state["v"], grads)
+        bc1 = 1 - self.b1 ** cf
+        bc2 = 1 - self.b2 ** cf
+        lr = self.lr(count)
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            step = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "count": count}, gnorm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

@@ -1,0 +1,76 @@
+"""Jitted training / serving step factories.
+
+``make_train_step`` supports gradient-accumulation microbatching (a hillclimb
+lever: trades activation memory against step latency) via ``lax.scan`` over
+microbatches with fp32 grad accumulation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+
+from .optimizer import AdamW
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt: AdamW, accum_steps: int = 1):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            def micro(batch_slice):
+                return jax.value_and_grad(loss_fn, has_aux=True)(params, batch_slice)
+
+            def body(carry, batch_slice):
+                g_acc, l_acc = carry
+                (l, _), g = micro(batch_slice)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            micro_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]),
+                batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                                micro_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {}
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        out_metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                       "step": opt_state["count"]}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch)
+
+    return decode_step

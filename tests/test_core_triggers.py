@@ -1,0 +1,247 @@
+"""Unit + property tests for the Rich Trigger engine (paper §3)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CloudEvent, MemoryEventStore, TYPE_FAILURE, TYPE_TIMEOUT,
+                        Triggerflow, failure_event, make_trigger,
+                        register_pyfunc, termination_event)
+from repro.core.conditions import CONDITIONS
+from repro.core.context import TriggerContext
+
+
+def _tf():
+    return Triggerflow(inline_functions=True)
+
+
+# ---------------------------------------------------------------- events ----
+def test_cloudevent_json_roundtrip():
+    ev = termination_event("subj", {"a": 1}, fn="f")
+    back = CloudEvent.from_json(ev.to_json())
+    assert back == ev
+
+
+@given(st.text(min_size=1, max_size=30),
+       st.one_of(st.none(), st.integers(), st.text(max_size=20),
+                 st.dictionaries(st.text(max_size=5), st.integers(), max_size=4)))
+@settings(max_examples=50, deadline=None)
+def test_cloudevent_roundtrip_property(subject, data):
+    ev = CloudEvent(subject=subject, data=data)
+    assert CloudEvent.from_json(ev.to_json()) == ev
+
+
+def test_event_ids_unique():
+    ids = {CloudEvent(subject="s").id for _ in range(10_000)}
+    assert len(ids) == 10_000
+
+
+# ----------------------------------------------------------- trigger core ----
+def test_simple_sequence_fires_in_order():
+    tf = _tf()
+    tf.create_workflow("w")
+    tf.backend.register("inc", lambda x: (x or 0) + 1)
+    tf.add_trigger("w", [
+        make_trigger("$init", action={"name": "invoke", "fn": "inc", "args": 0,
+                                      "subject": "a"}),
+        make_trigger("a", action={"name": "invoke", "fn": "inc",
+                                  "subject": "b", "pass_result": True}),
+        make_trigger("b", action={"name": "workflow_end", "pass_result": True}),
+    ])
+    tf.init_workflow("w")
+    assert tf.run_until_complete("w", timeout=5)["result"] == 2
+
+
+def test_transient_trigger_fires_once():
+    tf = _tf()
+    tf.create_workflow("w")
+    hits = []
+    register_pyfunc("hit_once", lambda ctx, ev, p: hits.append(ev.data))
+    tf.add_trigger("w", make_trigger(
+        "x", action={"name": "pyfunc", "func": "hit_once"}, transient=True))
+    for i in range(3):
+        tf.publish("w", termination_event("x", i))
+    w = tf.worker("w")
+    w.run_once()
+    assert len(hits) == 1
+
+
+def test_persistent_trigger_fires_every_time():
+    tf = _tf()
+    tf.create_workflow("w")
+    hits = []
+    register_pyfunc("hit_many", lambda ctx, ev, p: hits.append(1))
+    tf.add_trigger("w", make_trigger(
+        "x", action={"name": "pyfunc", "func": "hit_many"}, transient=False))
+    for i in range(5):
+        tf.publish("w", termination_event("x", i))
+    tf.worker("w").run_once()
+    assert len(hits) == 5
+
+
+def test_duplicate_event_ids_deduped():
+    tf = _tf()
+    tf.create_workflow("w")
+    hits = []
+    register_pyfunc("hit_dup", lambda ctx, ev, p: hits.append(1))
+    tf.add_trigger("w", make_trigger(
+        "x", action={"name": "pyfunc", "func": "hit_dup"}, transient=False))
+    ev = termination_event("x", 1)
+    tf.publish("w", ev)
+    tf.publish("w", ev)  # same id: at-least-once duplicate
+    w = tf.worker("w")
+    w.run_once()
+    w.run_once()
+    assert len(hits) == 1
+
+
+def test_dlq_out_of_order_sequence():
+    """Paper §3.4: events for disabled triggers park in the DLQ and are
+    redriven when the upstream trigger fires."""
+    tf = _tf()
+    tf.create_workflow("w")
+    tB = make_trigger("go.B", action={"name": "workflow_end", "result": "B"},
+                      trigger_id="B")
+    tB.enabled = False
+    register_pyfunc("enable_B", lambda ctx, ev, p: ctx.enable_trigger("B"))
+    tA = make_trigger("go.A", action={"name": "pyfunc", "func": "enable_B"},
+                      trigger_id="A")
+    tf.add_trigger("w", [tA, tB])
+    tf.publish("w", termination_event("go.B"))   # out of order
+    w = tf.worker("w")
+    w.run_once()
+    assert tf.event_store.dlq_size("w") == 1
+    tf.publish("w", termination_event("go.A"))
+    res = tf.run_until_complete("w", timeout=5)
+    assert res["result"] == "B"
+    assert tf.event_store.dlq_size("w") == 0
+
+
+def test_counter_join_and_dynamic_expected():
+    tf = _tf()
+    tf.create_workflow("w")
+    tf.backend.register("sq", lambda x: x * x)
+    register_pyfunc("fin", lambda ctx, ev, p: ctx.workflow_result(
+        {"status": "succeeded", "result": sorted(ctx["results"])}))
+    tf.add_trigger("w", [
+        make_trigger("$init", action={"name": "map_invoke", "fn": "sq",
+                                      "items": [1, 2, 3], "subject": "m",
+                                      "join_trigger": "join"}),
+        make_trigger("m", condition={"name": "counter"},
+                     action={"name": "pyfunc", "func": "fin"}, trigger_id="join"),
+    ])
+    tf.init_workflow("w")
+    assert tf.run_until_complete("w", timeout=5)["result"] == [1, 4, 9]
+
+
+def test_failure_events_do_not_satisfy_joins():
+    tf = _tf()
+    tf.create_workflow("w")
+    fired = []
+    register_pyfunc("joined", lambda ctx, ev, p: fired.append(1))
+    tf.add_trigger("w", make_trigger(
+        "j", condition={"name": "counter", "expected": 2},
+        action={"name": "pyfunc", "func": "joined"}))
+    tf.publish("w", failure_event("j", "boom"))
+    tf.publish("w", termination_event("j", 1))
+    w = tf.worker("w")
+    w.run_once()
+    assert not fired
+    assert w.context_of(w.triggers[list(w.triggers)[0]].trigger_id)["failures"] == 1
+
+
+def test_interception_by_trigger_id():
+    """Def. 5: dynamic trigger interception wraps the original action."""
+    tf = _tf()
+    tf.create_workflow("w")
+    order = []
+    register_pyfunc("orig", lambda ctx, ev, p: order.append("orig"))
+    register_pyfunc("icept", lambda ctx, ev, p: order.append("intercept"))
+    tf.add_trigger("w", make_trigger(
+        "x", action={"name": "pyfunc", "func": "orig"}, trigger_id="t1"))
+    tf.intercept("w", {"name": "pyfunc", "func": "icept"}, trigger_id="t1")
+    tf.publish("w", termination_event("x"))
+    tf.worker("w").run_once()
+    assert order == ["intercept", "orig"]
+
+
+def test_interception_cancel_inner():
+    tf = _tf()
+    tf.create_workflow("w")
+    order = []
+    register_pyfunc("orig2", lambda ctx, ev, p: order.append("orig"))
+
+    def blocker(ctx, ev, p):
+        order.append("blocked")
+        ctx["cancel_inner"] = True
+
+    register_pyfunc("blocker", blocker)
+    tf.add_trigger("w", make_trigger(
+        "x", action={"name": "pyfunc", "func": "orig2"}, trigger_id="t2"))
+    tf.intercept("w", {"name": "pyfunc", "func": "blocker"}, trigger_id="t2")
+    tf.publish("w", termination_event("x"))
+    tf.worker("w").run_once()
+    assert order == ["blocked"]
+
+
+def test_dynamic_trigger_from_action():
+    tf = _tf()
+    tf.create_workflow("w")
+
+    def adder(ctx, ev, p):
+        ctx.add_trigger(make_trigger(
+            "later", action={"name": "workflow_end", "result": "dynamic"}))
+
+    register_pyfunc("adder", adder)
+    tf.add_trigger("w", make_trigger("$init", action={"name": "pyfunc",
+                                                      "func": "adder"}))
+    tf.init_workflow("w")
+    tf.publish("w", termination_event("later"))
+    assert tf.run_until_complete("w", timeout=5)["result"] == "dynamic"
+
+
+# ------------------------------------------------------- condition library ----
+class _Ctx(dict):
+    pass
+
+
+@given(st.integers(1, 50), st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_counter_exactly_once_property(expected, dup_factor):
+    """Replaying every event (dup_factor+1)× with exactly_once must fire on
+    exactly the `expected`-th distinct event — idempotent conditions (§3.4)."""
+    ctx = _Ctx()
+    fires = 0
+    params = {"name": "counter", "expected": expected, "exactly_once": True}
+    events = []
+    for i in range(expected):
+        ev = termination_event("s", i)
+        events.append(ev)
+        events.extend([ev] * dup_factor)
+    for ev in events:
+        if CONDITIONS["counter"](ctx, ev, params):
+            fires += 1
+    assert fires >= 1
+    assert ctx["count"] == expected
+
+
+def test_rules_condition_choice():
+    ctx = _Ctx()
+    params = {"rules": [
+        {"var": "$.result", "op": "lt", "value": 3, "next": "Low"},
+        {"var": "$.result", "op": "ge", "value": 3, "next": "High"},
+    ]}
+    assert CONDITIONS["rules"](ctx, termination_event("s", 1), params)
+    assert ctx["matched_next"] == "Low"
+    assert CONDITIONS["rules"](ctx, termination_event("s", 7), params)
+    assert ctx["matched_next"] == "High"
+
+
+def test_threshold_join_timeout():
+    ctx = _Ctx()
+    ctx["expected"] = 10
+    params = {"name": "threshold_join", "fraction": 0.8, "min_events": 1}
+    for i in range(3):
+        assert not CONDITIONS["threshold_join"](ctx, termination_event("s", i), params)
+    timeout = CloudEvent(subject="s", type=TYPE_TIMEOUT)
+    assert CONDITIONS["threshold_join"](ctx, timeout, params)
+    assert ctx["timed_out"]

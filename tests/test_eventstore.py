@@ -1,0 +1,120 @@
+"""Event store contract tests (memory + durable file) + hypothesis property:
+at-least-once with commit — no committed event is redelivered, no uncommitted
+event is lost across restarts."""
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (FileEventStore, FileStateStore, MemoryEventStore,
+                        termination_event)
+
+
+@pytest.fixture(params=["memory", "file"])
+def store(request, tmp_path):
+    if request.param == "memory":
+        return MemoryEventStore()
+    return FileEventStore(str(tmp_path / "events"))
+
+
+def test_publish_consume_commit(store):
+    store.create_stream("w")
+    evs = [termination_event("s", i) for i in range(10)]
+    store.publish_batch("w", evs)
+    got = store.consume("w", 100)
+    assert [e.id for e in got] == [e.id for e in evs]
+    store.commit("w", [e.id for e in evs[:4]])
+    assert store.lag("w") == 6
+    assert store.is_committed("w", evs[0].id)
+    assert not store.is_committed("w", evs[5].id)
+    rest = store.consume("w", 100)
+    assert [e.id for e in rest] == [e.id for e in evs[4:]]
+
+
+def test_dlq_quarantine_and_redrive(store):
+    store.create_stream("w")
+    evs = [termination_event("s", i) for i in range(3)]
+    store.publish_batch("w", evs)
+    store.to_dlq("w", evs[1])
+    assert store.dlq_size("w") == 1
+    assert [e.id for e in store.consume("w", 10)] == [evs[0].id, evs[2].id]
+    assert store.redrive("w") == 1
+    assert store.dlq_size("w") == 0
+    assert evs[1].id in [e.id for e in store.consume("w", 10)]
+
+
+def test_committed_events_order(store):
+    store.create_stream("w")
+    evs = [termination_event("s", i) for i in range(5)]
+    store.publish_batch("w", evs)
+    store.commit("w", [e.id for e in evs])
+    got = store.committed_events("w")
+    assert {e.id for e in got} == {e.id for e in evs}
+
+
+def test_file_store_restart_recovers_uncommitted(tmp_path):
+    root = str(tmp_path / "ev")
+    s1 = FileEventStore(root)
+    s1.create_stream("w")
+    evs = [termination_event("s", i) for i in range(6)]
+    s1.publish_batch("w", evs)
+    s1.commit("w", [evs[0].id, evs[1].id])
+    # crash + restart
+    s2 = FileEventStore(root)
+    pending = s2.consume("w", 100)
+    assert [e.id for e in pending] == [e.id for e in evs[2:]]
+    assert s2.is_committed("w", evs[0].id)
+
+
+def test_file_store_refresh_sees_foreign_appends(tmp_path):
+    root = str(tmp_path / "ev")
+    s1 = FileEventStore(root)
+    s1.create_stream("w")
+    s2 = FileEventStore(root)  # second instance over the same log
+    s1.publish("w", termination_event("s", 1))
+    assert s2.lag("w") == 1    # refresh picks it up
+    got = s2.consume("w", 10)
+    assert len(got) == 1 and got[0].data["result"] == 1
+
+
+@given(st.lists(st.tuples(st.sampled_from(["publish", "commit_half", "restart"]),
+                          st.integers(0, 5)), min_size=1, max_size=12))
+@settings(max_examples=30, deadline=None)
+def test_file_store_no_loss_no_dup_property(tmp_path_factory, ops):
+    root = str(tmp_path_factory.mktemp("ev"))
+    store = FileEventStore(root)
+    store.create_stream("w")
+    published, committed = [], set()
+    for op, arg in ops:
+        if op == "publish":
+            evs = [termination_event("s", i) for i in range(arg)]
+            store.publish_batch("w", evs)
+            published.extend(e.id for e in evs)
+        elif op == "commit_half":
+            pending = store.consume("w", 10 ** 6)
+            half = [e.id for e in pending[: len(pending) // 2]]
+            store.commit("w", half)
+            committed.update(half)
+        else:
+            store = FileEventStore(root)  # restart
+    pending_ids = [e.id for e in store.consume("w", 10 ** 6)]
+    # invariant 1: nothing committed is redelivered
+    assert not (set(pending_ids) & committed)
+    # invariant 2: everything published is either pending or committed
+    assert set(published) == set(pending_ids) | committed
+    # invariant 3: no duplicates in pending
+    assert len(pending_ids) == len(set(pending_ids))
+
+
+def test_file_state_store_roundtrip(tmp_path):
+    ss = FileStateStore(str(tmp_path / "state"))
+    ss.put_workflow("w", {"status": "created"})
+    ss.put_trigger("w", "t1", {"trigger_id": "t1", "activation_events": ["x"],
+                               "condition": {"name": "true"},
+                               "action": {"name": "noop"}})
+    ss.put_contexts("w", {"t1": {"count": 3}})
+    ss2 = FileStateStore(str(tmp_path / "state"))
+    assert ss2.get_workflow("w")["status"] == "created"
+    assert ss2.get_triggers("w")["t1"]["activation_events"] == ["x"]
+    assert ss2.get_contexts("w")["t1"]["count"] == 3

@@ -1,0 +1,66 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.event_join.ops import event_join
+from repro.kernels.event_join.ref import join_counts_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import naive_attention
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,dtype", [
+    (1, 64, 4, 4, 16, jnp.float32),      # MHA
+    (2, 128, 8, 2, 32, jnp.float32),     # GQA 4:1
+    (2, 96, 4, 1, 16, jnp.float32),      # MQA (granite-style kv=1)
+    (1, 80, 4, 2, 16, jnp.float32),      # ragged seq (padding path)
+    (1, 128, 4, 2, 32, jnp.bfloat16),    # bf16 inputs
+])
+def test_flash_attention_sweep(B, S, Hq, Hkv, D, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(B * S + Hq), 3)
+    q = jax.random.normal(k1, (B, S, Hq, D), dtype)
+    k = jax.random.normal(k2, (B, S, Hkv, D), dtype)
+    v = jax.random.normal(k3, (B, S, Hkv, D), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = naive_attention(q, k, v)
+    atol = 3e-5 if dtype == jnp.float32 else 2e-2
+    assert out.shape == ref.shape
+    assert jnp.allclose(out.astype(jnp.float32), ref.astype(jnp.float32),
+                        atol=atol), float(jnp.abs(out - ref).max())
+
+
+def test_flash_attention_non_causal():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(k1, (1, 64, 4, 16))
+    k = jax.random.normal(k2, (1, 64, 4, 16))
+    v = jax.random.normal(k3, (1, 64, 4, 16))
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32,
+                          interpret=True)
+    ref = naive_attention(q, k, v, causal=False)
+    assert jnp.allclose(out, ref, atol=3e-5)
+
+
+@given(st.integers(1, 50), st.integers(1, 1000), st.integers(16, 512))
+@settings(max_examples=15, deadline=None)
+def test_event_join_property(n_triggers, n_events, block):
+    rng = np.random.default_rng(n_triggers * 1000 + n_events)
+    events = jnp.asarray(rng.integers(0, n_triggers, n_events), jnp.int32)
+    counts = jnp.asarray(rng.integers(0, 5, n_triggers), jnp.int32)
+    expected = jnp.asarray(rng.integers(1, 30, n_triggers), jnp.int32)
+    nc, fired = event_join(events, counts, expected, block_events=block,
+                           interpret=True)
+    rc, rf = join_counts_ref(events, counts, expected)
+    assert (nc == rc).all() and (fired == rf).all()
+
+
+def test_event_join_padding_ignored():
+    events = jnp.asarray([0, 1, -1, -1, 0], jnp.int32)
+    counts = jnp.zeros(2, jnp.int32)
+    expected = jnp.asarray([2, 1], jnp.int32)
+    nc, fired = event_join(events, counts, expected, block_events=4,
+                           interpret=True)
+    assert nc.tolist() == [2, 1]
+    assert fired.tolist() == [1, 1]

@@ -1,0 +1,255 @@
+"""Integration tests for the four §5 orchestrators."""
+import time
+
+import pytest
+
+from repro.core import Triggerflow, termination_event
+from repro.core.dag import DAG, MapOperator, PythonOperator
+from repro.core.fedlearn import FederatedLearningOrchestrator, ObjectStore
+from repro.core.statemachine import StateMachine
+from repro.core.workflow_as_code import WorkflowAsCode
+
+
+def _tf():
+    return Triggerflow(inline_functions=True)
+
+
+# ------------------------------------------------------------------- DAG ----
+def test_dag_diamond():
+    tf = _tf()
+    dag = DAG("diamond")
+    a = dag.add(PythonOperator("a", lambda x: 1))
+    b = dag.add(PythonOperator("b", lambda x: x + 10))
+    c = dag.add(PythonOperator("c", lambda x: x + 100))
+    d = dag.add(PythonOperator("d", lambda xs: sorted(xs)))
+    a >> [b, c]
+    b >> d
+    c >> d
+    dag.deploy(tf, "diamond")
+    res = dag.run(tf, "diamond", timeout=10)
+    assert res["status"] == "succeeded"
+    assert res["result"] == [11, 101]
+
+
+def test_dag_map_join_chain():
+    tf = _tf()
+    dag = DAG("mj")
+    g = dag.add(PythonOperator("g", lambda x: list(range(7))))
+    m = dag.add(MapOperator("m", lambda x: x + 1))
+    r = dag.add(PythonOperator("r", sum))
+    g >> m >> r
+    dag.deploy(tf, "mj")
+    assert dag.run(tf, "mj", timeout=10)["result"] == 28
+
+
+def test_dag_cycle_rejected():
+    dag = DAG("cyc")
+    a = dag.add(PythonOperator("a", None))
+    b = dag.add(PythonOperator("b", None))
+    a >> b
+    b >> a
+    with pytest.raises(ValueError):
+        dag.validate()
+
+
+def test_dag_failure_halts_workflow():
+    tf = _tf()
+    dag = DAG("fail")
+
+    def boom(x):
+        raise RuntimeError("boom")
+
+    a = dag.add(PythonOperator("a", boom))
+    b = dag.add(PythonOperator("b", lambda x: x))
+    a >> b
+    dag.deploy(tf, "fail")
+    res = dag.run(tf, "fail", timeout=10)
+    assert res["status"] == "failed"
+    assert "boom" in res["error"]
+
+
+def test_dag_retry_then_succeed():
+    tf = _tf()
+    attempts = {"n": 0}
+
+    def flaky(x):
+        attempts["n"] += 1
+        if attempts["n"] == 1:
+            raise RuntimeError("transient")
+        return 42
+
+    dag = DAG("retry")
+    dag.add(PythonOperator("a", flaky, retries=1))
+    dag.deploy(tf, "retry")
+    res = dag.run(tf, "retry", timeout=10)
+    assert res["status"] == "succeeded" and res["result"] == 42
+    assert attempts["n"] == 2
+
+
+# ------------------------------------------------------------- ASF / ASL ----
+def _sm_tf():
+    tf = _tf()
+    tf.backend.register("inc", lambda x: (x or 0) + 1)
+    tf.backend.register("dbl", lambda x: (x or 0) * 2)
+    return tf
+
+
+def test_asl_sequence_pass_task():
+    tf = _sm_tf()
+    sm = StateMachine({
+        "StartAt": "P",
+        "States": {
+            "P": {"Type": "Pass", "Result": 5, "Next": "T"},
+            "T": {"Type": "Task", "Resource": "dbl", "End": True},
+        }})
+    sm.deploy(tf, "sm1")
+    assert sm.run(tf, "sm1", timeout=10)["result"] == 10
+
+
+def test_asl_choice_loop():
+    tf = _sm_tf()
+    sm = StateMachine({
+        "StartAt": "Init",
+        "States": {
+            "Init": {"Type": "Pass", "Result": 0, "Next": "Inc"},
+            "Inc": {"Type": "Task", "Resource": "inc", "Next": "Gate"},
+            "Gate": {"Type": "Choice",
+                     "Choices": [{"Variable": "$.result", "Op": "lt", "Value": 4,
+                                  "Next": "Inc"}],
+                     "Default": "Done"},
+            "Done": {"Type": "Succeed"},
+        }})
+    sm.deploy(tf, "sm2")
+    assert sm.run(tf, "sm2", timeout=10)["result"] == 4
+
+
+def test_asl_parallel_and_nested_map():
+    tf = _sm_tf()
+    sm = StateMachine({
+        "StartAt": "Par",
+        "States": {
+            "Par": {"Type": "Parallel", "Next": "Map",
+                    "Branches": [
+                        {"StartAt": "X", "States": {
+                            "X": {"Type": "Pass", "Result": [1, 2], "End": True}}},
+                        {"StartAt": "Y", "States": {
+                            "Y": {"Type": "Pass", "Result": [3], "End": True}}},
+                    ]},
+            "Map": {"Type": "Pass", "Next": "Flat"},
+            "Flat": {"Type": "Task", "Resource": "flatten", "Next": "M2"},
+            "M2": {"Type": "Map", "Next": "Done", "Iterator": {
+                "StartAt": "D", "States": {
+                    "D": {"Type": "Task", "Resource": "dbl", "End": True}}}},
+            "Done": {"Type": "Succeed"},
+        }})
+    tf.backend.register("flatten", lambda xs: [v for sub in xs for v in sub])
+    sm.deploy(tf, "sm3")
+    res = sm.run(tf, "sm3", timeout=10)
+    assert res["status"] == "succeeded"
+    assert sorted(res["result"]) == [2, 4, 6]
+
+
+def test_asl_map_empty_iterable():
+    tf = _sm_tf()
+    sm = StateMachine({
+        "StartAt": "P",
+        "States": {
+            "P": {"Type": "Pass", "Result": [], "Next": "M"},
+            "M": {"Type": "Map", "Next": "Done", "Iterator": {
+                "StartAt": "D", "States": {
+                    "D": {"Type": "Task", "Resource": "dbl", "End": True}}}},
+            "Done": {"Type": "Succeed"},
+        }})
+    sm.deploy(tf, "sm4")
+    assert sm.run(tf, "sm4", timeout=10)["result"] == []
+
+
+def test_asl_fail_state():
+    tf = _sm_tf()
+    sm = StateMachine({
+        "StartAt": "F",
+        "States": {"F": {"Type": "Fail", "Error": "Custom.Err"}}})
+    sm.deploy(tf, "sm5")
+    res = sm.run(tf, "sm5", timeout=10)
+    assert res["status"] == "failed" and res["error"] == "Custom.Err"
+
+
+def test_asl_wait_state():
+    tf = _sm_tf()
+    sm = StateMachine({
+        "StartAt": "W",
+        "States": {
+            "W": {"Type": "Wait", "Seconds": 0.2, "Next": "T"},
+            "T": {"Type": "Task", "Resource": "inc", "End": True},
+        }})
+    sm.deploy(tf, "sm6")
+    t0 = time.perf_counter()
+    res = sm.run(tf, "sm6", timeout=10)
+    assert res["status"] == "succeeded"
+    assert time.perf_counter() - t0 >= 0.2
+
+
+# --------------------------------------------------------- workflow as code ----
+@pytest.mark.parametrize("scheduler", ["native", "external"])
+def test_wac_suspend_replay(scheduler):
+    tf = _tf()
+    tf.backend.register("add", lambda x: x + 1)
+    tf.backend.register("sq", lambda x: x * x)
+
+    def orch(ex):
+        a = ex.call_async("add", 1).result()
+        parts = ex.map("sq", [a, a + 1]).result()
+        return sum(parts)
+
+    wac = WorkflowAsCode(tf, f"wac-{scheduler}", orch, scheduler=scheduler)
+    wac.deploy()
+    res = wac.run(timeout=10)
+    assert res["result"] == 4 + 9
+    assert wac.replays == 3  # initial + 2 wakes
+
+
+def test_wac_invocations_not_duplicated_across_replays():
+    tf = _tf()
+    calls = {"n": 0}
+
+    def counted(x):
+        calls["n"] += 1
+        return x
+
+    tf.backend.register("counted", counted)
+
+    def orch(ex):
+        a = ex.call_async("counted", 1).result()
+        b = ex.call_async("counted", 2).result()
+        return a + b
+
+    wac = WorkflowAsCode(tf, "wac-dup", orch)
+    wac.deploy()
+    assert wac.run(timeout=10)["result"] == 3
+    assert calls["n"] == 2  # event sourcing: no re-invocation on replay
+
+
+# ---------------------------------------------------------------- fedlearn ----
+def test_fedlearn_threshold_and_timeout():
+    tf = Triggerflow()  # threaded: clients run concurrently
+    store = ObjectStore()
+
+    def client(args):
+        if args["round"] == 1 and args["client"] < 3:
+            raise RuntimeError("down")
+        w = store.get(args["model"])
+        k = store.put(f"d/{args['round']}/{args['client']}", w + 1.0)
+        return {"round": args["round"], "result": k}
+
+    def agg(keys, st):
+        vals = [st.get(k) for k in keys]
+        return sum(vals) / len(vals)
+
+    fl = FederatedLearningOrchestrator(tf, "fl-test", client, agg, n_clients=6,
+                                       rounds=2, threshold=0.5,
+                                       round_timeout=2.0, object_store=store)
+    fl.deploy()
+    out = fl.start(init_model=0.0, timeout=30)
+    assert out["status"] == "succeeded"
+    assert store.get(out["result"]["model"]) == 2.0
+    tf.shutdown()
