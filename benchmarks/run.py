@@ -16,6 +16,7 @@ import traceback
 
 SUITES = [
     ("load_test", "Table 1 — events/s per worker"),
+    ("sharded_load", "repro.bus — events/s vs worker-shard count"),
     ("overhead", "Fig 9/10 — seq + parallel DAG overhead vs baselines"),
     ("event_sourcing", "Fig 11/12 — workflow-as-code replay overhead"),
     ("autoscaling", "Fig 8 — KEDA-style scale up/down to zero"),

@@ -1,0 +1,89 @@
+"""repro.bus reproduction: events/s vs worker-shard count.
+
+The Table 1 scenario (noop triggers, §6.1) run on the sharded dataplane:
+events are keyed over ``subjects`` distinct trigger subjects, routed onto a
+partitioned event bus, and drained by {1, 2, 4, 8} ShardWorker shards running
+on their own threads.  The single-worker ``load_test.bench_noop`` figure on
+the same machine is reported as the baseline the 4-shard run must beat.
+
+Shard throughput wins come from the consumer-group fast path (exclusive
+partition ownership ⇒ no per-event committed checks, O(batch) prefix commits
+against short per-partition logs) plus overlapping shard batches.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.bus import PartitionedEventStore
+from repro.core import Triggerflow, make_trigger, termination_event
+
+from benchmarks.load_test import bench_noop
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def bench_sharded_noop(
+    n_events: int = 100_000,
+    shards: int = 4,
+    partitions: int = 16,
+    subjects: int = 64,
+    batch_size: int = 4096,
+) -> Dict:
+    store = PartitionedEventStore(partitions)
+    tf = Triggerflow(event_store=store, inline_functions=True,
+                     commit_policy="every_batch")
+    tf.pool.batch_size = batch_size
+    tf.pool.keep_event_log = False
+    tf.create_workflow("load")
+    for s in range(subjects):
+        tf.add_trigger("load", make_trigger(
+            f"e{s}", condition={"name": "true"}, action={"name": "noop"},
+            trigger_id=f"noop{s}", transient=False))
+    events = [termination_event(f"e{i % subjects}", i) for i in range(n_events)]
+    store.publish_batch("load", events)
+
+    t0 = time.perf_counter()
+    tf.pool.start_shards("load", shards)
+    while store.lag("load") > 0:
+        time.sleep(0.0005)
+    dt = time.perf_counter() - t0
+    tf.shutdown()
+    processed = tf.pool.total_events_processed("load")
+    assert processed >= n_events, (processed, n_events)
+    return {"events": n_events, "seconds": dt, "events_per_s": n_events / dt,
+            "shards": shards, "partitions": partitions}
+
+
+def run(reps: int = 3, n_events: int = 100_000) -> List[Dict]:
+    # Interleave scenarios across repetitions and keep the best events/s per
+    # scenario: single-run numbers on small shared machines swing ±25% from
+    # CPU steal, which would drown the architectural deltas being measured.
+    best: Dict = {"baseline": 0.0}
+    best.update({s: 0.0 for s in SHARD_COUNTS})
+    for _ in range(reps):
+        best["baseline"] = max(best["baseline"],
+                               bench_noop(n_events)["events_per_s"])
+        for shards in SHARD_COUNTS:
+            r = bench_sharded_noop(n_events=n_events, shards=shards)
+            best[shards] = max(best[shards], r["events_per_s"])
+
+    rows = [{
+        "name": "sharded_load.baseline_single_worker",
+        "us_per_call": 1e6 / best["baseline"],
+        "derived": f"{best['baseline']:.0f} events/s (bench_noop, best of {reps})",
+    }]
+    for shards in SHARD_COUNTS:
+        speedup = best[shards] / best["baseline"]
+        rows.append({
+            "name": f"sharded_load.noop_{shards}shard",
+            "us_per_call": 1e6 / best[shards],
+            "derived": f"{best[shards]:.0f} events/s "
+                       f"({speedup:.2f}x vs single worker)",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.2f},\"{row['derived']}\"")

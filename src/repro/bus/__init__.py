@@ -1,0 +1,13 @@
+# Partitioned event bus + sharded worker-pool runtime (paper §4 dataplane:
+# Kafka partitions / Redis Streams consumer groups, scaled TF-Workers).
+from .group import ConsumerGroup
+from .partitioned import PartitionedEventStore, subject_partitioner
+from .pool import ShardedWorkerPool, ShardWorker
+
+__all__ = [
+    "ConsumerGroup",
+    "PartitionedEventStore",
+    "ShardWorker",
+    "ShardedWorkerPool",
+    "subject_partitioner",
+]

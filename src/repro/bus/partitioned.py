@@ -1,0 +1,217 @@
+"""Partitioned event bus (paper §4: Kafka partitions / Redis Streams).
+
+A ``PartitionedEventStore`` is N independent ``StreamShard`` commit logs per
+workflow, with pluggable key→partition routing.  The default router is a
+stable hash of the event *subject*, so a workflow's causally-related events
+(everything addressed to the same trigger subject) stay totally ordered
+within one partition — the same per-key ordering guarantee Kafka gives for
+keyed topics.
+
+Consumers address partitions explicitly (``consume_partitions`` /
+``commit_partitions``): that is what lets a consumer group hand disjoint
+partition subsets to worker shards and scale horizontally without breaking
+the per-subject ordering or the at-least-once commit contract.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from typing import Callable, Dict, Iterable, List, Optional
+
+from ..core.events import CloudEvent
+from ..core.eventstore import EventStore, StreamShard
+
+# subject -> partition. Stable across processes/restarts (crc32, not hash()).
+Partitioner = Callable[[str, int], int]
+
+
+def subject_partitioner(subject: str, num_partitions: int) -> int:
+    return zlib.crc32(subject.encode("utf-8")) % num_partitions
+
+
+class PartitionedEventStore(EventStore):
+    """``EventStore`` contract per partition + partition-scoped consumer API.
+
+    Per-partition guarantees (mirroring the single-stream ``StreamShard``):
+    arrival order preserved, at-least-once redelivery of uncommitted events,
+    commit offsets isolated per partition, per-partition DLQ + redrive.
+    Cross-partition order is deliberately unspecified (as in Kafka).
+    """
+
+    #: ``consume`` never returns committed events, so an *exclusive* consumer
+    #: (partition owner in a consumer group) may skip per-event is_committed
+    #: checks and dedup only against its own in-flight set.
+    UNCOMMITTED_ONLY = True
+
+    def __init__(
+        self,
+        num_partitions: int = 8,
+        partitioner: Optional[Partitioner] = None,
+    ) -> None:
+        if num_partitions < 1:
+            raise ValueError("num_partitions must be >= 1")
+        self.num_partitions = num_partitions
+        self.partitioner: Partitioner = partitioner or subject_partitioner
+        self._lock = threading.RLock()
+        self._parts: Dict[str, List[StreamShard]] = {}
+
+    # -- routing ---------------------------------------------------------------
+    def partition_for(self, subject: str) -> int:
+        return self.partitioner(subject, self.num_partitions)
+
+    def _shards(self, workflow: str) -> List[StreamShard]:
+        parts = self._parts.get(workflow)
+        if parts is None:
+            parts = self._parts.setdefault(
+                workflow, [StreamShard() for _ in range(self.num_partitions)]
+            )
+        return parts
+
+    # -- EventStore contract (whole-stream view) -------------------------------
+    def create_stream(self, workflow: str) -> None:
+        with self._lock:
+            self._shards(workflow)
+
+    def publish(self, workflow: str, event: CloudEvent) -> None:
+        with self._lock:
+            parts = self._shards(workflow)
+            parts[self.partition_for(event.subject)].publish((event,))
+
+    def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
+        with self._lock:
+            parts = self._shards(workflow)
+            by_part: Dict[int, List[CloudEvent]] = {}
+            for e in events:
+                by_part.setdefault(self.partition_for(e.subject), []).append(e)
+            for p, evs in by_part.items():
+                parts[p].publish(evs)
+
+    def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
+        return self.consume_partitions(
+            workflow, range(self.num_partitions), max_events
+        )
+
+    def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
+        self.commit_partitions(workflow, range(self.num_partitions), event_ids)
+
+    def is_committed(self, workflow: str, event_id: str) -> bool:
+        with self._lock:
+            parts = self._parts.get(workflow)
+            if not parts:
+                return False
+            return any(s.is_committed(event_id) for s in parts)
+
+    def lag(self, workflow: str) -> int:
+        with self._lock:
+            parts = self._parts.get(workflow)
+            return sum(s.lag() for s in parts) if parts else 0
+
+    def to_dlq(self, workflow: str, event: CloudEvent) -> None:
+        with self._lock:
+            self._shards(workflow)[self.partition_for(event.subject)].to_dlq(event)
+
+    def redrive(self, workflow: str) -> int:
+        return self.redrive_partitions(workflow, range(self.num_partitions))
+
+    def dlq_size(self, workflow: str) -> int:
+        return self.dlq_size_partitions(workflow, range(self.num_partitions))
+
+    def workflows(self) -> List[str]:
+        with self._lock:
+            return list(self._parts.keys())
+
+    def committed_events(self, workflow: str) -> List[CloudEvent]:
+        """Committed events, per-partition commit order, concatenated by
+        partition index (cross-partition order is unspecified)."""
+        with self._lock:
+            parts = self._parts.get(workflow)
+            if not parts:
+                return []
+            out: List[CloudEvent] = []
+            for s in parts:
+                out.extend(s.committed_events())
+            return out
+
+    # -- partition-scoped consumer API (the consumer-group fast path) ----------
+    def consume_partition(
+        self, workflow: str, partition: int, max_events: int = 512
+    ) -> List[CloudEvent]:
+        with self._lock:
+            parts = self._parts.get(workflow)
+            return parts[partition].consume(max_events) if parts else []
+
+    def consume_partitions(
+        self, workflow: str, partitions: Iterable[int], max_events: int = 512
+    ) -> List[CloudEvent]:
+        """Up to ``max_events`` uncommitted events from the given partitions,
+        preserving arrival order *within* each partition."""
+        with self._lock:
+            parts = self._parts.get(workflow)
+            if not parts:
+                return []
+            out: List[CloudEvent] = []
+            budget = max_events
+            for p in partitions:
+                if budget <= 0:
+                    break
+                got = parts[p].consume(budget)
+                out.extend(got)
+                budget -= len(got)
+            return out
+
+    def commit_partitions(
+        self, workflow: str, partitions: Iterable[int], event_ids: Iterable[str]
+    ) -> int:
+        ids = set(event_ids)
+        if not ids:
+            return 0
+        with self._lock:
+            parts = self._parts.get(workflow)
+            if not parts:
+                return 0
+            # Two-phase: in-order prefix pops per partition cover the whole
+            # batch in the common case; only unmatched ids (events skipped
+            # mid-stream) pay the per-partition scan.
+            n = 0
+            want = len(ids)
+            partitions = list(partitions)
+            for p in partitions:
+                n += parts[p].commit_prefix(ids)
+                if n == want:
+                    return n
+            for p in partitions:
+                n += parts[p].commit_scan(ids)
+                if n == want:
+                    break
+            return n
+
+    def partition_lags(self, workflow: str) -> List[int]:
+        """Per-partition lag vector — the autoscaler's scaling signal."""
+        with self._lock:
+            parts = self._parts.get(workflow)
+            if not parts:
+                return [0] * self.num_partitions
+            return [s.lag() for s in parts]
+
+    def lag_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
+        with self._lock:
+            parts = self._parts.get(workflow)
+            return sum(parts[p].lag() for p in partitions) if parts else 0
+
+    def commit_offsets(self, workflow: str) -> List[int]:
+        """Per-partition committed-event counts (isolated commit offsets)."""
+        with self._lock:
+            parts = self._parts.get(workflow)
+            if not parts:
+                return [0] * self.num_partitions
+            return [s.commit_offset() for s in parts]
+
+    def dlq_size_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
+        with self._lock:
+            parts = self._parts.get(workflow)
+            return sum(parts[p].dlq_size() for p in partitions) if parts else 0
+
+    def redrive_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
+        with self._lock:
+            parts = self._parts.get(workflow)
+            return sum(parts[p].redrive() for p in partitions) if parts else 0

@@ -1,0 +1,598 @@
+"""Sharded TF-Worker pool over a partitioned event bus.
+
+One workflow is served by N ``ShardWorker`` shards.  A ``ConsumerGroup``
+assigns each shard a disjoint partition subset; shards consume, activate and
+fire triggers exactly like the classic single ``TFWorker`` (they *are*
+TFWorkers), but only over their own partitions.  Because the default router
+keys partitions by event subject, a trigger's causally-related events land on
+one shard and its context is never contended across shards.
+
+Rebalance semantics (join/leave/crash) follow Kafka: a partition always
+restarts from its committed offset, so on any assignment change a shard
+resets its volatile state to the last checkpoint (``rebalance_reset``) and
+uncommitted events are simply redelivered — the same at-least-once replay
+path the paper uses for crash recovery (§3.4).
+
+Sharding constraint: trigger *contexts* live with the shard that owns the
+trigger's subject partition and are not synchronized across shards.
+Cross-trigger introspection (Def. 5 — e.g. a Map action setting the
+downstream join trigger's ``expected``) therefore requires the involved
+subjects to share a partition; route them together with a custom
+``partitioner`` on the ``PartitionedEventStore`` (e.g. hash on a workflow
+stage prefix).  Cross-shard context routing is future work.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+from ..core.actions import ACTIONS, run_action, run_condition
+from ..core.conditions import CONDITIONS
+from ..core.eventstore import EventStore
+from ..core.functions import FunctionBackend
+from ..core.statestore import StateStore
+from ..core.triggers import Trigger
+from ..core.worker import TFWorker
+from .group import ConsumerGroup
+
+
+class ShardWorker(TFWorker):
+    """A TF-Worker that owns an exclusive partition subset of one workflow.
+
+    Beyond the partition plumbing it carries a *compiled dispatch table*: for
+    each subject, the condition/action registry lookups and the trigger's
+    context are resolved once and cached, so the per-event path is two plain
+    function calls.  The table is invalidated whenever trigger structure
+    changes (add/intercept/rebalance) — ``enabled`` is still read live so
+    transient deactivation and DLQ quarantine keep exact TFWorker semantics.
+    """
+
+    def __init__(self, member: str, *args, **kwargs) -> None:
+        self.member = member
+        self._dispatch: Dict[str, list] = {}
+        super().__init__(*args, **kwargs)
+
+    # -- compiled dispatch ------------------------------------------------------
+    def _invalidate_dispatch(self) -> None:
+        # Clear in place: run_once holds a local alias across a batch, and a
+        # dynamic trigger added mid-batch must be visible to the next event.
+        self._dispatch.clear()
+
+    def add_trigger(self, trg: Trigger, persist: bool = True) -> str:
+        tid = super().add_trigger(trg, persist=persist)
+        self._invalidate_dispatch()
+        return tid
+
+    def intercept(self, trigger_id: str, interceptor_action: Dict[str, Any]) -> None:
+        super().intercept(trigger_id, interceptor_action)
+        self._invalidate_dispatch()
+
+    def _compile(self, subject: str) -> list:
+        entries = []
+        for trg in self._by_subject.get(subject, ()):
+            cond, act = trg.condition, trg.action
+            cfn = CONDITIONS.get(cond["name"]) or (
+                lambda c, e, s: run_condition(s, c, e))  # raise like generic path
+            afn = ACTIONS.get(act["name"]) or (
+                lambda c, e, s: run_action(s, c, e))
+            entries.append(
+                (trg, trg.trigger_id, cfn, cond, afn, act, self.context_of(trg.trigger_id)))
+        self._dispatch[subject] = entries
+        return entries
+
+    def rebalance_reset(self) -> None:
+        """Reset volatile state to the last checkpoint.
+
+        Called (with ``self.lock`` held by the pool) whenever this shard's
+        partition assignment changes.  Processed-but-uncommitted events are
+        still pending in the store and will be redelivered — replaying them
+        over the checkpointed contexts is exactly the §3.4 crash-recovery
+        contract, applied at rebalance points.
+        """
+        self._seen.clear()
+        self._sink.clear()
+        specs = self.state_store.get_triggers(self.workflow)
+        ckpt = self.state_store.get_contexts(self.workflow)
+        for tid, trg in self.triggers.items():
+            base = specs.get(tid, {}).get("context", trg.context)
+            trg.context = dict(ckpt.get(tid, base))
+        self._contexts.clear()
+        self._invalidate_dispatch()  # cached entries hold the old contexts
+
+    def run_once(self, max_events: Optional[int] = None) -> int:
+        """Tightened exclusive-owner batch loop.
+
+        Semantically identical to ``TFWorker.run_once`` with the per-event
+        committed check elided (exclusive partition ownership) and the
+        compiled dispatch inlined; stats are accumulated in locals and
+        flushed once per batch.  This loop is the events/s figure of merit
+        for the Table-1-style sharded load test — hence the hand-rolled
+        style.
+        """
+        with self.lock:
+            batch = self.event_store.consume_partitions(
+                self.workflow, self.partitions, max_events or self.batch_size)
+            sink = self._sink
+            if not batch and not sink:
+                return 0
+            seen = self._seen
+            seen_add = seen.add
+            seen_discard = seen.discard
+            event_log = self.event_log if self.keep_event_log else None
+            dispatch = self._dispatch
+            compile_subject = self._compile
+            to_dlq = self.event_store.to_dlq
+            workflow = self.workflow
+            processed_ids: List[str] = []
+            append_id = processed_ids.append
+            fired_any = False
+            n_processed = n_activations = n_fires = n_dlq = 0
+            queue = list(batch)
+            i = 0
+            while i < len(queue):
+                event = queue[i]
+                i += 1
+                eid = event.id
+                if eid in seen:
+                    continue  # at-least-once dedup (§3.4)
+                seen_add(eid)
+                if event_log is not None:
+                    event_log.append(event)
+                n_processed += 1
+                entries = dispatch.get(event.subject)
+                if entries is None:
+                    entries = compile_subject(event.subject)
+                if not entries:
+                    n_dlq += 1  # unknown subject: count + drop
+                    append_id(eid)
+                    continue
+                any_enabled = False
+                etype = event.type
+                for trg, tid, cfn, cspec, afn, aspec, ctx in entries:
+                    if not trg.enabled:
+                        continue
+                    tt = trg.event_type
+                    if tt and tt != etype:
+                        continue
+                    any_enabled = True
+                    n_activations += 1
+                    try:
+                        ok = cfn(ctx, event, cspec)
+                    except Exception:  # noqa: BLE001
+                        traceback.print_exc()
+                        ok = False
+                    if ok:
+                        try:
+                            afn(ctx, event, aspec)
+                        except Exception:  # noqa: BLE001
+                            traceback.print_exc()
+                        n_fires += 1
+                        fired_any = True
+                        if trg.transient:
+                            trg.enabled = False
+                            self._trigger_state_dirty = True
+                if any_enabled:
+                    append_id(eid)
+                else:
+                    # All candidates disabled → out-of-order event → DLQ (§3.4).
+                    to_dlq(workflow, event)
+                    seen_discard(eid)
+                    n_dlq += 1
+                if sink:
+                    # §5.2 same-batch drain, restricted to events routed to
+                    # this shard's own partitions (foreign-partition events
+                    # are consumed by their owner; inline processing here
+                    # would double-fire them).
+                    queue.extend(self._own_sink_events())
+                    sink.clear()
+            stats = self.stats
+            stats.events_processed += n_processed
+            stats.activations += n_activations
+            stats.fires += n_fires
+            stats.dlq_events += n_dlq
+            stats.batches += 1
+            if processed_ids:
+                self.last_active = time.monotonic()
+            if fired_any or (self.commit_policy == "every_batch" and processed_ids):
+                self._checkpoint(processed_ids)
+                if fired_any and self._dlq_size():
+                    self._redrive()
+            return len(processed_ids)
+
+
+class _Runner(threading.Thread):
+    """One runner thread multiplexing several shard *tasks* (Kafka-Streams
+    style: task count — shards — is decoupled from thread count, so scaling
+    shards past the core count doesn't buy GIL churn).
+
+    A shard leaves its runner when it is stopped, finishes its workflow,
+    idles past ``idle_timeout`` (KEDA-style scale-down), or its batch raises;
+    the runner exits once it owns no shards.  ``ShardedWorkerPool.reap``
+    turns departures into consumer-group leaves."""
+
+    def __init__(self, name: str, idle_timeout: Optional[float], poll: float) -> None:
+        super().__init__(name=name, daemon=True)
+        self.workers: Dict[str, ShardWorker] = {}
+        self.idle_timeout = idle_timeout
+        self.poll = poll
+        self.closing = False
+        self._close_lock = threading.Lock()
+
+    def add(self, member: str, worker: ShardWorker) -> bool:
+        """Hand a shard task to this runner.  Returns False if the runner is
+        on its way out (its loop saw an empty task set) — the caller must pick
+        another runner, or the shard would never be scheduled."""
+        with self._close_lock:
+            if self.closing:
+                return False
+            worker.last_active = time.monotonic()
+            self.workers[member] = worker
+            return True
+
+    def run(self) -> None:
+        while True:
+            n = 0
+            for member, w in list(self.workers.items()):
+                if w._stop.is_set() or w.finished:
+                    self.workers.pop(member, None)
+                    continue
+                try:
+                    n += w.run_once()
+                except Exception:  # noqa: BLE001 - a broken shard must not kill siblings
+                    traceback.print_exc()
+                    self.workers.pop(member, None)
+                    continue
+                if self.idle_timeout is not None and \
+                        time.monotonic() - w.last_active > self.idle_timeout:
+                    self.workers.pop(member, None)
+            if not self.workers:
+                with self._close_lock:
+                    if not self.workers:  # nothing raced in: commit to exit
+                        self.closing = True
+                        return
+            elif n == 0:
+                time.sleep(self.poll)
+
+
+class _WorkflowShards:
+    __slots__ = ("group", "shards", "runner_of", "next_id")
+
+    def __init__(self, num_partitions: int) -> None:
+        self.group = ConsumerGroup(num_partitions)
+        self.shards: Dict[str, ShardWorker] = {}
+        self.runner_of: Dict[str, _Runner] = {}
+        self.next_id = 0
+
+
+class ShardedWorkerPool:
+    """Runs N TF-Worker shards per workflow over a ``PartitionedEventStore``."""
+
+    def __init__(
+        self,
+        event_store: EventStore,
+        state_store: StateStore,
+        backend: FunctionBackend,
+        timers=None,
+        commit_policy: str = "on_fire",
+        batch_size: int = 512,
+        keep_event_log: bool = True,
+    ) -> None:
+        if not hasattr(event_store, "consume_partitions"):
+            raise TypeError(
+                "ShardedWorkerPool needs a partitioned event store "
+                "(missing consume_partitions); got %r" % type(event_store).__name__)
+        self.event_store = event_store
+        self.state_store = state_store
+        self.backend = backend
+        self.timers = timers
+        self.commit_policy = commit_policy
+        self.batch_size = batch_size
+        self.keep_event_log = keep_event_log
+        self._lock = threading.RLock()
+        self._wfs: Dict[str, _WorkflowShards] = {}
+
+    # -- membership ------------------------------------------------------------
+    def _wf(self, workflow: str) -> _WorkflowShards:
+        wp = self._wfs.get(workflow)
+        if wp is None:
+            wp = self._wfs.setdefault(
+                workflow, _WorkflowShards(self.event_store.num_partitions))
+        return wp
+
+    def shard_ids(self, workflow: str) -> List[str]:
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            return list(wp.shards.keys()) if wp else []
+
+    def shard_count(self, workflow: str) -> int:
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            return len(wp.shards) if wp else 0
+
+    def live_shard_count(self, workflow: str) -> int:
+        """Shards currently owned by a live runner thread (threaded mode)."""
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None:
+                return 0
+            return sum(
+                1 for m, r in wp.runner_of.items()
+                if r.is_alive() and m in r.workers
+            )
+
+    def add_shard(self, workflow: str) -> str:
+        with self._lock:
+            wp = self._wf(workflow)
+            member = f"shard-{wp.next_id}"
+            wp.next_id += 1
+            worker = ShardWorker(
+                member,
+                workflow,
+                self.event_store,
+                self.state_store,
+                self.backend,
+                batch_size=self.batch_size,
+                commit_policy=self.commit_policy,
+                keep_event_log=self.keep_event_log,
+                timers=self.timers,
+                partitions=(),
+            )
+            wp.shards[member] = worker
+            wp.group.join(member)
+            self._rebalance(wp)
+            return member
+
+    def _retire(self, wp: _WorkflowShards, member: str) -> None:
+        """Drop ``member`` and hand its partitions to the rest.  The victim's
+        lock is taken once before rebalancing: an in-flight batch on a runner
+        thread finishes (and commits/checkpoints) first, so a 'zombie' shard
+        can never fire or commit concurrently with the new partition owner."""
+        worker = wp.shards.pop(member)
+        worker._stop.set()
+        runner = wp.runner_of.pop(member, None)
+        if runner is not None:
+            runner.workers.pop(member, None)
+        with worker.lock:  # fence: wait out any in-flight batch
+            pass
+        wp.group.leave(member)
+        self._rebalance(wp)
+
+    def remove_shard(self, workflow: str, member: str) -> None:
+        """Graceful leave: stop the shard, hand its partitions to the rest."""
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is not None and member in wp.shards:
+                self._retire(wp, member)
+
+    def crash_shard(self, workflow: str, member: str) -> None:
+        """Simulate a shard crash: drop it with NO further checkpoint/commit.
+        Its uncommitted events stay pending and are redelivered to the shards
+        the group reassigns those partitions to.  (In-process we cannot kill a
+        thread mid-batch, so the crash takes effect at a batch boundary.)"""
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is not None and member in wp.shards:
+                self._retire(wp, member)
+
+    def _rebalance(self, wp: _WorkflowShards) -> None:
+        assignment = wp.group.assignment()
+        for member, worker in wp.shards.items():
+            parts = tuple(assignment.get(member, ()))
+            with worker.lock:
+                if worker.partitions != parts:
+                    worker.partitions = parts
+                    worker.rebalance_reset()
+
+    def set_shard_count(self, workflow: str, count: int) -> List[str]:
+        """Add/remove (drive-mode) shards to reach ``count``; returns ids."""
+        with self._lock:
+            while self.shard_count(workflow) < count:
+                self.add_shard(workflow)
+            wp = self._wfs.get(workflow)
+            while wp is not None and len(wp.shards) > count:
+                self.remove_shard(workflow, next(reversed(wp.shards)))
+            return self.shard_ids(workflow)
+
+    # -- threaded mode (autoscaler / benchmarks) --------------------------------
+    def start_shards(
+        self,
+        workflow: str,
+        count: int,
+        idle_timeout: Optional[float] = None,
+        poll: float = 0.002,
+        max_threads: Optional[int] = None,
+    ) -> List[str]:
+        """Ensure ``count`` shard tasks exist and are scheduled on runner
+        threads.  At most ``max_threads`` (default: core count) runners serve
+        a workflow — shards are *tasks*, threads are execution slots."""
+        with self._lock:
+            if self.shard_count(workflow) < count:
+                for _ in range(count - self.shard_count(workflow)):
+                    self.add_shard(workflow)
+            wp = self._wf(workflow)
+            cap = max(1, max_threads or os.cpu_count() or 2)
+            unassigned = []
+            for member, worker in wp.shards.items():
+                runner = wp.runner_of.get(member)
+                if runner is not None and runner.is_alive() \
+                        and not runner.closing and member in runner.workers:
+                    continue
+                worker._stop.clear()
+                unassigned.append(member)
+            if unassigned:
+                slots = [r for r in set(wp.runner_of.values())
+                         if r.is_alive() and not r.closing]
+                fresh = [
+                    _Runner(f"tf-{workflow}-runner-{wp.next_id}-{i}",
+                            idle_timeout, poll)
+                    for i in range(min(cap - len(slots), len(unassigned)))
+                ]
+                slots += fresh
+                if not slots:
+                    fresh = [_Runner(f"tf-{workflow}-runner-{wp.next_id}-x",
+                                     idle_timeout, poll)]
+                    slots = list(fresh)
+                for i, member in enumerate(unassigned):
+                    runner = slots[i % len(slots)]
+                    if not runner.add(member, wp.shards[member]):
+                        # runner committed to exit between the liveness check
+                        # and the add — replace the slot with a fresh runner
+                        runner = _Runner(
+                            f"tf-{workflow}-runner-{wp.next_id}-r{i}",
+                            idle_timeout, poll)
+                        fresh.append(runner)
+                        slots[i % len(slots)] = runner
+                        runner.add(member, wp.shards[member])
+                    wp.runner_of[member] = runner
+                for r in fresh:
+                    r.start()
+            return list(wp.shards.keys())
+
+    def reap(self, workflow: str) -> Dict[str, int]:
+        """Remove shards that left their runner (idle scale-down, workflow
+        end, crash, or runner death).  Returns {"reaped": n, "crashed": m}
+        for the autoscaler's accounting."""
+        reaped = crashed = 0
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None:
+                return {"reaped": 0, "crashed": 0}
+            for member, runner in list(wp.runner_of.items()):
+                if runner.is_alive() and member in runner.workers:
+                    continue
+                wp.runner_of.pop(member, None)
+                worker = wp.shards.pop(member, None)
+                wp.group.leave(member)
+                reaped += 1
+                if worker is not None and not worker._stop.is_set() \
+                        and not worker.finished \
+                        and self.event_store.lag_partitions(
+                            workflow, worker.partitions) > 0:
+                    crashed += 1
+            if reaped:
+                self._rebalance(wp)
+        return {"reaped": reaped, "crashed": crashed}
+
+    def stop(self, workflow: str) -> None:
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None:
+                return
+            for worker in wp.shards.values():
+                worker.stop()
+            runners = list(set(wp.runner_of.values()))
+        for r in runners:
+            r.join(timeout=2.0)
+
+    def stop_all(self) -> None:
+        for wf in list(self._wfs.keys()):
+            self.stop(wf)
+
+    # -- deterministic drive mode (tests, benchmarks) ---------------------------
+    def run_shard_once(
+        self, workflow: str, member: str, max_events: Optional[int] = None
+    ) -> int:
+        with self._lock:
+            worker = self._wf(workflow).shards[member]
+        return worker.run_once(max_events)
+
+    def drive(self, workflow: str, timeout: float = 30.0, poll: float = 0.0005) -> Any:
+        """Round-robin every shard until the stream drains (or the workflow
+        sets a result).  Single-threaded and deterministic."""
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                shards = list(self._wf(workflow).shards.values())
+            n = 0
+            for worker in shards:
+                if worker.finished:
+                    return worker.result
+                n += worker.run_once()
+            if n == 0:
+                if self.event_store.lag(workflow) == 0:
+                    return None
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"workflow {workflow} did not drain")
+                time.sleep(poll)
+
+    # -- trigger management (broadcast to every shard) --------------------------
+    def add_trigger(self, workflow: str, trigger: Trigger) -> str:
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None or not wp.shards:
+                self.state_store.put_trigger(
+                    workflow, trigger.trigger_id, trigger.to_dict())
+                return trigger.trigger_id
+            first = True
+            for worker in wp.shards.values():
+                worker.add_trigger(trigger, persist=first)
+                first = False
+            return trigger.trigger_id
+
+    def set_trigger_enabled(self, workflow: str, trigger_id: str, enabled: bool) -> None:
+        """Broadcast the enable/disable to every shard.  Re-enabling also
+        redrives the DLQ of the trigger's subject partitions (§3.4: events
+        quarantined while the trigger was disabled become deliverable the
+        moment its state changes)."""
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None:
+                return
+            subjects: List[str] = []
+            for worker in wp.shards.values():
+                trg = worker.triggers.get(trigger_id)
+                if trg is not None:
+                    worker.set_trigger_enabled(trigger_id, enabled)
+                    subjects = trg.activation_events
+            if enabled and subjects:
+                parts = {self.event_store.partition_for(s) for s in subjects}
+                self.event_store.redrive_partitions(workflow, parts)
+
+    def trigger_context(self, workflow: str, trigger_id: str) -> Dict[str, Any]:
+        """Context as seen by the shard that owns the trigger's subject."""
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None:
+                return {}
+            for worker in wp.shards.values():
+                trg = worker.triggers.get(trigger_id)
+                if trg is None or not trg.activation_events:
+                    continue
+                p = self.event_store.partition_for(trg.activation_events[0])
+                if worker.partitions and p in worker.partitions:
+                    return dict(worker.context_of(trigger_id))
+            return {}
+
+    # -- metrics (the autoscaler's and benchmark's observability surface) -------
+    def total_events_processed(self, workflow: str) -> int:
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None:
+                return 0
+            return sum(w.stats.events_processed for w in wp.shards.values())
+
+    def total_fires(self, workflow: str) -> int:
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None:
+                return 0
+            return sum(w.stats.fires for w in wp.shards.values())
+
+    def metrics(self, workflow: str) -> Dict[str, Any]:
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            shards = dict(wp.shards) if wp else {}
+            return {
+                "shards": len(shards),
+                "live_shards": self.live_shard_count(workflow),
+                "generation": wp.group.generation if wp else 0,
+                "assignment": {m: list(w.partitions or ()) for m, w in shards.items()},
+                "partition_lags": self.event_store.partition_lags(workflow),
+                "commit_offsets": self.event_store.commit_offsets(workflow),
+                "events_processed": {
+                    m: w.stats.events_processed for m, w in shards.items()},
+                "total_lag": self.event_store.lag(workflow),
+            }

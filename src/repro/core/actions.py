@@ -120,6 +120,19 @@ def run_action(spec: Dict[str, Any], ctx, event: CloudEvent) -> None:
 
 
 def run_condition(spec: Dict[str, Any], ctx, event: CloudEvent) -> bool:
-    from .conditions import CONDITIONS
+    return _CONDITIONS()[spec["name"]](ctx, event, spec)
 
-    return CONDITIONS[spec["name"]](ctx, event, spec)
+
+_conditions_registry = None
+
+
+def _CONDITIONS():
+    # conditions.py imports nothing from here, but resolve lazily-once anyway
+    # to keep import order flexible; the per-call import this replaces showed
+    # up as ~5% of the worker hot loop.
+    global _conditions_registry
+    if _conditions_registry is None:
+        from .conditions import CONDITIONS as reg
+
+        _conditions_registry = reg
+    return _conditions_registry

@@ -1,17 +1,29 @@
 """KEDA-style event-driven autoscaler (paper §4.2, Fig. 8).
 
 Control loop: poll per-workflow queue *lag* (uncommitted events — exactly the
-metric KEDA's Kafka scaler uses).  ``lag > 0`` and no live worker → provision
-a TF-Worker (scale 0→1).  A worker that has been idle longer than the grace
+metric KEDA's Kafka scaler uses).
+
+Classic mode (unpartitioned store): ``lag > 0`` and no live worker →
+provision a TF-Worker (scale 0→1).  A worker idle longer than the grace
 period exits and is reaped (scale →0).  Crashed workers are restarted
-(deployment fault tolerance, §4.1/§4.2) and recover their state from the
-stores + uncommitted events.
+(deployment fault tolerance, §4.1/§4.2) and recover from the stores +
+uncommitted events.
+
+Sharded mode (``Triggerflow`` built over a ``repro.bus`` partitioned store):
+the target is *lag-proportional* — ``ceil(lag / events_per_shard)`` worker
+shards, capped by ``max_shards_per_workflow`` and the partition count (a
+shard without a partition has nothing to consume).  Scale-up starts new
+shards (the consumer group rebalances partitions onto them); scale-down is
+still idle-driven: shards exit after the grace period and are reaped, so a
+drained workflow decays back to zero shards.
 
 The autoscaler records a ``timeline`` of (t, active_workers, total_lag)
-samples — the data behind the Fig. 8 reproduction.
+samples — the data behind the Fig. 8 reproduction (active_workers counts
+*shards* in sharded mode).
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from typing import Dict, List, Optional, Tuple
@@ -26,11 +38,15 @@ class KedaAutoscaler:
         poll_interval: float = 0.05,
         grace_period: float = 0.5,
         max_workers: int = 64,
+        events_per_shard: int = 1000,
+        max_shards_per_workflow: int = 8,
     ) -> None:
         self.tf = tf
         self.poll_interval = poll_interval
         self.grace_period = grace_period
         self.max_workers = max_workers
+        self.events_per_shard = max(1, events_per_shard)
+        self.max_shards_per_workflow = max(1, max_shards_per_workflow)
         self.timeline: List[Tuple[float, int, int]] = []
         self.scale_ups = 0
         self.scale_downs = 0
@@ -42,6 +58,9 @@ class KedaAutoscaler:
 
     # -- control loop -------------------------------------------------------------
     def _tick(self) -> None:
+        if self.tf.pool is not None:
+            self._tick_sharded()
+            return
         lags = {wf: self.tf.event_store.lag(wf) for wf in self.tf.event_store.workflows()}
         # Reap exited workers (idle scale-down or crash).
         for wf, th in list(self._live.items()):
@@ -68,6 +87,48 @@ class KedaAutoscaler:
             (time.monotonic() - self._t0, len(self._live), sum(lags.values()))
         )
 
+    def target_shards(self, lag: int) -> int:
+        """Lag-proportional shard target (0 when the stream is drained)."""
+        if lag <= 0:
+            return 0
+        return min(
+            self.max_shards_per_workflow,
+            self.tf.event_store.num_partitions,
+            math.ceil(lag / self.events_per_shard),
+        )
+
+    def _tick_sharded(self) -> None:
+        pool = self.tf.pool
+        store = self.tf.event_store
+        workflows = store.workflows()
+        lags: Dict[str, int] = {}
+        lives: Dict[str, int] = {}
+        for wf in workflows:
+            reaped = pool.reap(wf)
+            self.scale_downs += reaped["reaped"]
+            self.restarts += reaped["crashed"]
+            lags[wf] = store.lag(wf)
+            lives[wf] = pool.live_shard_count(wf)
+        # max_workers caps the *total* shard count across workflows, so the
+        # budget must see every workflow's live shards, not just the ones
+        # iterated so far.
+        total_live = sum(lives.values())
+        for wf in workflows:
+            meta = self.tf.state_store.get_workflow(wf) or {}
+            if meta.get("status") in ("succeeded", "failed"):
+                continue
+            live = lives[wf]
+            target = self.target_shards(lags[wf])
+            budget = self.max_workers - total_live
+            if target > live and budget > 0:
+                want = min(target, live + budget)
+                pool.start_shards(wf, want, idle_timeout=self.grace_period)
+                self.scale_ups += want - live
+                lives[wf] = pool.live_shard_count(wf)
+                total_live += lives[wf] - live
+        self.timeline.append(
+            (time.monotonic() - self._t0, sum(lives.values()), sum(lags.values())))
+
     def run(self) -> None:
         while not self._stop.is_set():
             self._tick()
@@ -86,4 +147,8 @@ class KedaAutoscaler:
 
     @property
     def active_workers(self) -> int:
-        return len([th for th in self._live.values() if th.is_alive()])
+        n = len([th for th in self._live.values() if th.is_alive()])
+        if self.tf.pool is not None:
+            for wf in self.tf.event_store.workflows():
+                n += self.tf.pool.live_shard_count(wf)
+        return n

@@ -20,9 +20,118 @@ import json
 import os
 import threading
 from collections import deque
+from itertools import islice
 from typing import Dict, Iterable, List, Optional
 
 from .events import CloudEvent
+
+
+class StreamShard:
+    """One totally-ordered stream: the commit/DLQ primitive.
+
+    This is the unit both ``MemoryEventStore`` (one shard per workflow) and
+    ``repro.bus.PartitionedEventStore`` (one shard per workflow *partition*)
+    are built from.  Not thread-safe on its own — the owning store serializes
+    access.
+
+    * ``pending`` — FIFO of uncommitted events; ``consume`` peeks without
+      removing (at-least-once: events stay until committed).
+    * ``commit`` — removes events and records them in commit order.  Because
+      consumers process the stream in order, committing an in-order prefix is
+      the common case and costs O(batch); out-of-order commit (events skipped
+      into the DLQ mid-batch) falls back to a scan.
+    * ``dlq`` — quarantine for events whose trigger is disabled (§3.4);
+      ``redrive`` re-appends them to the stream.
+    """
+
+    __slots__ = ("pending", "pending_ids", "committed", "dlq")
+
+    def __init__(self) -> None:
+        self.pending: deque = deque()
+        self.pending_ids: set = set()
+        self.committed: Dict[str, CloudEvent] = {}  # insertion = commit order
+        self.dlq: deque = deque()
+
+    def publish(self, events: Iterable[CloudEvent]) -> None:
+        events = list(events)
+        self.pending.extend(events)
+        self.pending_ids.update(e.id for e in events)
+
+    def consume(self, max_events: int) -> List[CloudEvent]:
+        if len(self.pending) <= max_events:
+            return list(self.pending)
+        return list(islice(self.pending, max_events))
+
+    def commit_prefix(self, event_ids: set) -> int:
+        """Commit the in-order head of the stream that is in ``event_ids``.
+        O(committed) — the common case, since consumers process in order."""
+        q = self.pending
+        committed = self.committed
+        pids = self.pending_ids
+        n = 0
+        while q and q[0].id in event_ids:
+            e = q.popleft()
+            pids.discard(e.id)
+            committed[e.id] = e
+            n += 1
+        return n
+
+    def commit_scan(self, event_ids: set) -> int:
+        """Commit out-of-order ids (events skipped mid-stream, e.g. after a
+        DLQ quarantine).  O(pending) — the rare fallback."""
+        leftover = event_ids & self.pending_ids
+        if not leftover:
+            return 0
+        n = 0
+        keep: deque = deque()
+        committed = self.committed
+        pids = self.pending_ids
+        for e in self.pending:
+            if e.id in leftover:
+                pids.discard(e.id)
+                committed[e.id] = e
+                n += 1
+            else:
+                keep.append(e)
+        self.pending = keep
+        return n
+
+    def commit(self, event_ids: set) -> int:
+        """Commit the given ids (ids not pending in this shard are ignored).
+        Returns the number of events actually committed here."""
+        n = self.commit_prefix(event_ids)
+        if n < len(event_ids):
+            n += self.commit_scan(event_ids)
+        return n
+
+    def is_committed(self, event_id: str) -> bool:
+        return event_id in self.committed
+
+    def lag(self) -> int:
+        return len(self.pending)
+
+    def commit_offset(self) -> int:
+        """Monotone per-shard commit offset (Kafka-consumer-group analogue)."""
+        return len(self.committed)
+
+    def to_dlq(self, event: CloudEvent) -> None:
+        self.dlq.append(event)
+        if event.id in self.pending_ids:
+            self.pending_ids.discard(event.id)
+            self.pending = deque(e for e in self.pending if e.id != event.id)
+
+    def redrive(self) -> int:
+        n = len(self.dlq)
+        if n:
+            self.publish(self.dlq)
+            self.dlq.clear()
+        return n
+
+    def dlq_size(self) -> int:
+        return len(self.dlq)
+
+    def committed_events(self) -> List[CloudEvent]:
+        return list(self.committed.values())
 
 
 class EventStore:
@@ -71,86 +180,74 @@ class EventStore:
 
 
 class MemoryEventStore(EventStore):
+    """One ``StreamShard`` per workflow (the unpartitioned fast path)."""
+
     def __init__(self) -> None:
         self._lock = threading.RLock()
-        self._pending: Dict[str, deque] = {}
-        self._committed: Dict[str, dict] = {}  # id -> CloudEvent, insertion ordered
-        self._dlq: Dict[str, deque] = {}
+        self._shards: Dict[str, StreamShard] = {}
+
+    def _shard(self, workflow: str) -> StreamShard:
+        s = self._shards.get(workflow)
+        if s is None:
+            s = self._shards.setdefault(workflow, StreamShard())
+        return s
 
     def create_stream(self, workflow: str) -> None:
         with self._lock:
-            self._pending.setdefault(workflow, deque())
-            self._committed.setdefault(workflow, {})
-            self._dlq.setdefault(workflow, deque())
+            self._shard(workflow)
 
     def publish(self, workflow: str, event: CloudEvent) -> None:
         with self._lock:
-            self._pending.setdefault(workflow, deque()).append(event)
+            self._shard(workflow).publish((event,))
 
     def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
         with self._lock:
-            self._pending.setdefault(workflow, deque()).extend(events)
+            self._shard(workflow).publish(events)
 
     def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
         with self._lock:
-            q = self._pending.get(workflow)
-            if not q:
-                return []
-            n = min(len(q), max_events)
-            return [q[i] for i in range(n)]
+            s = self._shards.get(workflow)
+            return s.consume(max_events) if s is not None else []
 
     def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
         ids = set(event_ids)
         if not ids:
             return
         with self._lock:
-            q = self._pending.get(workflow, deque())
-            committed = self._committed.setdefault(workflow, {})
-            keep = deque()
-            for e in q:
-                if e.id in ids:
-                    committed[e.id] = e
-                else:
-                    keep.append(e)
-            self._pending[workflow] = keep
+            self._shard(workflow).commit(ids)
 
     def is_committed(self, workflow: str, event_id: str) -> bool:
         with self._lock:
-            return event_id in self._committed.get(workflow, {})
+            s = self._shards.get(workflow)
+            return s.is_committed(event_id) if s is not None else False
 
     def lag(self, workflow: str) -> int:
         with self._lock:
-            q = self._pending.get(workflow)
-            return len(q) if q else 0
+            s = self._shards.get(workflow)
+            return s.lag() if s is not None else 0
 
     def to_dlq(self, workflow: str, event: CloudEvent) -> None:
         with self._lock:
-            self._dlq.setdefault(workflow, deque()).append(event)
-            q = self._pending.get(workflow)
-            if q:
-                self._pending[workflow] = deque(e for e in q if e.id != event.id)
+            self._shard(workflow).to_dlq(event)
 
     def redrive(self, workflow: str) -> int:
         with self._lock:
-            dlq = self._dlq.get(workflow)
-            if not dlq:
-                return 0
-            n = len(dlq)
-            self._pending.setdefault(workflow, deque()).extend(dlq)
-            dlq.clear()
-            return n
+            s = self._shards.get(workflow)
+            return s.redrive() if s is not None else 0
 
     def dlq_size(self, workflow: str) -> int:
         with self._lock:
-            return len(self._dlq.get(workflow, ()))
+            s = self._shards.get(workflow)
+            return s.dlq_size() if s is not None else 0
 
     def workflows(self) -> List[str]:
         with self._lock:
-            return list(self._pending.keys())
+            return list(self._shards.keys())
 
     def committed_events(self, workflow: str) -> List[CloudEvent]:
         with self._lock:
-            return list(self._committed.get(workflow, {}).values())
+            s = self._shards.get(workflow)
+            return s.committed_events() if s is not None else []
 
 
 class FileEventStore(EventStore):

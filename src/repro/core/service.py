@@ -26,15 +26,34 @@ class Triggerflow:
         backend: Optional[FunctionBackend] = None,
         inline_functions: bool = False,
         commit_policy: str = "on_fire",
+        num_partitions: Optional[int] = None,
+        num_shards: int = 1,
     ) -> None:
+        if event_store is None and (num_partitions is not None or num_shards > 1):
+            from ..bus import PartitionedEventStore
+
+            event_store = PartitionedEventStore(num_partitions or max(2 * num_shards, 8))
         self.event_store = event_store or MemoryEventStore()
         self.state_store = state_store or MemoryStateStore()
         self.backend = backend or FunctionBackend(self.event_store, inline=inline_functions)
         self.timers = TimerSource(self.event_store)
         self.commit_policy = commit_policy
+        self.num_shards = max(1, num_shards)
         self._workers: Dict[str, TFWorker] = {}
         self._threads: Dict[str, threading.Thread] = {}
         self._lock = threading.RLock()
+        # Sharded runtime rides on any partition-capable store (repro.bus).
+        self.pool = None
+        if hasattr(self.event_store, "consume_partitions"):
+            from ..bus import ShardedWorkerPool
+
+            self.pool = ShardedWorkerPool(
+                self.event_store,
+                self.state_store,
+                self.backend,
+                timers=self.timers,
+                commit_policy=self.commit_policy,
+            )
 
     # -- Fig. 1 API -----------------------------------------------------------
     def create_workflow(self, workflow: str, meta: Optional[Dict[str, Any]] = None) -> None:
@@ -48,7 +67,9 @@ class Triggerflow:
         worker = self._workers.get(workflow)
         ids = []
         for trg in triggers:
-            if worker is not None:
+            if self.pool is not None and self.pool.shard_count(workflow) > 0:
+                ids.append(self.pool.add_trigger(workflow, trg))
+            elif worker is not None:
                 ids.append(worker.add_trigger(trg))
             else:
                 self.state_store.put_trigger(workflow, trg.trigger_id, trg.to_dict())
@@ -63,6 +84,10 @@ class Triggerflow:
         return self.state_store.get_workflow(workflow)
 
     def get_trigger_context(self, workflow: str, trigger_id: str) -> Dict[str, Any]:
+        if self.pool is not None and self.pool.shard_count(workflow) > 0:
+            ctx = self.pool.trigger_context(workflow, trigger_id)
+            if ctx:
+                return ctx
         worker = self._workers.get(workflow)
         if worker is not None:
             return dict(worker.context_of(trigger_id))
@@ -97,7 +122,22 @@ class Triggerflow:
             raise ValueError("need trigger_id or condition_name")
 
     # -- worker lifecycle -----------------------------------------------------------
+    def start_shards(self, workflow: str, count: Optional[int] = None,
+                     idle_timeout: Optional[float] = None) -> List[str]:
+        """Run ``count`` worker shards (threads) for the workflow (repro.bus)."""
+        if self.pool is None:
+            raise RuntimeError("start_shards needs a partitioned event store "
+                               "(construct Triggerflow with num_shards/num_partitions)")
+        return self.pool.start_shards(workflow, count or self.num_shards,
+                                      idle_timeout=idle_timeout)
+
     def worker(self, workflow: str) -> TFWorker:
+        # Pool-backed mode: the workflow is served by shards; hand back the
+        # first one (they share trigger defs; contexts live with the shard
+        # owning the subject's partition — see get_trigger_context).
+        if self.pool is not None and self.pool.shard_count(workflow) > 0:
+            wp = self.pool._wf(workflow)
+            return next(iter(wp.shards.values()))
         with self._lock:
             w = self._workers.get(workflow)
             if w is None:
@@ -136,9 +176,13 @@ class Triggerflow:
         return th is not None and th.is_alive()
 
     def run_until_complete(self, workflow: str, timeout: float = 60.0) -> Any:
+        if self.pool is not None and self.pool.shard_count(workflow) > 0:
+            return self.pool.drive(workflow, timeout=timeout)
         return self.worker(workflow).run_until_complete(timeout=timeout)
 
     def shutdown(self) -> None:
+        if self.pool is not None:
+            self.pool.stop_all()
         for w in self._workers.values():
             w.stop()
         for th in self._threads.values():

@@ -23,7 +23,7 @@ from __future__ import annotations
 import threading
 import time
 import traceback
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 from .actions import run_action, run_condition
 from .context import TriggerContext
@@ -56,6 +56,7 @@ class TFWorker:
         commit_policy: str = "on_fire",  # "on_fire" (paper) | "every_batch"
         keep_event_log: bool = True,
         timers=None,
+        partitions: Optional[Iterable[int]] = None,
     ) -> None:
         self.workflow = workflow
         self.event_store = event_store
@@ -65,6 +66,14 @@ class TFWorker:
         self.batch_size = batch_size
         self.commit_policy = commit_policy
         self.keep_event_log = keep_event_log
+        # Assigned partition subset (consumer-group shard mode).  None means
+        # "the whole stream" (the classic single-worker deployment).  A shard
+        # *owns* its partitions exclusively, so consume() never races another
+        # consumer of the same events and per-event is_committed checks are
+        # unnecessary when the store only hands out uncommitted events.
+        self.partitions: Optional[tuple] = (
+            tuple(partitions) if partitions is not None else None
+        )
 
         self.lock = threading.RLock()
         self.triggers: Dict[str, Trigger] = {}
@@ -158,6 +167,46 @@ class TFWorker:
         meta.update({"status": (value or {}).get("status", "succeeded"), "result": value})
         self.state_store.put_workflow(self.workflow, meta)
 
+    # -- partition-aware store access --------------------------------------------
+    def _consume(self, max_events: int) -> List[CloudEvent]:
+        if self.partitions is not None:
+            return self.event_store.consume_partitions(
+                self.workflow, self.partitions, max_events)
+        return self.event_store.consume(self.workflow, max_events)
+
+    def _commit(self, event_ids: List[str]) -> None:
+        if self.partitions is not None:
+            self.event_store.commit_partitions(
+                self.workflow, self.partitions, event_ids)
+        else:
+            self.event_store.commit(self.workflow, event_ids)
+
+    def _own_sink_events(self) -> List[CloudEvent]:
+        """Sink events this worker may process inline.  ``sink()`` already
+        published every event to the store; a partition-restricted worker must
+        leave events routed to *another* shard's partition for their owner —
+        processing them here would double-fire (the owner consumes them too)
+        and this worker could never commit them anyway."""
+        if self.partitions is None:
+            return self._sink
+        part_for = getattr(self.event_store, "partition_for", None)
+        if part_for is None:
+            return self._sink
+        own = set(self.partitions)
+        return [e for e in self._sink if part_for(e.subject) in own]
+
+    def _dlq_size(self) -> int:
+        if self.partitions is not None:
+            return self.event_store.dlq_size_partitions(
+                self.workflow, self.partitions)
+        return self.event_store.dlq_size(self.workflow)
+
+    def _redrive(self) -> int:
+        if self.partitions is not None:
+            return self.event_store.redrive_partitions(
+                self.workflow, self.partitions)
+        return self.event_store.redrive(self.workflow)
+
     # -- the hot loop ---------------------------------------------------------------
     def _process_one(self, event: CloudEvent) -> bool:
         """Activate matching triggers for one event.  Returns True if any fired."""
@@ -203,9 +252,14 @@ class TFWorker:
     def run_once(self, max_events: Optional[int] = None) -> int:
         """Process one batch.  Returns number of events processed."""
         with self.lock:
-            batch = self.event_store.consume(self.workflow, max_events or self.batch_size)
+            batch = self._consume(max_events or self.batch_size)
             if not batch and not self._sink:
                 return 0
+            # Exclusive partition owners skip the per-event committed check:
+            # the group guarantees no other consumer commits their events, and
+            # the store only hands out uncommitted ones.
+            check_committed = self.partitions is None or not getattr(
+                self.event_store, "UNCOMMITTED_ONLY", False)
             processed_ids: List[str] = []
             fired_any = False
             queue = list(batch)
@@ -213,7 +267,10 @@ class TFWorker:
             while i < len(queue):
                 event = queue[i]
                 i += 1
-                if event.id in self._seen or self.event_store.is_committed(self.workflow, event.id):
+                if event.id in self._seen or (
+                    check_committed
+                    and self.event_store.is_committed(self.workflow, event.id)
+                ):
                     continue  # at-least-once dedup (§3.4)
                 self._seen.add(event.id)
                 if self.keep_event_log:
@@ -225,7 +282,7 @@ class TFWorker:
                     processed_ids.append(event.id)
                 # Drain internally-produced events in the same batch (§5.2).
                 if self._sink:
-                    queue.extend(self._sink)
+                    queue.extend(self._own_sink_events())
                     self._sink.clear()
             self.stats.batches += 1
             if processed_ids:
@@ -233,8 +290,8 @@ class TFWorker:
             # Checkpoint: contexts first, then commit (§3.4 ordering).
             if fired_any or (self.commit_policy == "every_batch" and processed_ids):
                 self._checkpoint(processed_ids)
-                if fired_any and self.event_store.dlq_size(self.workflow):
-                    n = self.event_store.redrive(self.workflow)
+                if fired_any and self._dlq_size():
+                    n = self._redrive()
                     if n:
                         # redriven events must be reprocessable
                         pass
@@ -250,7 +307,7 @@ class TFWorker:
             for tid, trg in self.triggers.items():
                 self.state_store.put_trigger(self.workflow, tid, trg.to_dict())
             self._trigger_state_dirty = False
-        self.event_store.commit(self.workflow, processed_ids)
+        self._commit(processed_ids)
         for eid in processed_ids:
             self._seen.discard(eid)
 

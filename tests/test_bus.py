@@ -1,0 +1,310 @@
+"""repro.bus: partitioned event store, consumer group, sharded worker pool.
+
+Covers the subsystem's contract surface:
+* per-subject ordering inside a partition,
+* commit-offset isolation between partitions,
+* DLQ quarantine + redrive after a trigger is re-enabled,
+* rebalance-on-crash redelivering uncommitted events exactly once (dedup via
+  checkpointed contexts), and
+* lag-proportional autoscaling up + scale-to-zero, recorded in the timeline.
+"""
+import time
+
+import pytest
+
+from repro.bus import ConsumerGroup, PartitionedEventStore
+from repro.core import (KedaAutoscaler, Trigger, Triggerflow, make_trigger,
+                        termination_event)
+
+
+def _sharded_tf(partitions=8, commit_policy="every_batch"):
+    store = PartitionedEventStore(partitions)
+    tf = Triggerflow(event_store=store, inline_functions=True,
+                     commit_policy=commit_policy)
+    return tf, store
+
+
+# -- partitioned store contract ------------------------------------------------
+
+def test_subject_ordering_within_partition():
+    store = PartitionedEventStore(4)
+    store.create_stream("w")
+    evs = [termination_event(f"s{i % 5}", i) for i in range(50)]
+    store.publish_batch("w", evs)
+    # every subject lands on exactly one partition...
+    for s in range(5):
+        assert len({store.partition_for(f"s{s}")}) == 1
+    # ...and its events keep publish order inside that partition
+    for p in range(4):
+        got = store.consume_partition("w", p, 1000)
+        assert all(store.partition_for(e.subject) == p for e in got)
+        for s in range(5):
+            subj = [e.data["result"] for e in got if e.subject == f"s{s}"]
+            assert subj == sorted(subj)
+    # the union over partitions is the full publish set
+    all_ids = {e.id for p in range(4) for e in store.consume_partition("w", p, 1000)}
+    assert all_ids == {e.id for e in evs}
+
+
+def test_commit_offset_isolation_between_partitions():
+    store = PartitionedEventStore(8)
+    store.create_stream("w")
+    # pick two subjects routed to different partitions
+    subjects = {store.partition_for(f"s{i}"): f"s{i}" for i in range(32)}
+    (pa, sa), (pb, sb) = list(subjects.items())[:2]
+    evs_a = [termination_event(sa, i) for i in range(6)]
+    evs_b = [termination_event(sb, i) for i in range(4)]
+    store.publish_batch("w", evs_a + evs_b)
+    store.commit_partitions("w", [pa], [e.id for e in evs_a[:5]])
+    offsets = store.commit_offsets("w")
+    assert offsets[pa] == 5
+    assert offsets[pb] == 0
+    assert store.lag_partitions("w", [pa]) == 1
+    assert store.lag_partitions("w", [pb]) == 4
+    assert store.is_committed("w", evs_a[0].id)
+    assert not store.is_committed("w", evs_b[0].id)
+    # committing ids of another partition's events is a no-op there
+    store.commit_partitions("w", [pb], [e.id for e in evs_a])
+    assert store.commit_offsets("w")[pb] == 0
+
+
+def test_partitioned_store_eventstore_contract():
+    """The aggregate (whole-stream) view still honors the EventStore API."""
+    store = PartitionedEventStore(4)
+    store.create_stream("w")
+    evs = [termination_event(f"s{i % 7}", i) for i in range(20)]
+    store.publish_batch("w", evs)
+    assert store.lag("w") == 20
+    got = store.consume("w", 100)
+    assert {e.id for e in got} == {e.id for e in evs}
+    store.commit("w", [e.id for e in evs])
+    assert store.lag("w") == 0
+    assert len(store.committed_events("w")) == 20
+
+
+# -- consumer group -------------------------------------------------------------
+
+def test_group_assignment_covers_and_balances():
+    g = ConsumerGroup(16)
+    for i in range(4):
+        g.join(f"m{i}")
+    a = g.assignment()
+    parts = sorted(p for ps in a.values() for p in ps)
+    assert parts == list(range(16))          # full coverage, disjoint
+    assert all(len(ps) <= 4 for ps in a.values())  # bounded load: ceil(16/4)
+
+
+def test_group_rebalance_moves_only_bounded_set():
+    g = ConsumerGroup(8)
+    for m in ("a", "b", "c"):
+        g.join(m)
+    before = g.assignment()
+    gen = g.generation
+    g.leave("b")
+    after = g.assignment()
+    assert g.generation == gen + 1
+    assert sorted(p for ps in after.values() for p in ps) == list(range(8))
+    # survivors keep at least their old partitions minus the new cap delta
+    for m in ("a", "c"):
+        kept = set(before[m]) & set(after[m])
+        assert len(kept) >= len(before[m]) - 1
+
+
+# -- sharded pool ---------------------------------------------------------------
+
+def test_pool_drains_and_counts_once():
+    tf, store = _sharded_tf()
+    tf.create_workflow("w")
+    for s in range(8):
+        tf.add_trigger("w", make_trigger(
+            f"s{s}", condition={"name": "true"}, action={"name": "noop"},
+            trigger_id=f"t{s}", transient=False))
+    store.publish_batch("w", [termination_event(f"s{i % 8}", i) for i in range(500)])
+    tf.pool.set_shard_count("w", 3)
+    tf.pool.drive("w", timeout=20)
+    m = tf.pool.metrics("w")
+    assert m["total_lag"] == 0
+    assert sum(m["events_processed"].values()) == 500
+    assert sum(m["commit_offsets"]) == 500
+    tf.shutdown()
+
+
+def test_dlq_redrive_after_trigger_reenable():
+    tf, store = _sharded_tf()
+    tf.create_workflow("w")
+    tf.add_trigger("w", make_trigger(
+        "a", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="ta", transient=False))
+    tf.add_trigger("w", Trigger(
+        activation_events=["b"], condition={"name": "true"},
+        action={"name": "noop"}, trigger_id="tb", transient=False,
+        enabled=False))
+    tf.pool.set_shard_count("w", 2)
+    store.publish_batch("w", [termination_event("b", i) for i in range(3)])
+    tf.pool.drive("w", timeout=10)
+    pb = store.partition_for("b")
+    assert store.dlq_size_partitions("w", [pb]) == 3   # quarantined (§3.4)
+    assert store.lag("w") == 0
+    # re-enabling the trigger redrives its subject's partition DLQ
+    tf.pool.set_trigger_enabled("w", "tb", True)
+    assert store.dlq_size_partitions("w", [pb]) == 0
+    assert store.lag("w") == 3
+    tf.pool.drive("w", timeout=10)
+    assert tf.pool.total_fires("w") == 3
+    assert store.lag("w") == 0
+    tf.shutdown()
+
+
+def test_crash_rebalance_exactly_once():
+    """A crashed shard's uncommitted events are redelivered to the shard that
+    inherits its partitions and counted exactly once (checkpointed contexts +
+    event-id dedup)."""
+    tf, store = _sharded_tf(commit_policy="every_batch")
+    tf.create_workflow("w")
+    n_subj, per_subj = 4, 20
+    for s in range(n_subj):
+        tf.add_trigger("w", make_trigger(
+            f"s{s}",
+            condition={"name": "counter", "expected": per_subj,
+                       "aggregate": False, "exactly_once": True},
+            action={"name": "noop"}, trigger_id=f"t{s}", transient=False))
+    events = [termination_event(f"s{i % n_subj}", i)
+              for i in range(n_subj * per_subj)]
+    store.publish_batch("w", events)
+    members = tf.pool.set_shard_count("w", 2)
+    victim = members[0]
+    # shard A processes one small batch (commits + checkpoints), then crashes
+    processed_before = tf.pool.run_shard_once("w", victim, 10)
+    assert processed_before > 0
+    tf.pool.crash_shard("w", victim)
+    assert tf.pool.shard_count("w") == 1
+    tf.pool.drive("w", timeout=20)
+    assert store.lag("w") == 0
+    assert tf.pool.total_fires("w") == n_subj  # each join fired exactly once
+    for s in range(n_subj):
+        ctx = tf.pool.trigger_context("w", f"t{s}")
+        assert ctx.get("count") == per_subj, (s, ctx)
+    tf.shutdown()
+
+
+def test_rebalance_reset_replays_uncommitted_without_double_count():
+    """on_fire policy: a shard that processed events WITHOUT committing loses
+    its partitions; the new owner recounts from scratch — no double counting,
+    no loss."""
+    tf, store = _sharded_tf(commit_policy="on_fire")
+    tf.create_workflow("w")
+    tf.add_trigger("w", make_trigger(
+        "s0", condition={"name": "counter", "expected": 10, "aggregate": False},
+        action={"name": "noop"}, trigger_id="t0", transient=False))
+    store.publish_batch("w", [termination_event("s0", i) for i in range(10)])
+    members = tf.pool.set_shard_count("w", 2)
+    owner = None
+    p0 = store.partition_for("s0")
+    for m in members:
+        if p0 in tf.pool.metrics("w")["assignment"][m]:
+            owner = m
+    assert owner is not None
+    # the owner sees 5 events but does not fire → nothing committed
+    tf.pool.run_shard_once("w", owner, 5)
+    assert store.lag("w") == 10
+    tf.pool.crash_shard("w", owner)
+    tf.pool.drive("w", timeout=10)
+    assert store.lag("w") == 0
+    assert tf.pool.total_fires("w") == 1
+    assert tf.pool.trigger_context("w", "t0").get("count") == 10
+    tf.shutdown()
+
+
+def test_cross_shard_produce_fires_exactly_once():
+    """An internally-produced event routed to ANOTHER shard's partition must
+    be processed by its owner only — not inline by the producer too."""
+    store = PartitionedEventStore(8)
+    tf = Triggerflow(event_store=store, inline_functions=True,
+                     commit_policy="every_batch")
+    tf.create_workflow("w")
+    # find two subjects on different partitions
+    subjects = {store.partition_for(f"s{i}"): f"s{i}" for i in range(32)}
+    (pa, sa), (pb, sb) = list(subjects.items())[:2]
+    tf.add_trigger("w", make_trigger(
+        sa, condition={"name": "true"},
+        action={"name": "produce", "subject": sb, "result": 7},
+        trigger_id="ta", transient=False))
+    tf.add_trigger("w", make_trigger(
+        sb, condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="tb", transient=False))
+    members = tf.pool.set_shard_count("w", 2)
+    assignment = tf.pool.metrics("w")["assignment"]
+    owners = {p: m for m, ps in assignment.items() for p in ps}
+    assert owners[pa] != owners[pb], "need the produce to cross shards"
+    tf.publish("w", termination_event(sa, 1))
+    tf.pool.drive("w", timeout=10)
+    assert store.lag("w") == 0
+    assert tf.pool.total_fires("w") == 2, tf.pool.metrics("w")  # sa once, sb once
+    tf.shutdown()
+
+
+# -- autoscaler -----------------------------------------------------------------
+
+def test_autoscaler_budget_caps_total_shards_across_workflows():
+    tf, store = _sharded_tf()
+    for wf in ("wa", "wb"):
+        tf.create_workflow(wf)
+        for s in range(16):
+            tf.add_trigger(wf, make_trigger(
+                f"s{s}", condition={"name": "true"}, action={"name": "noop"},
+                trigger_id=f"{wf}-t{s}", transient=False))
+        store.publish_batch(
+            wf, [termination_event(f"s{i % 16}", i) for i in range(200_000)])
+    scaler = KedaAutoscaler(tf, poll_interval=0.02, grace_period=0.5,
+                            events_per_shard=1_000, max_shards_per_workflow=8,
+                            max_workers=3)
+    scaler._tick()  # manual tick: both workflows want 8 shards, budget is 3
+    live = sum(tf.pool.live_shard_count(wf) for wf in ("wa", "wb"))
+    assert live <= 3, live
+    assert scaler.timeline[-1][1] <= 3
+    tf.shutdown()
+
+def test_autoscaler_scales_shards_up_and_to_zero():
+    tf, store = _sharded_tf()
+    tf.create_workflow("w")
+    for s in range(32):
+        tf.add_trigger("w", make_trigger(
+            f"s{s}", condition={"name": "true"}, action={"name": "noop"},
+            trigger_id=f"t{s}", transient=False))
+    store.publish_batch(
+        "w", [termination_event(f"s{i % 32}", i) for i in range(50_000)])
+    scaler = KedaAutoscaler(tf, poll_interval=0.02, grace_period=0.15,
+                            events_per_shard=5_000, max_shards_per_workflow=4)
+    assert scaler.target_shards(50_000) == 4
+    assert scaler.target_shards(0) == 0
+    scaler.start()
+    deadline = time.monotonic() + 30
+    while store.lag("w") > 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert store.lag("w") == 0, "autoscaled shards did not drain the stream"
+    while scaler.active_workers > 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    time.sleep(3 * scaler.poll_interval)  # let a final timeline sample land
+    scaler.stop()
+    tf.shutdown()
+    assert scaler.active_workers == 0
+    peak_shards = max(w for _, w, _ in scaler.timeline)
+    assert peak_shards >= 2, scaler.timeline
+    assert scaler.timeline[-1][1] == 0      # scale-to-zero recorded
+    assert scaler.scale_ups >= 2
+    assert scaler.scale_downs >= 2
+
+
+def test_pool_worker_backed_service_api():
+    """Fig. 1 facade still works when the workflow is pool-backed."""
+    tf, store = _sharded_tf()
+    tf.create_workflow("w")
+    tf.pool.set_shard_count("w", 2)
+    tf.add_trigger("w", make_trigger(       # lands on every shard
+        "go", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="tg", transient=False))
+    tf.publish("w", termination_event("go", 1))
+    tf.pool.drive("w", timeout=10)
+    assert tf.pool.total_fires("w") == 1
+    assert tf.worker("w") is not None       # pool-backed worker()
+    tf.shutdown()

@@ -1,7 +1,6 @@
 """int8 delta-compression properties + FL-with-compression integration."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.distributed.compression import (apply_delta, compress_delta,
                                            compressed_bytes, dequantize_int8,

@@ -1,7 +1,6 @@
 """Unit + property tests for the Rich Trigger engine (paper §3)."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CloudEvent, MemoryEventStore, TYPE_FAILURE, TYPE_TIMEOUT,
                         Triggerflow, failure_event, make_trigger,

@@ -9,13 +9,12 @@ from repro.configs import get_config
 from repro.distributed.hlo_analysis import (ICI_BW, PEAK_FLOPS, collective_bytes,
                                             roofline_terms)
 from repro.distributed.sharding import Resolver
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import compat_make_mesh, make_host_mesh
 
 
 def _resolver(arch="granite-20b"):
     cfg = get_config(arch)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     r = Resolver(cfg, mesh)
     r.sizes = {"data": 16, "model": 16}  # pretend production sizes
     return r
@@ -32,8 +31,7 @@ def test_resolver_divisibility_drops_axis():
 
 def test_resolver_batch_axes_multi_pod():
     cfg = get_config("yi-9b")
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = compat_make_mesh((1, 1, 1), ("pod", "data", "model"))
     r = Resolver(cfg, mesh)
     r.sizes = {"pod": 2, "data": 16, "model": 16}
     assert r.spec(("batch", None), (256, 4096)) == P(("pod", "data"), None)

@@ -4,8 +4,7 @@ event is lost across restarts."""
 import os
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (FileEventStore, FileStateStore, MemoryEventStore,
                         termination_event)
