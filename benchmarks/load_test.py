@@ -3,10 +3,13 @@
 Scenarios (paper §6.1):
 * noop — events match a persistent trigger with a true condition + noop action
 * join — 100 triggers with aggregation conditions joining 1000 events each
-          (the parallel map fork-join shape)
-* join-kernel — the same aggregation computed by the vectorized one-hot
-  segmented-sum (the TPU event_join kernel's algorithm, oracle path on CPU) —
-  the DESIGN.md §2 hardware adaptation of the hot loop.
+          (the parallel map fork-join shape).  Measured twice through the
+          *real* TF-Worker: once on the legacy per-event interpreter
+          (``batch_plane=False`` — the "before") and once on the batch plane
+          (grouped slices + vectorized ``event_join`` triage — the "after").
+* join-kernel — the same aggregation computed standalone by the vectorized
+  one-hot segmented-sum (the TPU event_join kernel's algorithm, oracle path
+  on CPU) — the upper bound the batch plane closes in on.
 """
 from __future__ import annotations
 
@@ -36,7 +39,13 @@ def bench_noop(n_events: int = 100_000) -> Dict:
     return {"events": n_events, "seconds": dt, "events_per_s": n_events / dt}
 
 
-def bench_join(n_triggers: int = 100, events_each: int = 1000) -> Dict:
+def bench_join(n_triggers: int = 100, events_each: int = 1000,
+               batch_plane: bool = True) -> Dict:
+    """The Table-1 join workload through the real TF-Worker.
+
+    ``batch_plane=False`` runs the legacy per-event interpreter loop — the
+    "before" figure the batch plane is gated against in CI.
+    """
     tf = Triggerflow(inline_functions=True, commit_policy="every_batch")
     tf.create_workflow("join")
     for t in range(n_triggers):
@@ -49,6 +58,7 @@ def bench_join(n_triggers: int = 100, events_each: int = 1000) -> Dict:
               for i in range(n_triggers * events_each)]
     tf.event_store.publish_batch("join", events)
     w = tf.worker("join")
+    w.batch_plane = batch_plane
     w.keep_event_log = False
     n_events = len(events)
     t0 = time.perf_counter()
@@ -85,19 +95,39 @@ def bench_join_vectorized(n_triggers: int = 100, events_each: int = 1000) -> Dic
     return {"events": n_events, "seconds": dt, "events_per_s": n_events / dt}
 
 
-def run() -> List[Dict]:
+def run(reps: int = 3) -> List[Dict]:
+    # Interleave the join variants and keep the best events/s of each: single
+    # runs on small shared machines swing ±25% from CPU steal, which would
+    # drown the before/after delta being measured.
+    best_interp = best_batch = 0.0
+    for _ in range(reps):
+        before = bench_join(batch_plane=False)
+        after = bench_join(batch_plane=True)
+        assert before["fired"] == after["fired"] == 100, (before, after)
+        best_interp = max(best_interp, before["events_per_s"])
+        best_batch = max(best_batch, after["events_per_s"])
+
     rows = []
     noop = bench_noop()
     rows.append({"name": "load_test.noop", "us_per_call": 1e6 / noop["events_per_s"],
+                 "events_per_s": noop["events_per_s"],
                  "derived": f"{noop['events_per_s']:.0f} events/s"})
-    join = bench_join()
-    rows.append({"name": "load_test.join", "us_per_call": 1e6 / join["events_per_s"],
-                 "derived": f"{join['events_per_s']:.0f} events/s "
-                            f"({join['fired']} joins fired)"})
+    rows.append({"name": "load_test.join_interpreter",
+                 "us_per_call": 1e6 / best_interp,
+                 "events_per_s": best_interp,
+                 "derived": f"{best_interp:.0f} events/s "
+                            f"(per-event interpreter, best of {reps})"})
+    rows.append({"name": "load_test.join",
+                 "us_per_call": 1e6 / best_batch,
+                 "events_per_s": best_batch,
+                 "derived": f"{best_batch:.0f} events/s "
+                            f"({best_batch / best_interp:.1f}x vs interpreter, "
+                            f"best of {reps})"})
     vec = bench_join_vectorized()
     rows.append({"name": "load_test.join_vectorized_kernel_algo",
                  "us_per_call": 1e6 / vec["events_per_s"],
+                 "events_per_s": vec["events_per_s"],
                  "derived": f"{vec['events_per_s']:.0f} events/s "
-                            f"({vec['events_per_s'] / join['events_per_s']:.0f}x "
+                            f"({vec['events_per_s'] / best_interp:.0f}x "
                             f"vs interpreter)"})
     return rows

@@ -18,7 +18,7 @@ from typing import Dict, List
 from repro.bus import PartitionedEventStore
 from repro.core import Triggerflow, make_trigger, termination_event
 
-from benchmarks.load_test import bench_noop
+from benchmarks.load_test import bench_join, bench_noop
 
 SHARD_COUNTS = (1, 2, 4, 8)
 
@@ -55,6 +55,47 @@ def bench_sharded_noop(
             "shards": shards, "partitions": partitions}
 
 
+def bench_sharded_join(
+    n_triggers: int = 100,
+    events_each: int = 1000,
+    shards: int = 4,
+    partitions: int = 16,
+    batch_size: int = 4096,
+    batch_plane: bool = True,
+) -> Dict:
+    """The Table-1 join workload on the sharded dataplane: proves the batch
+    plane (grouped slices + vectorized triage) composes with partitioned
+    shards — each shard triages its own partitions' share of the batch.
+    ``batch_plane=False`` is the interpreter-on-shards control."""
+    store = PartitionedEventStore(partitions)
+    tf = Triggerflow(event_store=store, inline_functions=True,
+                     commit_policy="every_batch")
+    tf.pool.batch_size = batch_size
+    tf.pool.keep_event_log = False
+    tf.pool.batch_plane = batch_plane
+    tf.create_workflow("join")
+    for t in range(n_triggers):
+        tf.add_trigger("join", make_trigger(
+            f"j{t}",
+            condition={"name": "counter", "expected": events_each,
+                       "aggregate": False},
+            action={"name": "noop"}, trigger_id=f"jt{t}", transient=False))
+    n_events = n_triggers * events_each
+    events = [termination_event(f"j{i % n_triggers}", i) for i in range(n_events)]
+    store.publish_batch("join", events)
+
+    t0 = time.perf_counter()
+    tf.pool.start_shards("join", shards)
+    while store.lag("join") > 0:
+        time.sleep(0.0005)
+    dt = time.perf_counter() - t0
+    tf.shutdown()
+    fired = tf.pool.total_fires("join")
+    assert fired == n_triggers, (fired, n_triggers)
+    return {"events": n_events, "seconds": dt, "events_per_s": n_events / dt,
+            "shards": shards, "partitions": partitions, "fired": fired}
+
+
 def run(reps: int = 3, n_events: int = 100_000) -> List[Dict]:
     # Interleave scenarios across repetitions and keep the best events/s per
     # scenario: single-run numbers on small shared machines swing ±25% from
@@ -71,6 +112,7 @@ def run(reps: int = 3, n_events: int = 100_000) -> List[Dict]:
     rows = [{
         "name": "sharded_load.baseline_single_worker",
         "us_per_call": 1e6 / best["baseline"],
+        "events_per_s": best["baseline"],
         "derived": f"{best['baseline']:.0f} events/s (bench_noop, best of {reps})",
     }]
     for shards in SHARD_COUNTS:
@@ -78,9 +120,34 @@ def run(reps: int = 3, n_events: int = 100_000) -> List[Dict]:
         rows.append({
             "name": f"sharded_load.noop_{shards}shard",
             "us_per_call": 1e6 / best[shards],
+            "events_per_s": best[shards],
             "derived": f"{best[shards]:.0f} events/s "
                        f"({speedup:.2f}x vs single worker)",
         })
+    # Batch plane × sharding composition: the same 4-shard deployment with
+    # the interpreter vs the batch plane (the latter must not regress).
+    join_interp = join_batch = 0.0
+    for _ in range(reps):
+        join_interp = max(join_interp,
+                          bench_sharded_join(batch_plane=False)["events_per_s"])
+        join_batch = max(join_batch,
+                         bench_sharded_join(batch_plane=True)["events_per_s"])
+    join_single = bench_join()["events_per_s"]
+    rows.append({
+        "name": "sharded_load.join_4shard_interpreter",
+        "us_per_call": 1e6 / join_interp,
+        "events_per_s": join_interp,
+        "derived": f"{join_interp:.0f} events/s (per-event interpreter on "
+                   f"4 shards)",
+    })
+    rows.append({
+        "name": "sharded_load.join_4shard",
+        "us_per_call": 1e6 / join_batch,
+        "events_per_s": join_batch,
+        "derived": f"{join_batch:.0f} events/s "
+                   f"({join_batch / join_interp:.2f}x vs interpreter shards, "
+                   f"{join_batch / join_single:.2f}x vs 1 batch-plane worker)",
+    })
     return rows
 
 

@@ -1,0 +1,84 @@
+"""CI perf-regression gate for the batch plane (Table-1 join workload).
+
+Measures the join scenario through the real TF-Worker twice — per-event
+interpreter (``batch_plane=False``) and batch plane — and compares the
+speedup ratio against the one committed in ``results/benchmarks.json``.
+
+The gate is on the *ratio*, not raw events/s: CI runners differ by far more
+than 30% in absolute speed, but interpreter and batch plane share the
+machine within one job, so their ratio cancels host speed out.  A >30% drop
+in that ratio fails the job.
+
+    PYTHONPATH=src:. python scripts/perf_gate.py [--reps 2] [--tolerance 0.7]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def committed_speedup(path: str):
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+        by_name = {r.get("name"): r for r in rows if isinstance(r, dict)}
+        interp = by_name["load_test.join_interpreter"]["events_per_s"]
+        batch = by_name["load_test.join"]["events_per_s"]
+    except (OSError, ValueError, KeyError, TypeError):
+        # absent/malformed baseline: report, skip the gate, stay green
+        return None, None, None
+    return batch / interp, interp, batch
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--tolerance", type=float, default=0.7,
+                    help="fail if measured speedup < tolerance * committed")
+    ap.add_argument("--baseline", default=os.path.join(
+        os.path.dirname(__file__), "..", "results", "benchmarks.json"))
+    args = ap.parse_args()
+
+    from benchmarks.load_test import bench_join
+
+    interp = batch = 0.0
+    for _ in range(args.reps):
+        interp = max(interp, bench_join(batch_plane=False)["events_per_s"])
+        batch = max(batch, bench_join(batch_plane=True)["events_per_s"])
+    speedup = batch / interp
+
+    ref_speedup, ref_interp, ref_batch = committed_speedup(args.baseline)
+    lines = [
+        "## Batch-plane perf gate (load_test.join, 100 triggers x 1000 events)",
+        "",
+        "| | interpreter ev/s | batch plane ev/s | speedup |",
+        "|---|---|---|---|",
+        f"| this run | {interp:,.0f} | {batch:,.0f} | **{speedup:.2f}x** |",
+    ]
+    if ref_speedup is not None:
+        lines.append(f"| committed baseline | {ref_interp:,.0f} | "
+                     f"{ref_batch:,.0f} | {ref_speedup:.2f}x |")
+    summary = "\n".join(lines) + "\n"
+    print(summary)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary)
+
+    if ref_speedup is None:
+        print("no committed baseline rows; gate skipped")
+        return 0
+    floor = args.tolerance * ref_speedup
+    if speedup < floor:
+        print(f"FAIL: measured speedup {speedup:.2f}x is below "
+              f"{args.tolerance:.0%} of committed {ref_speedup:.2f}x "
+              f"(floor {floor:.2f}x) -> >30% perf regression")
+        return 1
+    print(f"OK: speedup {speedup:.2f}x >= floor {floor:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

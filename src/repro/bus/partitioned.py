@@ -169,20 +169,19 @@ class PartitionedEventStore(EventStore):
             parts = self._parts.get(workflow)
             if not parts:
                 return 0
-            # Two-phase: in-order prefix pops per partition cover the whole
-            # batch in the common case; only unmatched ids (events skipped
-            # mid-stream) pay the per-partition scan.
+            # Per partition: intersect once (C-level), then the shard's bulk
+            # commit handles its share — an O(batch) slice/set compare in the
+            # common in-order case, degrading to prefix walk + scan only for
+            # ids skipped mid-stream.
             n = 0
             want = len(ids)
-            partitions = list(partitions)
             for p in partitions:
-                n += parts[p].commit_prefix(ids)
-                if n == want:
-                    return n
-            for p in partitions:
-                n += parts[p].commit_scan(ids)
-                if n == want:
-                    break
+                shard = parts[p]
+                mine = ids & shard.pending_ids
+                if mine:
+                    n += shard.commit(mine)
+                    if n == want:
+                        break
             return n
 
     def partition_lags(self, workflow: str) -> List[int]:

@@ -29,8 +29,6 @@ import time
 import traceback
 from typing import Any, Dict, List, Optional
 
-from ..core.actions import ACTIONS, run_action, run_condition
-from ..core.conditions import CONDITIONS
 from ..core.eventstore import EventStore
 from ..core.functions import FunctionBackend
 from ..core.statestore import StateStore
@@ -42,46 +40,17 @@ from .group import ConsumerGroup
 class ShardWorker(TFWorker):
     """A TF-Worker that owns an exclusive partition subset of one workflow.
 
-    Beyond the partition plumbing it carries a *compiled dispatch table*: for
-    each subject, the condition/action registry lookups and the trigger's
-    context are resolved once and cached, so the per-event path is two plain
-    function calls.  The table is invalidated whenever trigger structure
-    changes (add/intercept/rebalance) — ``enabled`` is still read live so
-    transient deactivation and DLQ quarantine keep exact TFWorker semantics.
+    The batch-plane loop (``TFWorker.run_once``) already gives shards their
+    two fast-path specializations: exclusive partition ownership elides the
+    per-event committed check (``UNCOMMITTED_ONLY``), and the compiled
+    per-subject dispatch resolves registry lookups and trigger contexts once
+    per slice.  What remains here is membership identity and the rebalance
+    contract.
     """
 
     def __init__(self, member: str, *args, **kwargs) -> None:
         self.member = member
-        self._dispatch: Dict[str, list] = {}
         super().__init__(*args, **kwargs)
-
-    # -- compiled dispatch ------------------------------------------------------
-    def _invalidate_dispatch(self) -> None:
-        # Clear in place: run_once holds a local alias across a batch, and a
-        # dynamic trigger added mid-batch must be visible to the next event.
-        self._dispatch.clear()
-
-    def add_trigger(self, trg: Trigger, persist: bool = True) -> str:
-        tid = super().add_trigger(trg, persist=persist)
-        self._invalidate_dispatch()
-        return tid
-
-    def intercept(self, trigger_id: str, interceptor_action: Dict[str, Any]) -> None:
-        super().intercept(trigger_id, interceptor_action)
-        self._invalidate_dispatch()
-
-    def _compile(self, subject: str) -> list:
-        entries = []
-        for trg in self._by_subject.get(subject, ()):
-            cond, act = trg.condition, trg.action
-            cfn = CONDITIONS.get(cond["name"]) or (
-                lambda c, e, s: run_condition(s, c, e))  # raise like generic path
-            afn = ACTIONS.get(act["name"]) or (
-                lambda c, e, s: run_action(s, c, e))
-            entries.append(
-                (trg, trg.trigger_id, cfn, cond, afn, act, self.context_of(trg.trigger_id)))
-        self._dispatch[subject] = entries
-        return entries
 
     def rebalance_reset(self) -> None:
         """Reset volatile state to the last checkpoint.
@@ -101,106 +70,6 @@ class ShardWorker(TFWorker):
             trg.context = dict(ckpt.get(tid, base))
         self._contexts.clear()
         self._invalidate_dispatch()  # cached entries hold the old contexts
-
-    def run_once(self, max_events: Optional[int] = None) -> int:
-        """Tightened exclusive-owner batch loop.
-
-        Semantically identical to ``TFWorker.run_once`` with the per-event
-        committed check elided (exclusive partition ownership) and the
-        compiled dispatch inlined; stats are accumulated in locals and
-        flushed once per batch.  This loop is the events/s figure of merit
-        for the Table-1-style sharded load test — hence the hand-rolled
-        style.
-        """
-        with self.lock:
-            batch = self.event_store.consume_partitions(
-                self.workflow, self.partitions, max_events or self.batch_size)
-            sink = self._sink
-            if not batch and not sink:
-                return 0
-            seen = self._seen
-            seen_add = seen.add
-            seen_discard = seen.discard
-            event_log = self.event_log if self.keep_event_log else None
-            dispatch = self._dispatch
-            compile_subject = self._compile
-            to_dlq = self.event_store.to_dlq
-            workflow = self.workflow
-            processed_ids: List[str] = []
-            append_id = processed_ids.append
-            fired_any = False
-            n_processed = n_activations = n_fires = n_dlq = 0
-            queue = list(batch)
-            i = 0
-            while i < len(queue):
-                event = queue[i]
-                i += 1
-                eid = event.id
-                if eid in seen:
-                    continue  # at-least-once dedup (§3.4)
-                seen_add(eid)
-                if event_log is not None:
-                    event_log.append(event)
-                n_processed += 1
-                entries = dispatch.get(event.subject)
-                if entries is None:
-                    entries = compile_subject(event.subject)
-                if not entries:
-                    n_dlq += 1  # unknown subject: count + drop
-                    append_id(eid)
-                    continue
-                any_enabled = False
-                etype = event.type
-                for trg, tid, cfn, cspec, afn, aspec, ctx in entries:
-                    if not trg.enabled:
-                        continue
-                    tt = trg.event_type
-                    if tt and tt != etype:
-                        continue
-                    any_enabled = True
-                    n_activations += 1
-                    try:
-                        ok = cfn(ctx, event, cspec)
-                    except Exception:  # noqa: BLE001
-                        traceback.print_exc()
-                        ok = False
-                    if ok:
-                        try:
-                            afn(ctx, event, aspec)
-                        except Exception:  # noqa: BLE001
-                            traceback.print_exc()
-                        n_fires += 1
-                        fired_any = True
-                        if trg.transient:
-                            trg.enabled = False
-                            self._trigger_state_dirty = True
-                if any_enabled:
-                    append_id(eid)
-                else:
-                    # All candidates disabled → out-of-order event → DLQ (§3.4).
-                    to_dlq(workflow, event)
-                    seen_discard(eid)
-                    n_dlq += 1
-                if sink:
-                    # §5.2 same-batch drain, restricted to events routed to
-                    # this shard's own partitions (foreign-partition events
-                    # are consumed by their owner; inline processing here
-                    # would double-fire them).
-                    queue.extend(self._own_sink_events())
-                    sink.clear()
-            stats = self.stats
-            stats.events_processed += n_processed
-            stats.activations += n_activations
-            stats.fires += n_fires
-            stats.dlq_events += n_dlq
-            stats.batches += 1
-            if processed_ids:
-                self.last_active = time.monotonic()
-            if fired_any or (self.commit_policy == "every_batch" and processed_ids):
-                self._checkpoint(processed_ids)
-                if fired_any and self._dlq_size():
-                    self._redrive()
-            return len(processed_ids)
 
 
 class _Runner(threading.Thread):
@@ -279,6 +148,7 @@ class ShardedWorkerPool:
         commit_policy: str = "on_fire",
         batch_size: int = 512,
         keep_event_log: bool = True,
+        batch_plane: bool = True,
     ) -> None:
         if not hasattr(event_store, "consume_partitions"):
             raise TypeError(
@@ -291,6 +161,7 @@ class ShardedWorkerPool:
         self.commit_policy = commit_policy
         self.batch_size = batch_size
         self.keep_event_log = keep_event_log
+        self.batch_plane = batch_plane
         self._lock = threading.RLock()
         self._wfs: Dict[str, _WorkflowShards] = {}
 
@@ -339,6 +210,7 @@ class ShardedWorkerPool:
                 keep_event_log=self.keep_event_log,
                 timers=self.timers,
                 partitions=(),
+                batch_plane=self.batch_plane,
             )
             wp.shards[member] = worker
             wp.group.join(member)

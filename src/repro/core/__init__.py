@@ -1,7 +1,14 @@
 # The paper's primary contribution: the Rich Trigger (ECA) service.
 from .actions import ACTIONS, PYFUNCS, action, pyfunc, register_action, register_pyfunc
 from .autoscaler import KedaAutoscaler
-from .conditions import CONDITIONS, condition, register_condition
+from .conditions import (
+    BATCHED_CONDITIONS,
+    CONDITIONS,
+    batched_condition,
+    condition,
+    register_condition,
+    scalar_sweep,
+)
 from .context import TriggerContext
 from .events import (
     TYPE_FAILURE,
@@ -21,12 +28,14 @@ from .triggers import Trigger, make_trigger, new_trigger_id
 from .worker import TFWorker
 
 __all__ = [
-    "ACTIONS", "CONDITIONS", "PYFUNCS", "CloudEvent", "EventStore",
+    "ACTIONS", "BATCHED_CONDITIONS", "CONDITIONS", "PYFUNCS", "CloudEvent",
+    "EventStore",
     "FileEventStore", "FileStateStore", "FunctionBackend", "KedaAutoscaler",
     "MemoryEventStore", "MemoryStateStore", "StateStore", "TFWorker",
     "TimerSource", "Trigger", "TriggerContext", "Triggerflow", "TYPE_FAILURE",
     "TYPE_INIT", "TYPE_TERMINATION", "TYPE_TIMEOUT", "TYPE_WORKFLOW_END",
-    "action", "condition", "failure_event", "make_trigger", "new_trigger_id",
-    "pyfunc", "register_action", "register_condition", "register_pyfunc",
+    "action", "batched_condition", "condition", "failure_event",
+    "make_trigger", "new_trigger_id", "pyfunc", "register_action",
+    "register_condition", "register_pyfunc", "scalar_sweep",
     "termination_event",
 ]

@@ -1,0 +1,142 @@
+"""Vector join plane: batched aggregation-condition evaluation as array ops.
+
+The worker's batch plane evaluates conditions over ``(subject, type)``
+slices.  This module is the fully-vectorized tier above that: a consumed
+batch whose subjects route to pure aggregation joins (``counter`` with
+``aggregate=False`` and no ``exactly_once`` dedup) that provably cannot fire
+within the batch (``count + batch share < expected``) reduces to *counting*
+— no action runs, no per-event state changes except the counters.
+
+``triage`` therefore never touches individual events in Python: the batch is
+histogrammed C-level (one list comprehension + ``Counter``), each distinct
+subject is screened against its compiled dispatch entries, and all claimed
+subjects are folded into one one-hot segmented sum over the routed event
+batch — the ``event_join`` kernel (Pallas on TPU, jitted-jnp or ``bincount``
+on CPU; see ``kernels.event_join.dispatch``).  The Table-1 join hot loop
+becomes O(batch) array ops plus O(distinct subjects) Python.
+
+Everything else — slices that would cross a threshold, dedup, timeouts,
+failures, aggregating joins, non-join conditions — is returned as leftover
+for the worker's per-trigger batched/scalar path, which owns the exact fire
+semantics.  The screening is the correctness boundary: the kernel only ever
+sees slices whose outcome is pure counting, so parity with the scalar
+interpreter is by construction.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+try:  # numpy is the plane's only hard dependency; degrade to None without it
+    import numpy as np
+except ImportError:  # pragma: no cover - numpy is in the base image
+    np = None
+
+from .events import TYPE_FAILURE, TYPE_TIMEOUT, CloudEvent
+
+TriageResult = Tuple[List[str], List[CloudEvent]]  # (handled ids, leftover)
+
+
+class VectorJoinPlane:
+    """Batch-level accelerator for pure-counting join batches."""
+
+    def __init__(self, backend: Optional[str] = None, min_subjects: int = 2):
+        if np is None:
+            raise RuntimeError("VectorJoinPlane requires numpy")
+        from ..kernels.event_join.dispatch import resolve_join_backend
+
+        self.backend, self._join = resolve_join_backend(backend)
+        if self._join is None:
+            raise RuntimeError("join backend disabled")
+        # Below this many claimable subjects the per-trigger batched
+        # conditions beat array assembly.
+        self.min_subjects = min_subjects
+        self.calls = 0
+        self.events = 0
+
+    def triage(self, batch: List[CloudEvent],
+               entries_for: Callable[[str], Sequence[Any]],
+               stats) -> Optional[TriageResult]:
+        """Claim and evaluate the pure-counting share of a consumed batch.
+
+        Returns ``(handled_event_ids, leftover_events)`` — the handled events
+        have been fully accounted (counters advanced, activations counted)
+        and only need committing; the leftovers carry every event the exact
+        path must see.  Returns ``None`` when the batch isn't worth
+        vectorizing (mixed types, failure/timeout slices, too few claimable
+        subjects) — the caller then processes the whole batch normally.
+        """
+        etype = batch[0].type
+        if len({e.type for e in batch}) != 1:
+            return None
+        if etype == TYPE_FAILURE or etype == TYPE_TIMEOUT:
+            return None
+        ids = [e.id for e in batch]
+        if len(set(ids)) != len(ids):
+            # A re-published duplicate inside the batch: counting the copies
+            # would double-count the join.  The grouped path's in-flight set
+            # dedups exactly (§3.4), so leave the whole batch to it.
+            return None
+        histogram = Counter([e.subject for e in batch])
+        # tid -> [ctx, count0, expected, events_in_batch]
+        pairs: dict = {}
+        handled: set = set()
+        for subject, m in histogram.items():
+            entries = entries_for(subject)
+            if not entries:
+                continue  # unknown subject: worker's drop-count path
+            cand = []
+            for entry in entries:
+                if not entry.matches(etype):
+                    continue
+                trg = entry.trg
+                cspec = entry.cspec
+                if (entry.cname != "counter" or cspec.get("aggregate", True)
+                        or cspec.get("exactly_once")):
+                    cand = None  # needs per-event work → exact path
+                    break
+                ctx = entry.ctx
+                expected = int(ctx.get("expected", cspec.get("expected", 1)))
+                tid = trg.trigger_id
+                prior = pairs.get(tid)
+                count0 = prior[1] if prior is not None else ctx.get("count", 0)
+                acc = prior[3] if prior is not None else 0
+                if not isinstance(count0, int) or count0 + acc + m >= expected:
+                    cand = None  # could fire inside this batch
+                    break
+                cand.append((tid, ctx, count0, expected))
+            if not cand:  # ineligible, or zero enabled candidates (DLQ path)
+                continue
+            for tid, ctx, count0, expected in cand:
+                prior = pairs.get(tid)
+                if prior is None:
+                    pairs[tid] = [ctx, count0, expected, m]
+                else:
+                    prior[3] += m
+            handled.add(subject)
+        if len(handled) < self.min_subjects or not pairs:
+            return None
+
+        rows = list(pairs.values())
+        n_rows = len(rows)
+        counts = np.fromiter((r[1] for r in rows), np.int32, n_rows)
+        expected = np.fromiter((r[2] for r in rows), np.int32, n_rows)
+        lens = np.fromiter((r[3] for r in rows), np.int64, n_rows)
+        # The routed event batch as the kernel sees it: one trigger-row id
+        # per event (−1 would be padding; none is needed here).
+        event_rows = np.repeat(np.arange(n_rows, dtype=np.int32), lens)
+        new_counts, fired = self._join(event_rows, counts, expected)
+        if fired.any():  # pragma: no cover - screening guarantees this
+            raise AssertionError("vector join plane screening let a fire through")
+        total = 0
+        for i, row in enumerate(rows):
+            row[0]["count"] = int(new_counts[i])
+            total += row[3]
+        stats.activations += total
+        self.calls += 1
+        self.events += int(lens.sum())
+
+        if len(handled) == len(histogram):
+            return ids, []
+        return ([e.id for e in batch if e.subject in handled],
+                [e for e in batch if e.subject not in handled])

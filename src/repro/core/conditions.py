@@ -5,30 +5,81 @@ A condition is ``fn(context, event, params) -> bool``; it may mutate the
 context (stateful composite event detection: counters, aggregation) and MUST
 be idempotent w.r.t. re-delivered events (§3.4) — the built-in aggregators
 offer an ``exactly_once`` param that dedups by event id inside the context.
+
+Batched-condition protocol (the worker's batch plane)
+-----------------------------------------------------
+A condition may additionally register a *batched* implementation
+``fn_batch(ctx, events, params) -> fire_index | None`` via
+``register_condition(name, fn, batched=fn_batch)``.  The contract:
+
+* ``events`` is a non-empty, **type-uniform** slice of CloudEvents addressed
+  to this trigger, in arrival order (the worker groups each consumed batch
+  by ``(subject, type)``).
+* The batched fn must be semantically identical to folding the scalar fn
+  over the slice: it returns ``None`` if no event fires (the whole slice is
+  consumed and the context reflects it), or the smallest index ``i`` at
+  which the scalar fn would have returned True — with the context reflecting
+  consumption of ``events[:i + 1]`` only.  The worker then runs the action
+  with ``events[i]`` and re-enters the batched fn on the remaining slice.
+* Anything the batched fn cannot replicate exactly (``exactly_once`` dedup
+  under redelivery, timeout handling) falls back to sweeping the scalar fn
+  over the slice via ``scalar_sweep`` — correctness first, speed second.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, List, Optional
 
 from .events import TYPE_FAILURE, TYPE_TIMEOUT, CloudEvent
 
 ConditionFn = Callable[[Any, CloudEvent, Dict[str, Any]], bool]
+BatchedConditionFn = Callable[[Any, List[CloudEvent], Dict[str, Any]], Optional[int]]
 
 CONDITIONS: Dict[str, ConditionFn] = {}
+#: Opt-in batched implementations, keyed like ``CONDITIONS``.
+BATCHED_CONDITIONS: Dict[str, BatchedConditionFn] = {}
 
 
-def condition(name: str) -> Callable[[ConditionFn], ConditionFn]:
+def condition(name: str, batched: Optional[BatchedConditionFn] = None
+              ) -> Callable[[ConditionFn], ConditionFn]:
     def deco(fn: ConditionFn) -> ConditionFn:
-        CONDITIONS[name] = fn
+        register_condition(name, fn, batched=batched)
         return fn
 
     return deco
 
 
-def register_condition(name: str, fn: ConditionFn) -> None:
-    """Third-party extension point (paper: extensible at all levels)."""
+def register_condition(name: str, fn: ConditionFn,
+                       batched: Optional[BatchedConditionFn] = None) -> None:
+    """Third-party extension point (paper: extensible at all levels).
+
+    ``batched`` opts the condition into the worker's batch plane; without it
+    the worker degrades to the scalar path for this condition's slices."""
     CONDITIONS[name] = fn
+    if batched is not None:
+        BATCHED_CONDITIONS[name] = batched
+    else:
+        # re-registering without a batched impl must not leave a stale one
+        BATCHED_CONDITIONS.pop(name, None)
+
+
+def batched_condition(name: str) -> Callable[[BatchedConditionFn], BatchedConditionFn]:
+    """Attach a batched implementation to an already-registered condition."""
+    def deco(fn: BatchedConditionFn) -> BatchedConditionFn:
+        BATCHED_CONDITIONS[name] = fn
+        return fn
+
+    return deco
+
+
+def scalar_sweep(fn: ConditionFn, ctx, events: List[CloudEvent],
+                 params: Dict[str, Any]) -> Optional[int]:
+    """Reference fold of a scalar condition over a slice — the semantics every
+    batched implementation must match, and the fallback they delegate to."""
+    for i, event in enumerate(events):
+        if fn(ctx, event, params):
+            return i
+    return None
 
 
 def _result_of(event: CloudEvent) -> Any:
@@ -42,20 +93,45 @@ def _true(ctx, event, params) -> bool:
     return True
 
 
+@batched_condition("true")
+def _true_batch(ctx, events, params) -> Optional[int]:
+    return 0
+
+
 @condition("false")
 def _false(ctx, event, params) -> bool:
     return False
+
+
+@batched_condition("false")
+def _false_batch(ctx, events, params) -> Optional[int]:
+    return None
+
+
+def _seen_set(ctx) -> set:
+    """The exactly-once dedup index as an in-memory set.
+
+    Checkpoints serialize it as a sorted list (``context.jsonable``); a
+    recovered context therefore holds a list, converted back on first use.
+    Kept as a set in memory so 10k-event joins don't scan a list per event
+    (the old O(n²) behavior)."""
+    seen = ctx.get("seen_ids")
+    if isinstance(seen, set):
+        return seen
+    seen = set(seen) if seen else set()
+    ctx["seen_ids"] = seen
+    return seen
 
 
 def _dedup(ctx, event, params) -> bool:
     """Returns True if this event was already counted (skip it)."""
     if not params.get("exactly_once", False):
         return False
-    seen = ctx.get("seen_ids") or []
+    seen = _seen_set(ctx)
     if event.id in seen:
         return True
-    seen.append(event.id)
-    ctx["seen_ids"] = seen
+    seen.add(event.id)
+    ctx["seen_ids"] = seen  # same object; assignment marks the key dirty
     return False
 
 
@@ -89,9 +165,55 @@ def _counter(ctx, event, params) -> bool:
             ctx["count"] = 0
             ctx["results"] = []
             if params.get("exactly_once"):
-                ctx["seen_ids"] = []
+                ctx["seen_ids"] = set()
         return True
     return False
+
+
+def _count_slice(ctx, events, cnt: int, threshold: int,
+                 aggregate: bool) -> Optional[int]:
+    """Shared counting core of the batched aggregators: advance ``count``
+    over the slice (appending results when aggregating) and return the fire
+    index where the running count reaches ``threshold``, or None.  When the
+    count is already at/over the threshold the first event fires — matching
+    the scalar aggregators, which keep returning True once satisfied."""
+    n = len(events)
+    if cnt + n < threshold:
+        ctx["count"] = cnt + n
+        if aggregate:
+            results = ctx.get("results") or []
+            results.extend(_result_of(e) for e in events)
+            ctx["results"] = results
+        return None
+    fire_idx = max(0, threshold - cnt - 1)
+    take = fire_idx + 1
+    ctx["count"] = cnt + take
+    if aggregate:
+        results = ctx.get("results") or []
+        results.extend(_result_of(e) for e in events[:take])
+        ctx["results"] = results
+    return fire_idx
+
+
+@batched_condition("counter")
+def _counter_batch(ctx, events, params) -> Optional[int]:
+    if events[0].type == TYPE_FAILURE:
+        # type-uniform slice: every event is a failure notification
+        ctx["failures"] = ctx.get("failures", 0) + len(events)
+        return None
+    if params.get("exactly_once", False):
+        # redelivery dedup interleaves with counting — scalar is the oracle
+        return scalar_sweep(_counter, ctx, events, params)
+    expected = int(ctx.get("expected", params.get("expected", 1)))
+    fire_idx = _count_slice(ctx, events, ctx.get("count", 0), expected,
+                            params.get("aggregate", True))
+    if fire_idx is None:
+        return None
+    ctx["fired_results"] = ctx.get("results") or []
+    if params.get("reset_on_fire"):
+        ctx["count"] = 0
+        ctx["results"] = []
+    return fire_idx
 
 
 @condition("threshold_join")
@@ -115,6 +237,20 @@ def _threshold_join(ctx, event, params) -> bool:
     expected = int(ctx.get("expected", params.get("expected", 1)))
     frac = float(params.get("fraction", 1.0))
     return cnt >= max(1, math.ceil(expected * frac))
+
+
+@batched_condition("threshold_join")
+def _threshold_join_batch(ctx, events, params) -> Optional[int]:
+    et = events[0].type
+    if et == TYPE_FAILURE:
+        ctx["failures"] = ctx.get("failures", 0) + len(events)
+        return None
+    if et == TYPE_TIMEOUT or params.get("exactly_once", False):
+        return scalar_sweep(_threshold_join, ctx, events, params)
+    expected = int(ctx.get("expected", params.get("expected", 1)))
+    frac = float(params.get("fraction", 1.0))
+    threshold = max(1, math.ceil(expected * frac))
+    return _count_slice(ctx, events, ctx.get("count", 0), threshold, True)
 
 
 _OPS = {

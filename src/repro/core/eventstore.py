@@ -20,7 +20,6 @@ import json
 import os
 import threading
 from collections import deque
-from itertools import islice
 from typing import Dict, Iterable, List, Optional
 
 from .events import CloudEvent
@@ -34,46 +33,88 @@ class StreamShard:
     are built from.  Not thread-safe on its own — the owning store serializes
     access.
 
-    * ``pending`` — FIFO of uncommitted events; ``consume`` peeks without
-      removing (at-least-once: events stay until committed).
-    * ``commit`` — removes events and records them in commit order.  Because
-      consumers process the stream in order, committing an in-order prefix is
-      the common case and costs O(batch); out-of-order commit (events skipped
-      into the DLQ mid-batch) falls back to a scan.
+    * the pending log — an append-only list with a consume ``head`` offset
+      (compacted periodically); ``consume`` peeks without removing
+      (at-least-once: events stay until committed).
+    * ``commit`` — removes events and records them in commit order.  The
+      common case — a worker committing exactly the batch it consumed — is a
+      single C-level slice/set comparison + bulk set/list update (O(batch)
+      with no per-event interpreter work); ids committed out of arrival order
+      (events skipped into the DLQ mid-batch, grouped batch-plane commits
+      interleaved with sink events) fall back to a per-event prefix walk and
+      finally an O(pending) scan.
     * ``dlq`` — quarantine for events whose trigger is disabled (§3.4);
       ``redrive`` re-appends them to the stream.
     """
 
-    __slots__ = ("pending", "pending_ids", "committed", "dlq")
+    __slots__ = ("_log", "head", "pending_ids", "committed_ids",
+                 "_committed_log", "dlq", "_has_dups")
+
+    #: Compact the consumed prefix of the log once it exceeds this length.
+    COMPACT_AT = 8192
 
     def __init__(self) -> None:
-        self.pending: deque = deque()
+        self._log: List[CloudEvent] = []
+        self.head = 0  # index of the first uncommitted event in _log
         self.pending_ids: set = set()
-        self.committed: Dict[str, CloudEvent] = {}  # insertion = commit order
+        self.committed_ids: set = set()
+        self._committed_log: List[CloudEvent] = []  # commit order
         self.dlq: deque = deque()
+        # True while the log may hold two copies of one id (a broker-style
+        # redelivery via re-publish).  Only then do consume/commit pay the
+        # dedup-filtering slow path.
+        self._has_dups = False
+
+    def _compact(self) -> None:
+        if self.head >= self.COMPACT_AT:
+            del self._log[:self.head]
+            self.head = 0
 
     def publish(self, events: Iterable[CloudEvent]) -> None:
         events = list(events)
-        self.pending.extend(events)
-        self.pending_ids.update(e.id for e in events)
+        self._log.extend(events)
+        ids = [e.id for e in events]
+        pids = self.pending_ids
+        before = len(pids)
+        pids.update(ids)
+        # C-level dup detection: re-published pending ids, duplicates within
+        # the batch, or a copy of an already-committed id.
+        if len(pids) - before != len(ids) or not self.committed_ids.isdisjoint(ids):
+            self._has_dups = True
 
     def consume(self, max_events: int) -> List[CloudEvent]:
-        if len(self.pending) <= max_events:
-            return list(self.pending)
-        return list(islice(self.pending, max_events))
+        batch = self._log[self.head:self.head + max_events]
+        if self._has_dups and batch:
+            committed = self.committed_ids
+            batch = [e for e in batch if e.id not in committed]
+        return batch
 
     def commit_prefix(self, event_ids: set) -> int:
         """Commit the in-order head of the stream that is in ``event_ids``.
-        O(committed) — the common case, since consumers process in order."""
-        q = self.pending
-        committed = self.committed
-        pids = self.pending_ids
+        O(committed) — the common case, since consumers process in order.
+        Duplicate copies of an already-committed id are consumed from the log
+        but committed (logged/counted) only once."""
+        log = self._log
+        head = self.head
+        end = len(log)
+        cids = self.committed_ids
+        clog = self._committed_log
         n = 0
-        while q and q[0].id in event_ids:
-            e = q.popleft()
-            pids.discard(e.id)
-            committed[e.id] = e
-            n += 1
+        while head < end:
+            e = log[head]
+            eid = e.id
+            if eid not in event_ids:
+                break
+            if eid not in cids:
+                cids.add(eid)
+                clog.append(e)
+                n += 1
+            head += 1
+        if head != self.head:
+            self.pending_ids.difference_update(
+                e.id for e in log[self.head:head])
+            self.head = head
+            self._compact()
         return n
 
     def commit_scan(self, event_ids: set) -> int:
@@ -83,42 +124,72 @@ class StreamShard:
         if not leftover:
             return 0
         n = 0
-        keep: deque = deque()
-        committed = self.committed
-        pids = self.pending_ids
-        for e in self.pending:
+        keep: List[CloudEvent] = []
+        cids = self.committed_ids
+        clog = self._committed_log
+        for e in self._log[self.head:]:
             if e.id in leftover:
-                pids.discard(e.id)
-                committed[e.id] = e
-                n += 1
+                # duplicate copies are dropped but committed only once
+                if e.id not in cids:
+                    cids.add(e.id)
+                    clog.append(e)
+                    n += 1
             else:
                 keep.append(e)
-        self.pending = keep
+        self.pending_ids.difference_update(leftover)
+        self._log = keep
+        self.head = 0
         return n
 
-    def commit(self, event_ids: set) -> int:
+    def commit(self, event_ids) -> int:
         """Commit the given ids (ids not pending in this shard are ignored).
         Returns the number of events actually committed here."""
-        n = self.commit_prefix(event_ids)
-        if n < len(event_ids):
-            n += self.commit_scan(event_ids)
+        ids = event_ids if isinstance(event_ids, set) else set(event_ids)
+        k = len(ids)
+        head = self.head
+        log = self._log
+        # Bulk fast path: the batch is exactly the next k pending events (in
+        # any order).  One slice + two C-level set ops + list extend: no
+        # per-event interpreter work at all.
+        if k and not self._has_dups and head + k <= len(log):
+            batch = log[head:head + k]
+            if {e.id for e in batch} == ids:
+                self.committed_ids.update(ids)
+                self._committed_log.extend(batch)
+                self.pending_ids.difference_update(ids)
+                self.head = head + k
+                self._compact()
+                return k
+        n = self.commit_prefix(ids)
+        if n < k:
+            n += self.commit_scan(ids)
+        if self._has_dups:
+            # Purge surviving copies of committed ids so UNCOMMITTED_ONLY
+            # consumers are never handed a committed event again.
+            committed = self.committed_ids
+            tail = [e for e in self._log[self.head:] if e.id not in committed]
+            self._log = tail
+            self.head = 0
+            self.pending_ids = {e.id for e in tail}
+            self._has_dups = len(self.pending_ids) != len(tail)
         return n
 
     def is_committed(self, event_id: str) -> bool:
-        return event_id in self.committed
+        return event_id in self.committed_ids
 
     def lag(self) -> int:
-        return len(self.pending)
+        return len(self._log) - self.head
 
     def commit_offset(self) -> int:
         """Monotone per-shard commit offset (Kafka-consumer-group analogue)."""
-        return len(self.committed)
+        return len(self._committed_log)
 
     def to_dlq(self, event: CloudEvent) -> None:
         self.dlq.append(event)
         if event.id in self.pending_ids:
             self.pending_ids.discard(event.id)
-            self.pending = deque(e for e in self.pending if e.id != event.id)
+            self._log = [e for e in self._log[self.head:] if e.id != event.id]
+            self.head = 0
 
     def redrive(self) -> int:
         n = len(self.dlq)
@@ -131,7 +202,7 @@ class StreamShard:
         return len(self.dlq)
 
     def committed_events(self) -> List[CloudEvent]:
-        return list(self.committed.values())
+        return list(self._committed_log)
 
 
 class EventStore:
@@ -181,6 +252,11 @@ class EventStore:
 
 class MemoryEventStore(EventStore):
     """One ``StreamShard`` per workflow (the unpartitioned fast path)."""
+
+    #: ``consume`` only returns pending (uncommitted) events — commit removes
+    #: them from the stream — so consumers may skip per-event is_committed
+    #: round-trips and dedup only against their in-flight set.
+    UNCOMMITTED_ONLY = True
 
     def __init__(self) -> None:
         self._lock = threading.RLock()
@@ -259,6 +335,11 @@ class FileEventStore(EventStore):
     uncommitted set = log - committed, which is exactly the paper's
     "the event broker will send again uncommitted events" recovery semantics.
     """
+
+    #: Like ``MemoryEventStore``: the pending mirror excludes committed ids
+    #: (at load, on refresh, and on commit), so consume never re-delivers a
+    #: committed event.
+    UNCOMMITTED_ONLY = True
 
     def __init__(self, root: str) -> None:
         self.root = root
@@ -378,6 +459,12 @@ class FileEventStore(EventStore):
             log_p, _, _ = self._paths(workflow)
             self._append(log_p, [e.to_json() for e in events])
             self._offsets[workflow] = os.path.getsize(log_p)
+            # A re-published copy of a committed id must not re-enter the
+            # pending mirror (UNCOMMITTED_ONLY contract); the log append above
+            # is harmless — _load filters committed ids on recovery.
+            committed = self._committed_ids.get(workflow)
+            if committed:
+                events = [e for e in events if e.id not in committed]
             self._pending[workflow].extend(events)
 
     def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:

@@ -5,6 +5,14 @@ Checkpointing contract (§3.4): each time a trigger fires, the contexts of all
 activated triggers are persisted *before* the consumed events are committed to
 the event store.  A restarted worker therefore reloads trigger definitions and
 the last checkpointed contexts, and replays uncommitted events on top.
+
+Incremental checkpoints: the worker emits per-trigger *deltas*
+(``TriggerContext.take_delta``) via ``put_contexts_delta``.  The durable
+store appends them to a per-workflow JSONL context log — one small
+append+fsync per checkpoint instead of rewriting every context — and
+periodically compacts the log back into the base ``contexts.json``.
+``get_contexts`` replays base + log, so crash recovery sees exactly the
+state of the last acknowledged checkpoint.
 """
 from __future__ import annotations
 
@@ -12,6 +20,8 @@ import json
 import os
 import threading
 from typing import Any, Dict, List, Optional
+
+from .context import apply_context_delta
 
 
 class StateStore:
@@ -30,12 +40,30 @@ class StateStore:
     def put_trigger(self, workflow: str, trigger_id: str, spec: Dict[str, Any]) -> None:
         raise NotImplementedError
 
+    def put_triggers(self, workflow: str, specs: Dict[str, Dict[str, Any]]) -> None:
+        """Persist a batch of trigger specs.  Stores should override this with
+        a single atomic write; the default degrades to per-trigger puts."""
+        for tid, spec in specs.items():
+            self.put_trigger(workflow, tid, spec)
+
     def get_triggers(self, workflow: str) -> Dict[str, Dict[str, Any]]:
         raise NotImplementedError
 
     def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
         """Atomically persist a batch of trigger contexts (the checkpoint)."""
         raise NotImplementedError
+
+    def put_contexts_delta(self, workflow: str, deltas: Dict[str, Dict[str, Any]]) -> None:
+        """Persist a batch of context *deltas* (``TriggerContext.take_delta``
+        records).  Default: read-modify-write through ``put_contexts`` so any
+        third-party store keeps working; the built-in stores override with
+        O(delta) fast paths."""
+        stored = self.get_contexts(workflow)
+        merged = {
+            tid: apply_context_delta(stored.get(tid, {}), delta)
+            for tid, delta in deltas.items()
+        }
+        self.put_contexts(workflow, merged)
 
     def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
         raise NotImplementedError
@@ -72,6 +100,10 @@ class MemoryStateStore(StateStore):
         with self._lock:
             self._triggers.setdefault(workflow, {})[trigger_id] = spec
 
+    def put_triggers(self, workflow: str, specs: Dict[str, Dict[str, Any]]) -> None:
+        with self._lock:
+            self._triggers.setdefault(workflow, {}).update(specs)
+
     def get_triggers(self, workflow: str) -> Dict[str, Dict[str, Any]]:
         with self._lock:
             return {k: dict(v) for k, v in self._triggers.get(workflow, {}).items()}
@@ -82,18 +114,42 @@ class MemoryStateStore(StateStore):
             for tid, ctx in contexts.items():
                 store[tid] = json.loads(json.dumps(ctx))  # deep copy, JSON-safe
 
+    def put_contexts_delta(self, workflow: str, deltas: Dict[str, Dict[str, Any]]) -> None:
+        with self._lock:
+            store = self._contexts.setdefault(workflow, {})
+            # deep-copy the *delta* (isolating the worker's live objects),
+            # not the merged state — keeps the checkpoint O(delta).
+            safe = json.loads(json.dumps(deltas))
+            for tid, delta in safe.items():
+                store[tid] = apply_context_delta(store.get(tid, {}), delta)
+
     def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
         with self._lock:
             return {k: dict(v) for k, v in self._contexts.get(workflow, {}).items()}
 
 
 class FileStateStore(StateStore):
-    """Durable JSON-file state store: ``<root>/<wf>/{meta,triggers,contexts}.json``."""
+    """Durable JSON-file state store.
 
-    def __init__(self, root: str) -> None:
+    Layout per workflow directory:
+
+    * ``meta.json`` / ``triggers.json`` — atomic full-file writes.
+    * ``contexts.json`` — the compacted context base map.
+    * ``contexts.delta.jsonl`` — append-only checkpoint log; each line is one
+      ``put_contexts_delta`` batch (``{tid: delta, ...}``).  Readers replay
+      base + log; the log is folded back into ``contexts.json`` every
+      ``compact_every`` checkpoints (and on any full ``put_contexts``).
+      A torn final line from a mid-append crash is ignored on replay —
+      its checkpoint was never acknowledged, so the §3.4 contract holds and
+      the broker redelivers the corresponding events.
+    """
+
+    def __init__(self, root: str, compact_every: int = 256) -> None:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._lock = threading.RLock()
+        self.compact_every = compact_every
+        self._delta_lines: Dict[str, int] = {}
 
     def _dir(self, wf: str) -> str:
         d = os.path.join(self.root, wf.replace("/", "_"))
@@ -130,16 +186,22 @@ class FileStateStore(StateStore):
                 for fn in os.listdir(d):
                     os.remove(os.path.join(d, fn))
                 os.rmdir(d)
+            self._delta_lines.pop(workflow, None)
 
     def workflows(self) -> List[str]:
         with self._lock:
             return [d for d in os.listdir(self.root) if os.path.isdir(os.path.join(self.root, d))]
 
     def put_trigger(self, workflow: str, trigger_id: str, spec: Dict[str, Any]) -> None:
+        self.put_triggers(workflow, {trigger_id: spec})
+
+    def put_triggers(self, workflow: str, specs: Dict[str, Dict[str, Any]]) -> None:
+        """One read + one atomic write for the whole batch (the worker's
+        dirty-trigger checkpoint), instead of a rewrite+fsync per trigger."""
         with self._lock:
             p = os.path.join(self._dir(workflow), "triggers.json")
             triggers = self._read(p, {})
-            triggers[trigger_id] = spec
+            triggers.update(specs)
             self._write(p, triggers)
 
     def get_triggers(self, workflow: str) -> Dict[str, Dict[str, Any]]:
@@ -147,14 +209,98 @@ class FileStateStore(StateStore):
             p = os.path.join(self.root, workflow.replace("/", "_"), "triggers.json")
             return self._read(p, {})
 
+    # -- contexts: compacted base + append-only delta log ---------------------
+    def _ctx_paths(self, wf_dir: str):
+        return (os.path.join(wf_dir, "contexts.json"),
+                os.path.join(wf_dir, "contexts.delta.jsonl"))
+
+    def _read_delta_log(self, log_p: str):
+        """Replay the delta log.  Returns ``(batches, valid_bytes)`` where
+        ``valid_bytes`` is the length of the parseable prefix — a torn line
+        from a crash mid-append (never acknowledged) ends it."""
+        if not os.path.exists(log_p):
+            return [], 0
+        batches: List[Dict[str, Any]] = []
+        valid = 0
+        with open(log_p) as f:  # json.dumps writes ASCII: chars == bytes
+            for line in f:
+                if not line.endswith("\n"):
+                    # the final append never completed (fsync cannot have
+                    # returned), even if the fragment happens to parse —
+                    # the checkpoint was not acknowledged.
+                    break
+                stripped = line.strip()
+                if stripped:
+                    try:
+                        batches.append(json.loads(stripped))
+                    except ValueError:
+                        break
+                valid += len(line)
+        return batches, valid
+
+    def _repair_delta_log(self, workflow: str, log_p: str) -> int:
+        """Drop a torn tail *before* new checkpoints are appended after it
+        (they would otherwise be acknowledged but skipped on every replay).
+        Returns the number of valid batches in the log."""
+        batches, valid = self._read_delta_log(log_p)
+        if os.path.exists(log_p) and valid < os.path.getsize(log_p):
+            with open(log_p, "r+") as f:
+                f.truncate(valid)
+                f.flush()
+                os.fsync(f.fileno())
+        return len(batches)
+
+    def _merged_contexts(self, wf_dir: str) -> Dict[str, Dict[str, Any]]:
+        base_p, log_p = self._ctx_paths(wf_dir)
+        contexts = self._read(base_p, {})
+        for batch in self._read_delta_log(log_p)[0]:
+            for tid, delta in batch.items():
+                contexts[tid] = apply_context_delta(contexts.get(tid, {}), delta)
+        return contexts
+
+    def _compact(self, workflow: str, wf_dir: str,
+                 contexts: Dict[str, Dict[str, Any]]) -> None:
+        base_p, log_p = self._ctx_paths(wf_dir)
+        self._write(base_p, contexts)
+        if os.path.exists(log_p):
+            os.remove(log_p)
+        self._delta_lines[workflow] = 0
+
     def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
         with self._lock:
-            p = os.path.join(self._dir(workflow), "contexts.json")
-            stored = self._read(p, {})
+            wf_dir = self._dir(workflow)
+            stored = self._merged_contexts(wf_dir)
             stored.update(contexts)
-            self._write(p, stored)
+            self._compact(workflow, wf_dir, stored)
+
+    def put_contexts_delta(self, workflow: str, deltas: Dict[str, Dict[str, Any]]) -> None:
+        with self._lock:
+            wf_dir = self._dir(workflow)
+            _, log_p = self._ctx_paths(wf_dir)
+            n = self._delta_lines.get(workflow)
+            if n is None:
+                # first touch after a restart (or after a failed append):
+                # truncate any torn tail before appending, or later
+                # checkpoints would land beyond it and be silently skipped
+                # by every replay.
+                n = self._repair_delta_log(workflow, log_p)
+            try:
+                with open(log_p, "a") as f:
+                    f.write(json.dumps(deltas, separators=(",", ":")) + "\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+            except Exception:
+                # the append may have landed partially: force a repair pass
+                # before the next append so the torn fragment is truncated
+                self._delta_lines.pop(workflow, None)
+                raise
+            self._delta_lines[workflow] = n + 1
+            if self._delta_lines[workflow] >= self.compact_every:
+                self._compact(workflow, wf_dir, self._merged_contexts(wf_dir))
 
     def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
         with self._lock:
-            p = os.path.join(self.root, workflow.replace("/", "_"), "contexts.json")
-            return self._read(p, {})
+            wf_dir = os.path.join(self.root, workflow.replace("/", "_"))
+            if not os.path.isdir(wf_dir):
+                return {}
+            return self._merged_contexts(wf_dir)

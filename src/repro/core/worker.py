@@ -2,17 +2,34 @@
 
 Processing pipeline per batch (§3.2 trigger life-cycle + §3.4 fault tolerance):
 
-  consume → dedup by event id → match triggers by subject (+type) →
-  **activate** (evaluate Condition over the shared Context) →
+  consume → dedup by event id → **group** by (subject, type) →
+  **activate** (evaluate Conditions over event *slices* — the batch plane) →
   **fire** (run Action; transient triggers deactivate) →
-  checkpoint: persist dirty contexts → commit processed events → redrive DLQ.
+  checkpoint: persist context *deltas* → commit processed events → redrive DLQ.
+
+The batch plane (this PR's hot-loop restructuring): instead of a per-event
+interpreter walk (registry dispatch + context wrap per event), a consumed
+batch is grouped once by ``(subject, type)`` and each matching trigger
+evaluates its condition over the whole arrival-ordered slice via the
+batched-condition protocol (``conditions.BATCHED_CONDITIONS``).  Groups that
+are provably pure counting are further folded into one segmented-sum array
+op by the ``VectorJoinPlane`` (the ``event_join`` kernel's algorithm).
+Conditions without a batched implementation degrade to the identical scalar
+path per slice.  Set ``batch_plane=False`` to run the legacy per-event
+interpreter (kept as the parity oracle).
+
+Ordering contract: slices preserve per-subject arrival order (the bus's
+per-key guarantee); cross-subject interleaving within a batch is relaxed —
+the at-least-once event store contract already requires consumers to
+tolerate reordering and redelivery, and parity tests pin the semantics.
 
 Crash-consistency contract: contexts are persisted *before* events are
 committed, so after a crash the event broker re-delivers uncommitted events
 and replaying them over the last checkpointed contexts reconstructs the state
 (conditions are idempotent; the built-in aggregators can additionally dedup by
 event id inside their context for exactly-once counting across the
-persist/commit window).
+persist/commit window).  Checkpoints are incremental: only dirty context
+*keys* (``TriggerContext.take_delta``) and dirty trigger ids are written.
 
 Out-of-order sequences: an event whose trigger exists but is *disabled* goes
 to the Dead Letter Queue and is redriven when any trigger state changes
@@ -20,14 +37,16 @@ to the Dead Letter Queue and is redriven when any trigger state changes
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 import traceback
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-from .actions import run_action, run_condition
+from .actions import ACTIONS, run_action, run_condition
+from .conditions import BATCHED_CONDITIONS, CONDITIONS
 from .context import TriggerContext
-from .events import TYPE_INIT, CloudEvent
+from .events import CloudEvent
 from .eventstore import EventStore
 from .functions import FunctionBackend
 from .statestore import StateStore
@@ -45,6 +64,30 @@ class WorkerStats:
         self.dlq_events = 0
 
 
+class _Entry:
+    """Compiled per-subject dispatch entry: registry lookups and the trigger's
+    context resolved once (invalidated on any trigger-structure change)."""
+
+    __slots__ = ("trg", "ctx", "cspec", "cname", "cfn", "bfn", "aspec", "afn")
+
+    def __init__(self, trg: Trigger, ctx: TriggerContext) -> None:
+        self.trg = trg
+        self.ctx = ctx
+        self.cspec = trg.condition
+        self.cname = self.cspec["name"]
+        self.cfn = CONDITIONS.get(self.cname) or (
+            lambda c, e, s: run_condition(s, c, e))  # late-registered: raise like generic path
+        self.bfn = BATCHED_CONDITIONS.get(self.cname)
+        self.aspec = trg.action
+        self.afn = ACTIONS.get(self.aspec["name"]) or (
+            lambda c, e, s: run_action(s, c, e))
+
+    def matches(self, etype: str) -> bool:
+        """Live candidacy check: enabled and (no filter or type match)."""
+        trg = self.trg
+        return trg.enabled and (not trg.event_type or trg.event_type == etype)
+
+
 class TFWorker:
     def __init__(
         self,
@@ -57,6 +100,8 @@ class TFWorker:
         keep_event_log: bool = True,
         timers=None,
         partitions: Optional[Iterable[int]] = None,
+        batch_plane: bool = True,
+        vector_join: Optional[str] = None,
     ) -> None:
         self.workflow = workflow
         self.event_store = event_store
@@ -74,11 +119,14 @@ class TFWorker:
         self.partitions: Optional[tuple] = (
             tuple(partitions) if partitions is not None else None
         )
+        # Hoisted once: partition routing for inline sink-event ownership.
+        self._partition_for = getattr(event_store, "partition_for", None)
 
         self.lock = threading.RLock()
         self.triggers: Dict[str, Trigger] = {}
         self._by_subject: Dict[str, List[Trigger]] = {}
         self._contexts: Dict[str, TriggerContext] = {}
+        self._dispatch: Dict[str, List[_Entry]] = {}
         self._seen: set = set()          # processed-but-uncommitted event ids
         self._sink: List[CloudEvent] = []  # internal event buffer (§5.2)
         self.event_log: List[CloudEvent] = []  # native event-sourcing log (§5.3)
@@ -86,8 +134,32 @@ class TFWorker:
         self.finished = False
         self.result: Any = None
         self._stop = threading.Event()
-        self._trigger_state_dirty = False
+        self._dirty_triggers: set = set()
+        # bumped on any trigger-structure change (add/intercept/enable):
+        # the batch plane uses it to re-offer the rest of an in-flight slice
+        # to triggers registered or enabled by an action mid-slice.
+        self._struct_version = 0
+        # while a slice evaluation is in flight: the slice index of the event
+        # whose condition/action is currently running, so a dynamically
+        # added/enabled trigger can record exactly where it came online
+        self._slice_pos: Optional[int] = None
+        self._birth_pos: Dict[str, int] = {}
         self.last_active = time.monotonic()
+
+        self.batch_plane = batch_plane
+        self._vector_plane = None
+        if batch_plane:
+            mode = vector_join or os.environ.get("TRIGGERFLOW_JOIN_BACKEND", "auto")
+            if mode != "off":
+                try:
+                    from .batch import VectorJoinPlane
+
+                    self._vector_plane = VectorJoinPlane(backend=mode)
+                except Exception:  # noqa: BLE001
+                    if mode != "auto":
+                        # an explicitly requested backend must fail loudly
+                        raise
+                    self._vector_plane = None  # auto: numpy missing, plane off
 
         self._recover()
 
@@ -111,23 +183,41 @@ class TFWorker:
         for subj in trg.activation_events:
             self._by_subject.setdefault(subj, []).append(trg)
 
+    def _invalidate_dispatch(self) -> None:
+        # Clear in place: run_once may hold a subject's entries across a
+        # slice, and a dynamic trigger added mid-batch must be visible to the
+        # next slice lookup.
+        self._dispatch.clear()
+        self._struct_version += 1
+
+    def _mark_trigger_dirty(self, trigger_id: str) -> None:
+        self._dirty_triggers.add(trigger_id)
+
     def add_trigger(self, trg: Trigger, persist: bool = True) -> str:
         with self.lock:
             self._index(trg)
+            self._invalidate_dispatch()
+            if self._slice_pos is not None:
+                self._birth_pos[trg.trigger_id] = self._slice_pos
             if persist:
                 self.state_store.put_trigger(self.workflow, trg.trigger_id, trg.to_dict())
         return trg.trigger_id
 
     def add_dynamic_trigger(self, trg: Trigger) -> str:
         tid = self.add_trigger(trg)
-        self._trigger_state_dirty = True
+        self._mark_trigger_dirty(tid)
         return tid
 
     def set_trigger_enabled(self, trigger_id: str, enabled: bool) -> None:
         with self.lock:
             trg = self.triggers[trigger_id]
             trg.enabled = enabled
-            self._trigger_state_dirty = True
+            self._mark_trigger_dirty(trigger_id)
+            # entries read `enabled` live, so the dispatch cache stays valid,
+            # but an in-flight slice must learn a trigger came (back) online
+            self._struct_version += 1
+            if enabled and self._slice_pos is not None:
+                self._birth_pos[trigger_id] = self._slice_pos
 
     def intercept(self, trigger_id: str, interceptor_action: Dict[str, Any]) -> None:
         """Wrap a trigger's action with an interceptor (Def. 5)."""
@@ -135,6 +225,7 @@ class TFWorker:
             trg = self.triggers[trigger_id]
             trg.action = {"name": "intercepted", "interceptor": interceptor_action,
                           "inner": trg.action}
+            self._invalidate_dispatch()
             self.state_store.put_trigger(self.workflow, trigger_id, trg.to_dict())
 
     def intercept_by_condition(self, condition_name: str, interceptor_action: Dict[str, Any]) -> int:
@@ -187,12 +278,10 @@ class TFWorker:
         leave events routed to *another* shard's partition for their owner —
         processing them here would double-fire (the owner consumes them too)
         and this worker could never commit them anyway."""
-        if self.partitions is None:
-            return self._sink
-        part_for = getattr(self.event_store, "partition_for", None)
-        if part_for is None:
+        if self.partitions is None or self._partition_for is None:
             return self._sink
         own = set(self.partitions)
+        part_for = self._partition_for
         return [e for e in self._sink if part_for(e.subject) in own]
 
     def _dlq_size(self) -> int:
@@ -207,7 +296,306 @@ class TFWorker:
                 self.workflow, self.partitions)
         return self.event_store.redrive(self.workflow)
 
-    # -- the hot loop ---------------------------------------------------------------
+    # -- the batch-plane hot loop --------------------------------------------------
+    def _entries_for(self, subject: str) -> List[_Entry]:
+        entries = self._dispatch.get(subject)
+        if entries is None:
+            entries = [
+                _Entry(trg, self.context_of(trg.trigger_id))
+                for trg in self._by_subject.get(subject, ())
+            ]
+            self._dispatch[subject] = entries
+        return entries
+
+    def _eval_entry_slice(self, entry: _Entry, events: List[CloudEvent],
+                          pos_base: int = 0) -> Tuple[int, bool, Optional[int]]:
+        """Evaluate one trigger over an arrival-ordered, type-uniform slice.
+
+        Implements the batched-condition protocol: the condition consumes a
+        prefix and reports the first fire index (or None); the action runs
+        with the firing event and evaluation resumes on the rest.  Returns
+        ``(consumed_index_inclusive, fired_any, structure_changed_at)`` —
+        consumption stops early only when a transient fire disables the
+        trigger mid-slice; ``structure_changed_at`` is the earliest slice
+        index at which condition/action code changed trigger structure
+        (dynamic add, interception, enable/disable), so the caller can
+        re-offer the tail to new candidates.  ``pos_base`` anchors
+        ``self._slice_pos`` (the birth-position frame of the caller's slice)
+        when ``events`` is itself a tail of that slice.
+        """
+        trg = entry.trg
+        ctx = entry.ctx
+        cspec = entry.cspec
+        bfn = entry.bfn
+        stats = self.stats
+        fired_any = False
+        changed_at: Optional[int] = None
+        ver = self._struct_version
+        pos = 0
+        n = len(events)
+        try:
+            while pos < n:
+                sl = events[pos:] if pos else events
+                if bfn is not None:
+                    # a structural change inside the batched call is anchored
+                    # to the chunk start — the earliest (safe) re-offer point
+                    self._slice_pos = pos_base + pos
+                    try:
+                        idx = bfn(ctx, sl, cspec)
+                    except Exception:  # noqa: BLE001
+                        # The failed call may have partially mutated the
+                        # context, so re-sweeping the slice with the scalar
+                        # fn would double-count.  Apply the scalar loop's
+                        # exception semantics instead: condition error ⇒ no
+                        # fire for the affected events.
+                        traceback.print_exc()
+                        stats.activations += n - pos
+                        return n - 1, fired_any, changed_at
+                    if self._struct_version != ver:
+                        ver = self._struct_version
+                        if changed_at is None:
+                            changed_at = pos
+                else:
+                    idx = None
+                    cfn = entry.cfn
+                    for i, event in enumerate(sl):
+                        self._slice_pos = pos_base + pos + i
+                        try:
+                            ok = cfn(ctx, event, cspec)
+                        except Exception:  # noqa: BLE001
+                            traceback.print_exc()
+                            ok = False
+                        if self._struct_version != ver:
+                            ver = self._struct_version
+                            if changed_at is None:
+                                changed_at = pos + i
+                        if ok:
+                            idx = i
+                            break
+                if idx is None:
+                    stats.activations += n - pos
+                    return n - 1, fired_any, changed_at
+                stats.activations += idx + 1
+                event = sl[idx]
+                self._slice_pos = pos_base + pos + idx
+                try:
+                    entry.afn(ctx, event, entry.aspec)
+                except Exception:  # noqa: BLE001
+                    traceback.print_exc()
+                if self._struct_version != ver:
+                    ver = self._struct_version
+                    if changed_at is None:
+                        changed_at = pos + idx
+                stats.fires += 1
+                fired_any = True
+                pos += idx + 1
+                if trg.transient:
+                    trg.enabled = False
+                    self._mark_trigger_dirty(trg.trigger_id)
+                    return pos - 1, fired_any, changed_at
+            return n - 1, fired_any, changed_at
+        finally:
+            self._slice_pos = None
+
+    def _process_group(self, subject: str, etype: str, events: List[CloudEvent],
+                       processed_ids: List[str]) -> bool:
+        """Activate matching triggers over one (subject, type) slice."""
+        stats = self.stats
+        fired_any = False
+        pos = 0
+        n = len(events)
+        while pos < n:
+            # Re-fetched per sub-run so mid-slice structural changes (dynamic
+            # triggers, interception) are visible after a transient fire.
+            entries = self._entries_for(subject)
+            if not entries:
+                # Unknown subject: drop (but count).  Nothing to wait for, so
+                # the events are committed, exactly like the scalar path.
+                stats.dlq_events += n - pos
+                processed_ids.extend(e.id for e in events[pos:])
+                return fired_any
+            sl = events[pos:] if pos else events
+            cover = -1
+            change_min: Optional[int] = None
+            any_enabled = False
+            evaluated = set()
+            self._birth_pos.clear()  # birth positions are sl-frame relative
+            for entry in entries:
+                if not entry.matches(etype):
+                    continue
+                any_enabled = True
+                evaluated.add(entry.trg.trigger_id)
+                consumed, fired, changed_at = self._eval_entry_slice(entry, sl)
+                if fired:
+                    fired_any = True
+                if consumed > cover:
+                    cover = consumed
+                if changed_at is not None and (
+                        change_min is None or changed_at < change_min):
+                    change_min = changed_at
+            if not any_enabled:
+                # All candidate triggers disabled → out-of-order → DLQ (§3.4).
+                to_dlq = self.event_store.to_dlq
+                seen_discard = self._seen.discard
+                for e in sl:
+                    to_dlq(self.workflow, e)
+                    seen_discard(e.id)
+                stats.dlq_events += len(sl)
+                return fired_any
+            if change_min is not None:
+                # An action (or condition) changed trigger structure at slice
+                # index ``change_min``: triggers registered or enabled there
+                # must still see the rest of this sub-run's coverage — the
+                # scalar loop re-resolves candidates per event (events beyond
+                # ``cover`` re-enter the outer loop and see them naturally).
+                if self._reoffer_tail(subject, etype, sl, change_min, cover,
+                                      evaluated):
+                    fired_any = True
+            if cover == len(sl) - 1:  # common case: whole slice covered
+                processed_ids.extend(e.id for e in sl)
+            else:
+                processed_ids.extend(e.id for e in sl[:cover + 1])
+            pos += cover + 1
+        return fired_any
+
+    def _reoffer_tail(self, subject: str, etype: str, sl: List[CloudEvent],
+                      change_min: int, cover: int, evaluated: set) -> bool:
+        """Deliver the slice tail to candidates that appeared (or came
+        online) mid-slice and were not part of the original sweep.  Each
+        fresh trigger starts at its recorded *birth position* (the event
+        whose condition/action brought it online — inclusive, matching the
+        scalar oracle, whose live match-list iteration visits a just-added
+        trigger for that very event), falling back to the sweep's earliest
+        change point.  Loops because a re-offered trigger's action can add
+        further triggers; terminates since every round consumes trigger ids
+        into ``evaluated`` and a round without fresh candidates stops."""
+        fired_any = False
+        births = self._birth_pos
+        while change_min <= cover:
+            fresh = [
+                entry for entry in self._entries_for(subject)
+                if entry.trg.trigger_id not in evaluated and entry.matches(etype)
+            ]
+            if not fresh:
+                break
+            next_change: Optional[int] = None
+            for entry in fresh:
+                tid = entry.trg.trigger_id
+                evaluated.add(tid)
+                start = births.get(tid, change_min)
+                if start > cover:
+                    continue
+                tail = sl[start:cover + 1]
+                _consumed, fired, changed_at = self._eval_entry_slice(
+                    entry, tail, pos_base=start)
+                if fired:
+                    fired_any = True
+                if changed_at is not None:
+                    abs_change = start + changed_at
+                    if next_change is None or abs_change < next_change:
+                        next_change = abs_change
+            if next_change is None:
+                break
+            change_min = next_change
+        return fired_any
+
+    def run_once(self, max_events: Optional[int] = None) -> int:
+        """Process one batch.  Returns number of events processed."""
+        if not self.batch_plane:
+            return self._run_once_scalar(max_events)
+        with self.lock:
+            batch = self._consume(max_events or self.batch_size)
+            if not batch and not self._sink:
+                return 0
+            # Stores that only ever hand out uncommitted events
+            # (``UNCOMMITTED_ONLY``) make the per-event committed round-trip a
+            # provable no-op; in-flight dedup against ``_seen`` suffices.
+            check_committed = not getattr(
+                self.event_store, "UNCOMMITTED_ONLY", False)
+            workflow = self.workflow
+            is_committed = self.event_store.is_committed if check_committed else None
+            seen = self._seen
+            seen_add = seen.add
+            event_log = self.event_log if self.keep_event_log else None
+            stats = self.stats
+            vector_plane = self._vector_plane
+            processed_ids: List[str] = []
+            fired_any = False
+            n_new = 0
+            # Tier 1 — vectorized triage: when nothing needs per-event care
+            # (no in-flight ids, store redelivers only uncommitted events, no
+            # event-sourcing log), the pure-counting share of the batch is
+            # folded into one segmented-sum array op and only the leftover
+            # events enter the Python path.
+            if (vector_plane is not None and not seen and is_committed is None
+                    and event_log is None and not self._sink and len(batch) > 1):
+                try:
+                    res = vector_plane.triage(batch, self._entries_for, stats)
+                except Exception:  # noqa: BLE001
+                    # e.g. a non-numeric ctx["expected"] set via introspection:
+                    # screening raises before any context is mutated, so the
+                    # exact path can safely take the whole batch (the scalar
+                    # loop contains the same error per event).
+                    traceback.print_exc()
+                    res = None
+                if res is not None:
+                    handled_ids, batch = res
+                    n_new += len(handled_ids)
+                    processed_ids.extend(handled_ids)
+                    # protect the uncommitted window: even under every_batch
+                    # the checkpoint/commit can fail, and a retry must not
+                    # re-count the redelivered events (their counters already
+                    # advanced)
+                    seen.update(handled_ids)
+            queue = batch
+            qi = 0
+            while qi < len(queue):
+                # Group the segment into type-uniform *runs* per subject:
+                # consecutive same-type events of one subject share a slice,
+                # and a type change (e.g. a timeout between result events)
+                # starts a new group — so same-subject arrival order is fully
+                # preserved across types (the bus's per-key guarantee).
+                groups: List[Tuple[str, str, List[CloudEvent]]] = []
+                current: Dict[str, List] = {}  # subject -> [type, events]
+                while qi < len(queue):
+                    event = queue[qi]
+                    qi += 1
+                    eid = event.id
+                    if eid in seen or (
+                        is_committed is not None and is_committed(workflow, eid)
+                    ):
+                        continue  # at-least-once dedup (§3.4)
+                    seen_add(eid)
+                    if event_log is not None:
+                        event_log.append(event)
+                    n_new += 1
+                    subject = event.subject
+                    cur = current.get(subject)
+                    if cur is not None and cur[0] == event.type:
+                        cur[1].append(event)
+                    else:
+                        evs = [event]
+                        current[subject] = [event.type, evs]
+                        groups.append((subject, event.type, evs))
+                for subject, etype, evs in groups:
+                    if self._process_group(subject, etype, evs, processed_ids):
+                        fired_any = True
+                    # Drain internally-produced events in the same batch (§5.2).
+                    if self._sink:
+                        queue.extend(self._own_sink_events())
+                        self._sink.clear()
+            stats.events_processed += n_new
+            stats.batches += 1
+            if processed_ids:
+                self.last_active = time.monotonic()
+            # Checkpoint: contexts first, then commit (§3.4 ordering).
+            if fired_any or (self.commit_policy == "every_batch" and processed_ids):
+                self._checkpoint(processed_ids)
+                if fired_any and self._dlq_size():
+                    self._redrive()
+            return len(processed_ids)
+
+    # -- the legacy per-event interpreter (parity oracle) --------------------------
     def _process_one(self, event: CloudEvent) -> bool:
         """Activate matching triggers for one event.  Returns True if any fired."""
         fired = False
@@ -240,7 +628,7 @@ class TFWorker:
                 fired = True
                 if trg.transient:
                     trg.enabled = False
-                    self._trigger_state_dirty = True
+                    self._mark_trigger_dirty(trg.trigger_id)
         if not any_enabled:
             # All candidate triggers disabled → out-of-order event → DLQ (§3.4).
             self.event_store.to_dlq(self.workflow, event)
@@ -249,15 +637,12 @@ class TFWorker:
             return False
         return fired
 
-    def run_once(self, max_events: Optional[int] = None) -> int:
-        """Process one batch.  Returns number of events processed."""
+    def _run_once_scalar(self, max_events: Optional[int] = None) -> int:
+        """The pre-batch-plane per-event loop (``batch_plane=False``)."""
         with self.lock:
             batch = self._consume(max_events or self.batch_size)
             if not batch and not self._sink:
                 return 0
-            # Exclusive partition owners skip the per-event committed check:
-            # the group guarantees no other consumer commits their events, and
-            # the store only hands out uncommitted ones.
             check_committed = self.partitions is None or not getattr(
                 self.event_store, "UNCOMMITTED_ONLY", False)
             processed_ids: List[str] = []
@@ -291,25 +676,35 @@ class TFWorker:
             if fired_any or (self.commit_policy == "every_batch" and processed_ids):
                 self._checkpoint(processed_ids)
                 if fired_any and self._dlq_size():
-                    n = self._redrive()
-                    if n:
-                        # redriven events must be reprocessable
-                        pass
+                    self._redrive()
             return len(processed_ids)
 
     def _checkpoint(self, processed_ids: List[str]) -> None:
-        dirty = {tid: dict(ctx) for tid, ctx in self._contexts.items() if ctx.dirty}
-        if dirty:
-            self.state_store.put_contexts(self.workflow, dirty)
-            for ctx in self._contexts.values():
-                ctx.dirty = False
-        if self._trigger_state_dirty:
-            for tid, trg in self.triggers.items():
-                self.state_store.put_trigger(self.workflow, tid, trg.to_dict())
-            self._trigger_state_dirty = False
+        """Persist what changed — context deltas and dirty trigger ids only —
+        then commit the batch (§3.4 ordering)."""
+        deltas = {}
+        dirty_ctxs = []
+        for tid, ctx in self._contexts.items():
+            if ctx.dirty:
+                deltas[tid] = ctx.build_delta()
+                dirty_ctxs.append(ctx)
+        if deltas:
+            # a store failure raises here with dirty tracking intact, so the
+            # deltas are re-emitted on the next checkpoint attempt
+            self.state_store.put_contexts_delta(self.workflow, deltas)
+            for ctx in dirty_ctxs:
+                ctx.mark_checkpointed()
+        if self._dirty_triggers:
+            specs = {
+                tid: self.triggers[tid].to_dict()
+                for tid in self._dirty_triggers
+                if tid in self.triggers
+            }
+            if specs:
+                self.state_store.put_triggers(self.workflow, specs)
+            self._dirty_triggers.clear()
         self._commit(processed_ids)
-        for eid in processed_ids:
-            self._seen.discard(eid)
+        self._seen.difference_update(processed_ids)
 
     # -- loops ------------------------------------------------------------------------
     def run_until_complete(self, timeout: float = 60.0, poll: float = 0.001) -> Any:

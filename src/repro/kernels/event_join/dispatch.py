@@ -1,0 +1,117 @@
+"""Backend dispatch for the event-join segmented sum.
+
+The worker's batch plane reduces a routed event batch to per-trigger
+activation counts (``new_counts``) and threshold-crossing flags (``fired``).
+Three interchangeable backends compute the same one-hot segmented sum:
+
+* ``pallas`` — the TPU kernel (``event_join.event_join_counts``), used when a
+  TPU is attached;
+* ``jax``    — the jitted pure-jnp oracle (``ref.join_counts_ref``), the
+  CPU/GPU XLA path;
+* ``numpy``  — ``np.bincount``, dependency-light fallback when JAX is absent
+  (or for tiny batches where XLA dispatch overhead dominates).
+
+``join_counts(events, counts, expected)`` takes int32 numpy arrays
+(``events`` holds trigger row ids, −1 = padding) and returns numpy
+``(new_counts, fired)``.  Selection: ``TRIGGERFLOW_JOIN_BACKEND`` env var
+(``auto`` | ``numpy`` | ``jax`` | ``pallas`` | ``off``), default ``auto`` =
+pallas on TPU, numpy otherwise (measured faster than XLA dispatch for the
+≤4k-event batches the worker consumes).
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+JoinFn = Callable[[np.ndarray, np.ndarray, np.ndarray],
+                  Tuple[np.ndarray, np.ndarray]]
+
+
+def _numpy_join(events: np.ndarray, counts: np.ndarray,
+                expected: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    valid = events[events >= 0]
+    add = np.bincount(valid, minlength=counts.shape[0]).astype(np.int32)
+    new_counts = counts + add
+    return new_counts, (new_counts >= expected).astype(np.int32)
+
+
+def _make_jax_join() -> JoinFn:
+    import jax
+
+    from .ref import join_counts_ref
+
+    f = jax.jit(join_counts_ref)
+
+    def run(events, counts, expected):
+        nc, fired = f(events, counts, expected)
+        return np.asarray(nc), np.asarray(fired)
+
+    return run
+
+
+def _make_pallas_join() -> JoinFn:
+    from .ops import event_join
+
+    def run(events, counts, expected):
+        nc, fired = event_join(events, counts, expected)
+        return np.asarray(nc), np.asarray(fired)
+
+    return run
+
+
+def _on_tpu() -> bool:
+    # Only consult jax if something else already paid its import cost:
+    # importing (and device-initializing) jax here would add seconds to
+    # worker startup on CPU-only hosts just to learn there is no TPU.
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return False
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001 - not initializable
+        return False
+
+
+_resolved: dict = {}
+
+
+def resolve_join_backend(name: Optional[str] = None) -> Tuple[str, Optional[JoinFn]]:
+    """Resolve a backend name to ``(resolved_name, fn)``, cached per name.
+
+    ``fn`` is ``None`` for ``off``.  Unavailable explicit choices raise so
+    misconfiguration is loud; ``auto`` silently degrades to numpy."""
+    name = (name or os.environ.get("TRIGGERFLOW_JOIN_BACKEND", "auto")).lower()
+    cached = _resolved.get(name)
+    if cached is not None:
+        return cached
+    if name == "off":
+        resolved: Tuple[str, Optional[JoinFn]] = ("off", None)
+    elif name == "numpy":
+        resolved = ("numpy", _numpy_join)
+    elif name == "jax":
+        resolved = ("jax", _make_jax_join())
+    elif name == "pallas":
+        resolved = ("pallas", _make_pallas_join())
+    elif name != "auto":
+        raise ValueError(f"unknown join backend {name!r}")
+    elif _on_tpu():
+        resolved = ("pallas", _make_pallas_join())
+    else:
+        resolved = ("numpy", _numpy_join)
+    _resolved[name] = resolved
+    return resolved
+
+
+def join_counts(events: np.ndarray, counts: np.ndarray,
+                expected: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Segmented-sum join on the default backend (resolved once, cached by
+    ``resolve_join_backend``).  Raises when the backend is ``off`` — callers
+    that can degrade (the worker's vector plane) handle that at setup."""
+    _name, fn = resolve_join_backend()
+    if fn is None:
+        raise RuntimeError("join backend disabled (TRIGGERFLOW_JOIN_BACKEND=off)")
+    return fn(events, counts, expected)
