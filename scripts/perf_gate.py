@@ -1,13 +1,17 @@
-"""CI perf-regression gate for the batch plane (Table-1 join workload).
+"""CI perf-regression gate for the batch plane and the action plane.
 
-Measures the join scenario through the real TF-Worker twice — per-event
-interpreter (``batch_plane=False``) and batch plane — and compares the
-speedup ratio against the one committed in ``results/benchmarks.json``.
+Two gated ratios, both measured through the real TF-Worker within one job:
 
-The gate is on the *ratio*, not raw events/s: CI runners differ by far more
-than 30% in absolute speed, but interpreter and batch plane share the
-machine within one job, so their ratio cancels host speed out.  A >30% drop
-in that ratio fails the job.
+* join  — per-event interpreter (``batch_plane=False``) vs batch plane
+          (Table-1 join workload, 100 triggers x 1000 events).
+* noop  — per-fire action loop (``action_plane=False``) vs action plane
+          (fire-run conditions + batched actions, Table-1 noop workload).
+
+Each measured speedup is compared against the one committed in
+``results/benchmarks.json``.  The gate is on the *ratio*, not raw events/s:
+CI runners differ by far more than 30% in absolute speed, but before and
+after share the machine within one job, so their ratio cancels host speed
+out.  A >30% drop in either ratio fails the job.
 
     PYTHONPATH=src:. python scripts/perf_gate.py [--reps 2] [--tolerance 0.7]
 """
@@ -19,47 +23,73 @@ import os
 import sys
 
 
-def committed_speedup(path: str):
+def committed_ratio(path: str, before_row: str, after_row: str):
     try:
         with open(path) as f:
             rows = json.load(f)
         by_name = {r.get("name"): r for r in rows if isinstance(r, dict)}
-        interp = by_name["load_test.join_interpreter"]["events_per_s"]
-        batch = by_name["load_test.join"]["events_per_s"]
+        before = by_name[before_row]["events_per_s"]
+        after = by_name[after_row]["events_per_s"]
     except (OSError, ValueError, KeyError, TypeError):
         # absent/malformed baseline: report, skip the gate, stay green
         return None, None, None
-    return batch / interp, interp, batch
+    return after / before, before, after
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reps", type=int, default=2)
     ap.add_argument("--tolerance", type=float, default=0.7,
-                    help="fail if measured speedup < tolerance * committed")
+                    help="fail if a measured speedup < tolerance * committed")
     ap.add_argument("--baseline", default=os.path.join(
         os.path.dirname(__file__), "..", "results", "benchmarks.json"))
     args = ap.parse_args()
 
-    from benchmarks.load_test import bench_join
+    from benchmarks.load_test import bench_join, bench_noop
 
-    interp = batch = 0.0
+    join_interp = join_batch = noop_scalar = noop_ap = 0.0
     for _ in range(args.reps):
-        interp = max(interp, bench_join(batch_plane=False)["events_per_s"])
-        batch = max(batch, bench_join(batch_plane=True)["events_per_s"])
-    speedup = batch / interp
+        join_interp = max(join_interp,
+                          bench_join(batch_plane=False)["events_per_s"])
+        join_batch = max(join_batch,
+                         bench_join(batch_plane=True)["events_per_s"])
+        noop_scalar = max(noop_scalar,
+                          bench_noop(action_plane=False)["events_per_s"])
+        noop_ap = max(noop_ap,
+                      bench_noop(action_plane=True)["events_per_s"])
 
-    ref_speedup, ref_interp, ref_batch = committed_speedup(args.baseline)
-    lines = [
-        "## Batch-plane perf gate (load_test.join, 100 triggers x 1000 events)",
-        "",
-        "| | interpreter ev/s | batch plane ev/s | speedup |",
-        "|---|---|---|---|",
-        f"| this run | {interp:,.0f} | {batch:,.0f} | **{speedup:.2f}x** |",
+    gates = [
+        # (label, before ev/s, after ev/s, committed before/after row names)
+        ("join (batch plane)", join_interp, join_batch,
+         "load_test.join_interpreter", "load_test.join"),
+        ("noop (action plane)", noop_scalar, noop_ap,
+         "load_test.noop", "load_test.noop_action_plane"),
     ]
-    if ref_speedup is not None:
-        lines.append(f"| committed baseline | {ref_interp:,.0f} | "
-                     f"{ref_batch:,.0f} | {ref_speedup:.2f}x |")
+
+    lines = [
+        "## Perf gate (batch plane + action plane)",
+        "",
+        "| scenario | before ev/s | after ev/s | speedup | committed |",
+        "|---|---|---|---|---|",
+    ]
+    failures = []
+    any_ref = False
+    for label, before, after, ref_before_row, ref_after_row in gates:
+        speedup = after / before
+        ref_speedup, _, _ = committed_ratio(
+            args.baseline, ref_before_row, ref_after_row)
+        ref_txt = "—"
+        if ref_speedup is not None:
+            any_ref = True
+            ref_txt = f"{ref_speedup:.2f}x"
+            floor = args.tolerance * ref_speedup
+            if speedup < floor:
+                failures.append(
+                    f"{label}: measured speedup {speedup:.2f}x is below "
+                    f"{args.tolerance:.0%} of committed {ref_speedup:.2f}x "
+                    f"(floor {floor:.2f}x) -> >30% perf regression")
+        lines.append(f"| {label} | {before:,.0f} | {after:,.0f} | "
+                     f"**{speedup:.2f}x** | {ref_txt} |")
     summary = "\n".join(lines) + "\n"
     print(summary)
     step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
@@ -67,16 +97,14 @@ def main() -> int:
         with open(step_summary, "a") as f:
             f.write(summary)
 
-    if ref_speedup is None:
+    if not any_ref:
         print("no committed baseline rows; gate skipped")
         return 0
-    floor = args.tolerance * ref_speedup
-    if speedup < floor:
-        print(f"FAIL: measured speedup {speedup:.2f}x is below "
-              f"{args.tolerance:.0%} of committed {ref_speedup:.2f}x "
-              f"(floor {floor:.2f}x) -> >30% perf regression")
+    if failures:
+        for f_msg in failures:
+            print("FAIL:", f_msg)
         return 1
-    print(f"OK: speedup {speedup:.2f}x >= floor {floor:.2f}x")
+    print("OK: all gated ratios within tolerance")
     return 0
 
 

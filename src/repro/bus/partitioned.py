@@ -11,6 +11,17 @@ Consumers address partitions explicitly (``consume_partitions`` /
 ``commit_partitions``): that is what lets a consumer group hand disjoint
 partition subsets to worker shards and scale horizontally without breaking
 the per-subject ordering or the at-least-once commit contract.
+
+Locking is **striped per partition**: every ``StreamShard`` carries its own
+lock and each operation takes only the locks of the partitions it touches,
+so shard workers draining disjoint partition sets never serialize on the
+store — they contend only on the interpreter itself.  (The pre-striping
+behavior — one global RLock serializing all partitions — is kept behind
+``striped=False`` as the contention baseline the benchmarks A/B against.)
+Aggregate reads (``lag``, ``partition_lags`` …) visit shards one lock at a
+time and are therefore momentary snapshots, exactly like Kafka consumer-lag
+metrics; nothing in the worker/autoscaler contract needs a cross-partition
+atomic view.
 """
 from __future__ import annotations
 
@@ -47,12 +58,16 @@ class PartitionedEventStore(EventStore):
         self,
         num_partitions: int = 8,
         partitioner: Optional[Partitioner] = None,
+        striped: bool = True,
     ) -> None:
         if num_partitions < 1:
             raise ValueError("num_partitions must be >= 1")
         self.num_partitions = num_partitions
         self.partitioner: Partitioner = partitioner or subject_partitioner
-        self._lock = threading.RLock()
+        self.striped = striped
+        # Guards only the workflow → shard-list map; every shard operation
+        # synchronizes on the shard's own lock.
+        self._lock = threading.Lock()
         self._parts: Dict[str, List[StreamShard]] = {}
 
     # -- routing ---------------------------------------------------------------
@@ -62,29 +77,63 @@ class PartitionedEventStore(EventStore):
     def _shards(self, workflow: str) -> List[StreamShard]:
         parts = self._parts.get(workflow)
         if parts is None:
-            parts = self._parts.setdefault(
-                workflow, [StreamShard() for _ in range(self.num_partitions)]
-            )
+            with self._lock:
+                parts = self._parts.get(workflow)
+                if parts is None:
+                    parts = [StreamShard() for _ in range(self.num_partitions)]
+                    if not self.striped:
+                        # coarse mode: all partitions share one lock — the
+                        # pre-striping global-serialization baseline
+                        shared = threading.Lock()
+                        for s in parts:
+                            s.lock = shared
+                    self._parts[workflow] = parts
         return parts
 
     # -- EventStore contract (whole-stream view) -------------------------------
     def create_stream(self, workflow: str) -> None:
-        with self._lock:
-            self._shards(workflow)
+        self._shards(workflow)
 
     def publish(self, workflow: str, event: CloudEvent) -> None:
-        with self._lock:
-            parts = self._shards(workflow)
-            parts[self.partition_for(event.subject)].publish((event,))
+        shard = self._shards(workflow)[self.partition_for(event.subject)]
+        with shard.lock:
+            shard.publish((event,))
 
     def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
-        with self._lock:
-            parts = self._shards(workflow)
-            by_part: Dict[int, List[CloudEvent]] = {}
-            for e in events:
-                by_part.setdefault(self.partition_for(e.subject), []).append(e)
-            for p, evs in by_part.items():
-                parts[p].publish(evs)
+        parts = self._shards(workflow)
+        by_part: Dict[int, List[CloudEvent]] = {}
+        for e in events:
+            by_part.setdefault(self.partition_for(e.subject), []).append(e)
+        # one append per touched partition, under that partition's lock only
+        for p, evs in by_part.items():
+            shard = parts[p]
+            with shard.lock:
+                shard.publish(evs)
+
+    def _map_shards(self, workflow: str, fn) -> List:
+        """Apply ``fn`` to every shard, each under its own lock (momentary
+        per-partition snapshots — no cross-partition atomicity implied)."""
+        parts = self._parts.get(workflow)
+        if not parts:
+            return []
+        out = []
+        for s in parts:
+            with s.lock:
+                out.append(fn(s))
+        return out
+
+    def _sum_partitions(self, workflow: str, partitions: Iterable[int],
+                        fn) -> int:
+        """Sum ``fn(shard)`` over the given partitions, striped-locked."""
+        parts = self._parts.get(workflow)
+        if not parts:
+            return 0
+        total = 0
+        for p in partitions:
+            shard = parts[p]
+            with shard.lock:
+                total += fn(shard)
+        return total
 
     def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
         return self.consume_partitions(
@@ -95,20 +144,22 @@ class PartitionedEventStore(EventStore):
         self.commit_partitions(workflow, range(self.num_partitions), event_ids)
 
     def is_committed(self, workflow: str, event_id: str) -> bool:
-        with self._lock:
-            parts = self._parts.get(workflow)
-            if not parts:
-                return False
-            return any(s.is_committed(event_id) for s in parts)
+        parts = self._parts.get(workflow)
+        if not parts:
+            return False
+        for s in parts:
+            with s.lock:
+                if s.is_committed(event_id):
+                    return True
+        return False
 
     def lag(self, workflow: str) -> int:
-        with self._lock:
-            parts = self._parts.get(workflow)
-            return sum(s.lag() for s in parts) if parts else 0
+        return sum(self._map_shards(workflow, StreamShard.lag))
 
     def to_dlq(self, workflow: str, event: CloudEvent) -> None:
-        with self._lock:
-            self._shards(workflow)[self.partition_for(event.subject)].to_dlq(event)
+        shard = self._shards(workflow)[self.partition_for(event.subject)]
+        with shard.lock:
+            shard.to_dlq(event)
 
     def redrive(self, workflow: str) -> int:
         return self.redrive_partitions(workflow, range(self.num_partitions))
@@ -123,41 +174,41 @@ class PartitionedEventStore(EventStore):
     def committed_events(self, workflow: str) -> List[CloudEvent]:
         """Committed events, per-partition commit order, concatenated by
         partition index (cross-partition order is unspecified)."""
-        with self._lock:
-            parts = self._parts.get(workflow)
-            if not parts:
-                return []
-            out: List[CloudEvent] = []
-            for s in parts:
-                out.extend(s.committed_events())
-            return out
+        out: List[CloudEvent] = []
+        for chunk in self._map_shards(workflow, StreamShard.committed_events):
+            out.extend(chunk)
+        return out
 
     # -- partition-scoped consumer API (the consumer-group fast path) ----------
     def consume_partition(
         self, workflow: str, partition: int, max_events: int = 512
     ) -> List[CloudEvent]:
-        with self._lock:
-            parts = self._parts.get(workflow)
-            return parts[partition].consume(max_events) if parts else []
+        parts = self._parts.get(workflow)
+        if not parts:
+            return []
+        shard = parts[partition]
+        with shard.lock:
+            return shard.consume(max_events)
 
     def consume_partitions(
         self, workflow: str, partitions: Iterable[int], max_events: int = 512
     ) -> List[CloudEvent]:
         """Up to ``max_events`` uncommitted events from the given partitions,
         preserving arrival order *within* each partition."""
-        with self._lock:
-            parts = self._parts.get(workflow)
-            if not parts:
-                return []
-            out: List[CloudEvent] = []
-            budget = max_events
-            for p in partitions:
-                if budget <= 0:
-                    break
-                got = parts[p].consume(budget)
-                out.extend(got)
-                budget -= len(got)
-            return out
+        parts = self._parts.get(workflow)
+        if not parts:
+            return []
+        out: List[CloudEvent] = []
+        budget = max_events
+        for p in partitions:
+            if budget <= 0:
+                break
+            shard = parts[p]
+            with shard.lock:
+                got = shard.consume(budget)
+            out.extend(got)
+            budget -= len(got)
+        return out
 
     def commit_partitions(
         self, workflow: str, partitions: Iterable[int], event_ids: Iterable[str]
@@ -165,52 +216,40 @@ class PartitionedEventStore(EventStore):
         ids = set(event_ids)
         if not ids:
             return 0
-        with self._lock:
-            parts = self._parts.get(workflow)
-            if not parts:
-                return 0
-            # Per partition: intersect once (C-level), then the shard's bulk
-            # commit handles its share — an O(batch) slice/set compare in the
-            # common in-order case, degrading to prefix walk + scan only for
-            # ids skipped mid-stream.
-            n = 0
-            want = len(ids)
-            for p in partitions:
-                shard = parts[p]
+        parts = self._parts.get(workflow)
+        if not parts:
+            return 0
+        # Per partition: intersect once (C-level), then the shard's bulk
+        # commit handles its share — an O(batch) slice/set compare in the
+        # common in-order case, degrading to prefix walk + scan only for
+        # ids skipped mid-stream.
+        n = 0
+        want = len(ids)
+        for p in partitions:
+            shard = parts[p]
+            with shard.lock:
                 mine = ids & shard.pending_ids
                 if mine:
                     n += shard.commit(mine)
-                    if n == want:
-                        break
-            return n
+            if n == want:
+                break
+        return n
 
     def partition_lags(self, workflow: str) -> List[int]:
         """Per-partition lag vector — the autoscaler's scaling signal."""
-        with self._lock:
-            parts = self._parts.get(workflow)
-            if not parts:
-                return [0] * self.num_partitions
-            return [s.lag() for s in parts]
+        return self._map_shards(workflow, StreamShard.lag) \
+            or [0] * self.num_partitions
 
     def lag_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
-        with self._lock:
-            parts = self._parts.get(workflow)
-            return sum(parts[p].lag() for p in partitions) if parts else 0
+        return self._sum_partitions(workflow, partitions, StreamShard.lag)
 
     def commit_offsets(self, workflow: str) -> List[int]:
         """Per-partition committed-event counts (isolated commit offsets)."""
-        with self._lock:
-            parts = self._parts.get(workflow)
-            if not parts:
-                return [0] * self.num_partitions
-            return [s.commit_offset() for s in parts]
+        return self._map_shards(workflow, StreamShard.commit_offset) \
+            or [0] * self.num_partitions
 
     def dlq_size_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
-        with self._lock:
-            parts = self._parts.get(workflow)
-            return sum(parts[p].dlq_size() for p in partitions) if parts else 0
+        return self._sum_partitions(workflow, partitions, StreamShard.dlq_size)
 
     def redrive_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
-        with self._lock:
-            parts = self._parts.get(workflow)
-            return sum(parts[p].redrive() for p in partitions) if parts else 0
+        return self._sum_partitions(workflow, partitions, StreamShard.redrive)

@@ -63,6 +63,7 @@ class ShardWorker(TFWorker):
         """
         self._seen.clear()
         self._sink.clear()
+        self._dlq_counted.clear()
         specs = self.state_store.get_triggers(self.workflow)
         ckpt = self.state_store.get_contexts(self.workflow)
         for tid, trg in self.triggers.items():
@@ -149,6 +150,7 @@ class ShardedWorkerPool:
         batch_size: int = 512,
         keep_event_log: bool = True,
         batch_plane: bool = True,
+        action_plane: bool = True,
     ) -> None:
         if not hasattr(event_store, "consume_partitions"):
             raise TypeError(
@@ -162,6 +164,7 @@ class ShardedWorkerPool:
         self.batch_size = batch_size
         self.keep_event_log = keep_event_log
         self.batch_plane = batch_plane
+        self.action_plane = action_plane
         self._lock = threading.RLock()
         self._wfs: Dict[str, _WorkflowShards] = {}
 
@@ -211,6 +214,7 @@ class ShardedWorkerPool:
                 timers=self.timers,
                 partitions=(),
                 batch_plane=self.batch_plane,
+                action_plane=self.action_plane,
             )
             wp.shards[member] = worker
             wp.group.join(member)

@@ -1,11 +1,23 @@
 # The paper's primary contribution: the Rich Trigger (ECA) service.
-from .actions import ACTIONS, PYFUNCS, action, pyfunc, register_action, register_pyfunc
+from .actions import (
+    ACTIONS,
+    BATCHED_ACTIONS,
+    PYFUNCS,
+    action,
+    batched_action,
+    pyfunc,
+    register_action,
+    register_pyfunc,
+    run_action_batch,
+)
 from .autoscaler import KedaAutoscaler
 from .conditions import (
     BATCHED_CONDITIONS,
     CONDITIONS,
+    FIRE_RUN_CONDITIONS,
     batched_condition,
     condition,
+    fire_run_condition,
     register_condition,
     scalar_sweep,
 )
@@ -28,14 +40,16 @@ from .triggers import Trigger, make_trigger, new_trigger_id
 from .worker import TFWorker
 
 __all__ = [
-    "ACTIONS", "BATCHED_CONDITIONS", "CONDITIONS", "PYFUNCS", "CloudEvent",
+    "ACTIONS", "BATCHED_ACTIONS", "BATCHED_CONDITIONS", "CONDITIONS",
+    "FIRE_RUN_CONDITIONS", "PYFUNCS", "CloudEvent",
     "EventStore",
     "FileEventStore", "FileStateStore", "FunctionBackend", "KedaAutoscaler",
     "MemoryEventStore", "MemoryStateStore", "StateStore", "TFWorker",
     "TimerSource", "Trigger", "TriggerContext", "Triggerflow", "TYPE_FAILURE",
     "TYPE_INIT", "TYPE_TERMINATION", "TYPE_TIMEOUT", "TYPE_WORKFLOW_END",
-    "action", "batched_condition", "condition", "failure_event",
+    "action", "batched_action", "batched_condition", "condition",
+    "failure_event", "fire_run_condition",
     "make_trigger", "new_trigger_id", "pyfunc", "register_action",
-    "register_condition", "register_pyfunc", "scalar_sweep",
-    "termination_event",
+    "register_condition", "register_pyfunc", "run_action_batch",
+    "scalar_sweep", "termination_event",
 ]

@@ -2,29 +2,33 @@
 
 The worker's batch plane evaluates conditions over ``(subject, type)``
 slices.  This module is the fully-vectorized tier above that: a consumed
-batch whose subjects route to pure aggregation joins (``counter`` with
-``aggregate=False`` and no ``exactly_once`` dedup) that provably cannot fire
-within the batch (``count + batch share < expected``) reduces to *counting*
-— no action runs, no per-event state changes except the counters.
+batch whose subjects route to aggregation joins (``counter`` — counting or
+aggregating — and ``threshold_join``, without ``exactly_once`` dedup) that
+provably cannot fire within the batch (``count + batch share < threshold``)
+reduces to *counting plus column gathers* — no action runs, no per-event
+interpreter dispatch, no per-event state changes except the counters and
+the pre-extracted result columns.
 
-``triage`` therefore never touches individual events in Python: the batch is
-histogrammed C-level (one list comprehension + ``Counter``), each distinct
-subject is screened against its compiled dispatch entries, and all claimed
-subjects are folded into one one-hot segmented sum over the routed event
-batch — the ``event_join`` kernel (Pallas on TPU, jitted-jnp or ``bincount``
-on CPU; see ``kernels.event_join.dispatch``).  The Table-1 join hot loop
-becomes O(batch) array ops plus O(distinct subjects) Python.
+``triage`` therefore never walks individual events through the condition
+machinery: the batch is bucketed per subject C-level (one pass), each
+distinct subject is screened against its compiled dispatch entries, all
+claimed subjects are folded into one one-hot segmented sum over the routed
+event batch — the ``event_join`` kernel (Pallas on TPU, jitted-jnp or
+``bincount`` on CPU; see ``kernels.event_join.dispatch``) — and aggregating
+triggers additionally get their ``data["result"]`` column appended in one
+list-comprehension per (subject, trigger) run.  The Table-1 join hot loop
+becomes O(batch) array/column ops plus O(distinct subjects) Python.
 
 Everything else — slices that would cross a threshold, dedup, timeouts,
-failures, aggregating joins, non-join conditions — is returned as leftover
-for the worker's per-trigger batched/scalar path, which owns the exact fire
+failures, non-join conditions — is returned as leftover for the worker's
+per-trigger fire-run/batched/scalar path, which owns the exact fire
 semantics.  The screening is the correctness boundary: the kernel only ever
-sees slices whose outcome is pure counting, so parity with the scalar
-interpreter is by construction.
+sees slices whose outcome is pure counting/aggregation, so parity with the
+scalar interpreter is by construction.
 """
 from __future__ import annotations
 
-from collections import Counter
+import math
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 try:  # numpy is the plane's only hard dependency; degrade to None without it
@@ -32,13 +36,20 @@ try:  # numpy is the plane's only hard dependency; degrade to None without it
 except ImportError:  # pragma: no cover - numpy is in the base image
     np = None
 
+from .conditions import _result_of
 from .events import TYPE_FAILURE, TYPE_TIMEOUT, CloudEvent
 
 TriageResult = Tuple[List[str], List[CloudEvent]]  # (handled ids, leftover)
 
+#: Condition names ``triage`` can claim (absent ``exactly_once``).  The
+#: worker's structural pre-screen (``TFWorker._has_join_triggers``) consumes
+#: this, so extending claimability here automatically re-enables triage for
+#: the new conditions.
+CLAIMABLE_CONDITIONS = ("counter", "threshold_join")
+
 
 class VectorJoinPlane:
-    """Batch-level accelerator for pure-counting join batches."""
+    """Batch-level accelerator for non-firing aggregation-join batches."""
 
     def __init__(self, backend: Optional[str] = None, min_subjects: int = 2):
         if np is None:
@@ -54,17 +65,49 @@ class VectorJoinPlane:
         self.calls = 0
         self.events = 0
 
+    @staticmethod
+    def _screen_entry(entry, ctx) -> Optional[Tuple[int, bool]]:
+        """(threshold, aggregates) for a claimable join condition, else None.
+
+        Claimable: ``counter`` (either aggregation mode) or ``threshold_join``
+        without ``exactly_once`` — their per-event effect on a non-firing,
+        termination-typed slice is exactly "count += 1 (+ append result)".
+        """
+        cspec = entry.cspec
+        if cspec.get("exactly_once"):
+            return None
+        expected = ctx.get("expected", cspec.get("expected", 1))
+        if entry.cname == "counter":  # CLAIMABLE_CONDITIONS
+            aggregates = bool(cspec.get("aggregate", True))
+            threshold = int(expected)
+        elif entry.cname == "threshold_join":  # CLAIMABLE_CONDITIONS
+            frac = float(cspec.get("fraction", 1.0))
+            aggregates = True
+            threshold = max(1, math.ceil(int(expected) * frac))
+        else:
+            return None
+        if aggregates:
+            # a poisoned results value (introspection writing a non-list)
+            # must be declined *here*: the apply loop below writes counts
+            # before extending results, and an extend failure after that
+            # would hand the batch to the exact path double-counted
+            res = ctx.get("results")
+            if res is not None and not isinstance(res, list):
+                return None
+        return threshold, aggregates
+
     def triage(self, batch: List[CloudEvent],
                entries_for: Callable[[str], Sequence[Any]],
                stats) -> Optional[TriageResult]:
-        """Claim and evaluate the pure-counting share of a consumed batch.
+        """Claim and evaluate the non-firing join share of a consumed batch.
 
         Returns ``(handled_event_ids, leftover_events)`` — the handled events
-        have been fully accounted (counters advanced, activations counted)
-        and only need committing; the leftovers carry every event the exact
-        path must see.  Returns ``None`` when the batch isn't worth
-        vectorizing (mixed types, failure/timeout slices, too few claimable
-        subjects) — the caller then processes the whole batch normally.
+        have been fully accounted (counters advanced, result columns
+        appended, activations counted) and only need committing; the
+        leftovers carry every event the exact path must see.  Returns
+        ``None`` when the batch isn't worth vectorizing (mixed types,
+        failure/timeout slices, too few claimable subjects) — the caller
+        then processes the whole batch normally.
         """
         etype = batch[0].type
         if len({e.type for e in batch}) != 1:
@@ -77,11 +120,21 @@ class VectorJoinPlane:
             # would double-count the join.  The grouped path's in-flight set
             # dedups exactly (§3.4), so leave the whole batch to it.
             return None
-        histogram = Counter([e.subject for e in batch])
-        # tid -> [ctx, count0, expected, events_in_batch]
+        # subject -> its arrival-ordered events (insertion order = the order
+        # the grouped path would build its slices in)
+        by_subject: dict = {}
+        for e in batch:
+            evs = by_subject.get(e.subject)
+            if evs is None:
+                by_subject[e.subject] = [e]
+            else:
+                evs.append(e)
+        # tid -> [ctx, count0, threshold, events_in_batch]
         pairs: dict = {}
-        handled: set = set()
-        for subject, m in histogram.items():
+        aggregating: dict = {}   # tid -> pre-extracted result column
+        claimed: dict = {}       # subject -> its candidate tid list
+        for subject, sevs in by_subject.items():
+            m = len(sevs)
             entries = entries_for(subject)
             if not entries:
                 continue  # unknown subject: worker's drop-count path
@@ -89,33 +142,45 @@ class VectorJoinPlane:
             for entry in entries:
                 if not entry.matches(etype):
                     continue
-                trg = entry.trg
-                cspec = entry.cspec
-                if (entry.cname != "counter" or cspec.get("aggregate", True)
-                        or cspec.get("exactly_once")):
+                screened = self._screen_entry(entry, entry.ctx)
+                if screened is None:
                     cand = None  # needs per-event work → exact path
                     break
+                threshold, aggregates = screened
                 ctx = entry.ctx
-                expected = int(ctx.get("expected", cspec.get("expected", 1)))
-                tid = trg.trigger_id
+                tid = entry.trg.trigger_id
                 prior = pairs.get(tid)
                 count0 = prior[1] if prior is not None else ctx.get("count", 0)
                 acc = prior[3] if prior is not None else 0
-                if not isinstance(count0, int) or count0 + acc + m >= expected:
+                if not isinstance(count0, int) or count0 + acc + m >= threshold:
                     cand = None  # could fire inside this batch
                     break
-                cand.append((tid, ctx, count0, expected))
+                cand.append((tid, ctx, count0, threshold, aggregates))
             if not cand:  # ineligible, or zero enabled candidates (DLQ path)
                 continue
-            for tid, ctx, count0, expected in cand:
+            for tid, ctx, count0, threshold, aggregates in cand:
                 prior = pairs.get(tid)
                 if prior is None:
-                    pairs[tid] = [ctx, count0, expected, m]
+                    pairs[tid] = [ctx, count0, threshold, m]
+                    if aggregates:
+                        aggregating[tid] = []
                 else:
                     prior[3] += m
-            handled.add(subject)
-        if len(handled) < self.min_subjects or not pairs:
+            claimed[subject] = [c[0] for c in cand]
+        if len(claimed) < self.min_subjects or not pairs:
             return None
+
+        # Pre-extracted result columns: one C-level comprehension per
+        # (subject, trigger) run, in the same subject-slice order the
+        # grouped path's batched conditions would append in.
+        if aggregating:
+            for subject, tids in claimed.items():
+                cols = [aggregating[t] for t in tids if t in aggregating]
+                if not cols:
+                    continue
+                column = [_result_of(e) for e in by_subject[subject]]
+                for col in cols:
+                    col.extend(column)
 
         rows = list(pairs.values())
         n_rows = len(rows)
@@ -129,14 +194,20 @@ class VectorJoinPlane:
         if fired.any():  # pragma: no cover - screening guarantees this
             raise AssertionError("vector join plane screening let a fire through")
         total = 0
-        for i, row in enumerate(rows):
-            row[0]["count"] = int(new_counts[i])
+        for i, (tid, row) in enumerate(pairs.items()):
+            ctx = row[0]
+            ctx["count"] = int(new_counts[i])
+            column = aggregating.get(tid)
+            if column:
+                results = ctx.get("results") or []
+                results.extend(column)
+                ctx["results"] = results
             total += row[3]
         stats.activations += total
         self.calls += 1
         self.events += int(lens.sum())
 
-        if len(handled) == len(histogram):
+        if len(claimed) == len(by_subject):
             return ids, []
-        return ([e.id for e in batch if e.subject in handled],
-                [e for e in batch if e.subject not in handled])
+        return ([e.id for e in batch if e.subject in claimed],
+                [e for e in batch if e.subject not in claimed])

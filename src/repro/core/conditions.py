@@ -24,6 +24,28 @@ A condition may additionally register a *batched* implementation
 * Anything the batched fn cannot replicate exactly (``exactly_once`` dedup
   under redelivery, timeout handling) falls back to sweeping the scalar fn
   over the slice via ``scalar_sweep`` — correctness first, speed second.
+
+Fire-run protocol (the worker's action plane)
+---------------------------------------------
+The batched protocol above still re-enters the condition once per *fire* —
+fine for sparse joins, but a trigger that fires on (nearly) every event
+(the Table-1 noop scenario) degenerates back to one Python round-trip per
+event.  A condition may therefore also register a *fire-run* implementation
+``fn_run(ctx, events, params) -> list[int] | None`` via
+``register_condition(name, fn, batched=..., fire_run=fn_run)``:
+
+* It consumes the **whole** type-uniform slice in one call and returns the
+  ascending positions at which the scalar fn would have returned True, with
+  the context reflecting full consumption — i.e. it collapses the entire
+  evaluate→fire→re-enter loop into one call plus one batched action.
+* Returning ``None`` declines the run (``exactly_once`` dedup, timeouts,
+  anything needing per-event care) and the worker falls back to the
+  per-fire batched/scalar path above.  A fire-run fn must decline *before*
+  mutating the context — the fallback re-evaluates the same slice.
+* The worker only takes this path for non-transient triggers whose action
+  has a batched implementation (``actions.BATCHED_ACTIONS``): transient
+  triggers must stop at their first fire, and scalar-only actions keep the
+  exact condition/action interleaving of the per-fire path.
 """
 from __future__ import annotations
 
@@ -34,39 +56,59 @@ from .events import TYPE_FAILURE, TYPE_TIMEOUT, CloudEvent
 
 ConditionFn = Callable[[Any, CloudEvent, Dict[str, Any]], bool]
 BatchedConditionFn = Callable[[Any, List[CloudEvent], Dict[str, Any]], Optional[int]]
+FireRunConditionFn = Callable[[Any, List[CloudEvent], Dict[str, Any]],
+                              Optional[List[int]]]
 
 CONDITIONS: Dict[str, ConditionFn] = {}
 #: Opt-in batched implementations, keyed like ``CONDITIONS``.
 BATCHED_CONDITIONS: Dict[str, BatchedConditionFn] = {}
+#: Opt-in fire-run implementations (whole-slice fire positions), keyed alike.
+FIRE_RUN_CONDITIONS: Dict[str, FireRunConditionFn] = {}
 
 
-def condition(name: str, batched: Optional[BatchedConditionFn] = None
+def condition(name: str, batched: Optional[BatchedConditionFn] = None,
+              fire_run: Optional[FireRunConditionFn] = None
               ) -> Callable[[ConditionFn], ConditionFn]:
     def deco(fn: ConditionFn) -> ConditionFn:
-        register_condition(name, fn, batched=batched)
+        register_condition(name, fn, batched=batched, fire_run=fire_run)
         return fn
 
     return deco
 
 
 def register_condition(name: str, fn: ConditionFn,
-                       batched: Optional[BatchedConditionFn] = None) -> None:
+                       batched: Optional[BatchedConditionFn] = None,
+                       fire_run: Optional[FireRunConditionFn] = None) -> None:
     """Third-party extension point (paper: extensible at all levels).
 
-    ``batched`` opts the condition into the worker's batch plane; without it
-    the worker degrades to the scalar path for this condition's slices."""
+    ``batched`` opts the condition into the worker's batch plane, ``fire_run``
+    additionally into the action plane; without them the worker degrades to
+    the scalar / per-fire path for this condition's slices."""
     CONDITIONS[name] = fn
     if batched is not None:
         BATCHED_CONDITIONS[name] = batched
     else:
         # re-registering without a batched impl must not leave a stale one
         BATCHED_CONDITIONS.pop(name, None)
+    if fire_run is not None:
+        FIRE_RUN_CONDITIONS[name] = fire_run
+    else:
+        FIRE_RUN_CONDITIONS.pop(name, None)
 
 
 def batched_condition(name: str) -> Callable[[BatchedConditionFn], BatchedConditionFn]:
     """Attach a batched implementation to an already-registered condition."""
     def deco(fn: BatchedConditionFn) -> BatchedConditionFn:
         BATCHED_CONDITIONS[name] = fn
+        return fn
+
+    return deco
+
+
+def fire_run_condition(name: str) -> Callable[[FireRunConditionFn], FireRunConditionFn]:
+    """Attach a fire-run implementation to an already-registered condition."""
+    def deco(fn: FireRunConditionFn) -> FireRunConditionFn:
+        FIRE_RUN_CONDITIONS[name] = fn
         return fn
 
     return deco
@@ -98,6 +140,11 @@ def _true_batch(ctx, events, params) -> Optional[int]:
     return 0
 
 
+@fire_run_condition("true")
+def _true_run(ctx, events, params) -> Optional[List[int]]:
+    return list(range(len(events)))
+
+
 @condition("false")
 def _false(ctx, event, params) -> bool:
     return False
@@ -106,6 +153,11 @@ def _false(ctx, event, params) -> bool:
 @batched_condition("false")
 def _false_batch(ctx, events, params) -> Optional[int]:
     return None
+
+
+@fire_run_condition("false")
+def _false_run(ctx, events, params) -> Optional[List[int]]:
+    return []
 
 
 def _seen_set(ctx) -> set:
@@ -216,6 +268,56 @@ def _counter_batch(ctx, events, params) -> Optional[int]:
     return fire_idx
 
 
+@fire_run_condition("counter")
+def _counter_run(ctx, events, params) -> Optional[List[int]]:
+    """Whole-slice counter evaluation: every fire position in one call.
+
+    Exactly the scalar fold collapsed: counts advance arithmetically, results
+    aggregate in C-level comprehensions, and ``fired_results`` lands on the
+    value the *last* fire's snapshot would have left behind."""
+    if events[0].type == TYPE_FAILURE:
+        # type-uniform slice: every event is a failure notification
+        ctx["failures"] = ctx.get("failures", 0) + len(events)
+        return []
+    if params.get("exactly_once", False):
+        return None  # redelivery dedup interleaves with counting
+    cnt = ctx.get("count", 0)
+    expected = int(ctx.get("expected", params.get("expected", 1)))
+    n = len(events)
+    aggregate = params.get("aggregate", True)
+    first = max(0, expected - cnt - 1)
+    if first >= n or not params.get("reset_on_fire"):
+        # no reset involved: counts and results simply advance over the slice
+        ctx["count"] = cnt + n
+        if aggregate:
+            results = ctx.get("results") or []
+            results.extend(_result_of(e) for e in events)
+            ctx["results"] = results
+        if first >= n:  # the threshold is not reached inside this slice
+            return []
+        # once satisfied the scalar fn keeps returning True: the tail fires
+        ctx["fired_results"] = ctx.get("results") or []
+        return list(range(first, n))
+    fires = list(range(first, n, max(1, expected)))
+    last = fires[-1]
+    ctx["count"] = n - last - 1  # events consumed since the last reset
+    if aggregate:
+        if len(fires) == 1:
+            snapshot = ctx.get("results") or []
+        else:
+            snapshot = []
+        snapshot = snapshot + [_result_of(e) for e in events[
+            (fires[-2] + 1 if len(fires) > 1 else 0):last + 1]]
+        ctx["fired_results"] = snapshot
+        ctx["results"] = [_result_of(e) for e in events[last + 1:]]
+    else:
+        # the last fire snapshots pre-reset results: the pre-run value for a
+        # single fire, [] (reset by the previous fire) for multiple
+        ctx["fired_results"] = (ctx.get("results") or []) if len(fires) == 1 else []
+        ctx["results"] = []
+    return fires
+
+
 @condition("threshold_join")
 def _threshold_join(ctx, event, params) -> bool:
     """Federated-learning style aggregation (§5.4): fire when ``fraction`` of
@@ -251,6 +353,27 @@ def _threshold_join_batch(ctx, events, params) -> Optional[int]:
     frac = float(params.get("fraction", 1.0))
     threshold = max(1, math.ceil(expected * frac))
     return _count_slice(ctx, events, ctx.get("count", 0), threshold, True)
+
+
+@fire_run_condition("threshold_join")
+def _threshold_join_run(ctx, events, params) -> Optional[List[int]]:
+    et = events[0].type
+    if et == TYPE_FAILURE:
+        ctx["failures"] = ctx.get("failures", 0) + len(events)
+        return []
+    if et == TYPE_TIMEOUT or params.get("exactly_once", False):
+        return None
+    cnt = ctx.get("count", 0)
+    expected = int(ctx.get("expected", params.get("expected", 1)))
+    threshold = max(1, math.ceil(expected * float(params.get("fraction", 1.0))))
+    n = len(events)
+    ctx["count"] = cnt + n
+    results = ctx.get("results") or []
+    results.extend(_result_of(e) for e in events)
+    ctx["results"] = results
+    first = max(0, threshold - cnt - 1)
+    # the scalar fn keeps returning True once satisfied: the tail fires
+    return list(range(first, n)) if first < n else []
 
 
 _OPS = {

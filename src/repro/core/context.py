@@ -172,6 +172,11 @@ class TriggerContext(dict):
         """Emit into the worker's internal sink (processed later this batch)."""
         self._worker.sink(event)
 
+    def produce_batch(self, events: List[CloudEvent]) -> None:
+        """Bulk ``produce``: one store append per partition and one commit-log
+        write for the whole run (the batched-action fan-out path)."""
+        self._worker.sink_batch(list(events))
+
     def invoke(self, fn_name: str, args: Any, subject: str, **kw) -> None:
         """Asynchronously invoke a registered 'serverless function' (§3.2 Action)."""
         self._worker.backend.invoke(self.workflow, fn_name, args, subject, **kw)

@@ -45,15 +45,20 @@ class StreamShard:
       finally an O(pending) scan.
     * ``dlq`` — quarantine for events whose trigger is disabled (§3.4);
       ``redrive`` re-appends them to the stream.
+    * ``lock`` — carried but never taken here: the owning store decides the
+      locking granularity (``MemoryEventStore`` serializes whole-store,
+      ``PartitionedEventStore`` stripes on exactly this per-shard lock so
+      independent partitions never contend).
     """
 
     __slots__ = ("_log", "head", "pending_ids", "committed_ids",
-                 "_committed_log", "dlq", "_has_dups")
+                 "_committed_log", "dlq", "_has_dups", "lock")
 
     #: Compact the consumed prefix of the log once it exceeds this length.
     COMPACT_AT = 8192
 
     def __init__(self) -> None:
+        self.lock = threading.Lock()
         self._log: List[CloudEvent] = []
         self.head = 0  # index of the first uncommitted event in _log
         self.pending_ids: set = set()

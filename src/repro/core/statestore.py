@@ -138,18 +138,25 @@ class FileStateStore(StateStore):
     * ``contexts.delta.jsonl`` — append-only checkpoint log; each line is one
       ``put_contexts_delta`` batch (``{tid: delta, ...}``).  Readers replay
       base + log; the log is folded back into ``contexts.json`` every
-      ``compact_every`` checkpoints (and on any full ``put_contexts``).
+      ``compact_every`` checkpoints, or as soon as it exceeds
+      ``compact_bytes`` bytes (whichever hits first; a full ``put_contexts``
+      also compacts).  The byte trigger bounds recovery-replay time for
+      long-lived workflows with *large* per-checkpoint deltas — a fixed
+      line count alone lets the log grow with delta size.
       A torn final line from a mid-append crash is ignored on replay —
       its checkpoint was never acknowledged, so the §3.4 contract holds and
       the broker redelivers the corresponding events.
     """
 
-    def __init__(self, root: str, compact_every: int = 256) -> None:
+    def __init__(self, root: str, compact_every: int = 256,
+                 compact_bytes: Optional[int] = None) -> None:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._lock = threading.RLock()
         self.compact_every = compact_every
+        self.compact_bytes = compact_bytes
         self._delta_lines: Dict[str, int] = {}
+        self._delta_bytes: Dict[str, int] = {}
 
     def _dir(self, wf: str) -> str:
         d = os.path.join(self.root, wf.replace("/", "_"))
@@ -187,6 +194,7 @@ class FileStateStore(StateStore):
                     os.remove(os.path.join(d, fn))
                 os.rmdir(d)
             self._delta_lines.pop(workflow, None)
+            self._delta_bytes.pop(workflow, None)
 
     def workflows(self) -> List[str]:
         with self._lock:
@@ -265,6 +273,7 @@ class FileStateStore(StateStore):
         if os.path.exists(log_p):
             os.remove(log_p)
         self._delta_lines[workflow] = 0
+        self._delta_bytes[workflow] = 0
 
     def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
         with self._lock:
@@ -284,9 +293,12 @@ class FileStateStore(StateStore):
                 # checkpoints would land beyond it and be silently skipped
                 # by every replay.
                 n = self._repair_delta_log(workflow, log_p)
+                self._delta_bytes[workflow] = (
+                    os.path.getsize(log_p) if os.path.exists(log_p) else 0)
+            line = json.dumps(deltas, separators=(",", ":")) + "\n"
             try:
                 with open(log_p, "a") as f:
-                    f.write(json.dumps(deltas, separators=(",", ":")) + "\n")
+                    f.write(line)
                     f.flush()
                     os.fsync(f.fileno())
             except Exception:
@@ -295,7 +307,11 @@ class FileStateStore(StateStore):
                 self._delta_lines.pop(workflow, None)
                 raise
             self._delta_lines[workflow] = n + 1
-            if self._delta_lines[workflow] >= self.compact_every:
+            nbytes = self._delta_bytes.get(workflow, 0) + len(line)
+            self._delta_bytes[workflow] = nbytes
+            if self._delta_lines[workflow] >= self.compact_every or (
+                    self.compact_bytes is not None
+                    and nbytes >= self.compact_bytes):
                 self._compact(workflow, wf_dir, self._merged_contexts(wf_dir))
 
     def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:

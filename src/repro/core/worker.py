@@ -7,16 +7,25 @@ Processing pipeline per batch (§3.2 trigger life-cycle + §3.4 fault tolerance)
   **fire** (run Action; transient triggers deactivate) →
   checkpoint: persist context *deltas* → commit processed events → redrive DLQ.
 
-The batch plane (this PR's hot-loop restructuring): instead of a per-event
-interpreter walk (registry dispatch + context wrap per event), a consumed
-batch is grouped once by ``(subject, type)`` and each matching trigger
-evaluates its condition over the whole arrival-ordered slice via the
-batched-condition protocol (``conditions.BATCHED_CONDITIONS``).  Groups that
-are provably pure counting are further folded into one segmented-sum array
-op by the ``VectorJoinPlane`` (the ``event_join`` kernel's algorithm).
-Conditions without a batched implementation degrade to the identical scalar
-path per slice.  Set ``batch_plane=False`` to run the legacy per-event
-interpreter (kept as the parity oracle).
+The batch plane: instead of a per-event interpreter walk (registry dispatch +
+context wrap per event), a consumed batch is grouped once by
+``(subject, type)`` and each matching trigger evaluates its condition over
+the whole arrival-ordered slice via the batched-condition protocol
+(``conditions.BATCHED_CONDITIONS``).  Groups that are provably pure counting
+are further folded into one segmented-sum array op by the ``VectorJoinPlane``
+(the ``event_join`` kernel's algorithm).  Conditions without a batched
+implementation degrade to the identical scalar path per slice.  Set
+``batch_plane=False`` to run the legacy per-event interpreter (kept as the
+parity oracle).
+
+The action plane (the fire path made O(batch)): a *fire-run* condition
+(``conditions.FIRE_RUN_CONDITIONS``) reports every fire position of a slice
+in one call and a batched action (``actions.BATCHED_ACTIONS``) handles the
+whole run of fires in one call — so a trigger that fires on (nearly) every
+event (Table-1 noop, fan-out produce) costs two Python calls per slice
+instead of one condition + one action round-trip per event.  Gated per
+worker by ``action_plane``; transient triggers and scalar-only actions
+(``invoke``/``intercepted``/``pyfunc``) always keep the per-fire path.
 
 Ordering contract: slices preserve per-subject arrival order (the bus's
 per-key guarantee); cross-subject interleaving within a batch is relaxed —
@@ -43,8 +52,10 @@ import time
 import traceback
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-from .actions import ACTIONS, run_action, run_condition
-from .conditions import BATCHED_CONDITIONS, CONDITIONS
+from .actions import (ACTIONS, BATCHED_ACTIONS, batchable_action, run_action,
+                      run_condition)
+from .batch import CLAIMABLE_CONDITIONS
+from .conditions import BATCHED_CONDITIONS, CONDITIONS, FIRE_RUN_CONDITIONS
 from .context import TriggerContext
 from .events import CloudEvent
 from .eventstore import EventStore
@@ -68,7 +79,8 @@ class _Entry:
     """Compiled per-subject dispatch entry: registry lookups and the trigger's
     context resolved once (invalidated on any trigger-structure change)."""
 
-    __slots__ = ("trg", "ctx", "cspec", "cname", "cfn", "bfn", "aspec", "afn")
+    __slots__ = ("trg", "ctx", "cspec", "cname", "cfn", "bfn", "rfn",
+                 "aspec", "afn", "bafn")
 
     def __init__(self, trg: Trigger, ctx: TriggerContext) -> None:
         self.trg = trg
@@ -78,9 +90,14 @@ class _Entry:
         self.cfn = CONDITIONS.get(self.cname) or (
             lambda c, e, s: run_condition(s, c, e))  # late-registered: raise like generic path
         self.bfn = BATCHED_CONDITIONS.get(self.cname)
+        self.rfn = FIRE_RUN_CONDITIONS.get(self.cname)
         self.aspec = trg.action
         self.afn = ACTIONS.get(self.aspec["name"]) or (
             lambda c, e, s: run_action(s, c, e))
+        # action-plane eligibility covers the whole action tree: a chain
+        # wrapping a scalar-only sub-action must keep the per-fire path
+        self.bafn = (BATCHED_ACTIONS.get(self.aspec["name"])
+                     if batchable_action(self.aspec) else None)
 
     def matches(self, etype: str) -> bool:
         """Live candidacy check: enabled and (no filter or type match)."""
@@ -101,6 +118,7 @@ class TFWorker:
         timers=None,
         partitions: Optional[Iterable[int]] = None,
         batch_plane: bool = True,
+        action_plane: bool = True,
         vector_join: Optional[str] = None,
     ) -> None:
         self.workflow = workflow
@@ -128,6 +146,10 @@ class TFWorker:
         self._contexts: Dict[str, TriggerContext] = {}
         self._dispatch: Dict[str, List[_Entry]] = {}
         self._seen: set = set()          # processed-but-uncommitted event ids
+        # event ids already counted in stats.dlq_events: a quarantined event
+        # that cycles through redrive back into the DLQ is one DLQ'd event,
+        # not one per cycle (ids are released once the event finally commits)
+        self._dlq_counted: set = set()
         self._sink: List[CloudEvent] = []  # internal event buffer (§5.2)
         self.event_log: List[CloudEvent] = []  # native event-sourcing log (§5.3)
         self.stats = WorkerStats()
@@ -139,6 +161,12 @@ class TFWorker:
         # the batch plane uses it to re-offer the rest of an in-flight slice
         # to triggers registered or enabled by an action mid-slice.
         self._struct_version = 0
+        # triage pre-screen cache: whether any registered trigger could even
+        # name-qualify for the vector join plane (recomputed per struct
+        # version, so pure fire-run workloads skip the per-batch bucketing
+        # pass entirely)
+        self._joins_version = -1
+        self._maybe_joins = True
         # while a slice evaluation is in flight: the slice index of the event
         # whose condition/action is currently running, so a dynamically
         # added/enabled trigger can record exactly where it came online
@@ -147,6 +175,10 @@ class TFWorker:
         self.last_active = time.monotonic()
 
         self.batch_plane = batch_plane
+        # The action plane (fire-run fast path): collapse a whole slice's
+        # evaluate→fire loop into one fire-run condition call + one batched
+        # action call.  Only effective on the batch plane.
+        self.action_plane = action_plane
         self._vector_plane = None
         if batch_plane:
             mode = vector_join or os.environ.get("TRIGGERFLOW_JOIN_BACKEND", "auto")
@@ -251,6 +283,14 @@ class TFWorker:
         self._sink.append(event)
         self.event_store.publish(self.workflow, event)
 
+    def sink_batch(self, events: List[CloudEvent]) -> None:
+        """Bulk ``sink``: one ``publish_batch`` (one append per partition,
+        one commit-log write on durable stores) for a whole fire run."""
+        if not events:
+            return
+        self._sink.extend(events)
+        self.event_store.publish_batch(self.workflow, events)
+
     def set_result(self, value: Any) -> None:
         self.finished = True
         self.result = value
@@ -297,6 +337,18 @@ class TFWorker:
         return self.event_store.redrive(self.workflow)
 
     # -- the batch-plane hot loop --------------------------------------------------
+    def _has_join_triggers(self) -> bool:
+        """Cheap structural pre-screen for the vector join plane: does any
+        trigger carry a condition the triage could claim at all?  Without
+        one, the per-batch subject-bucketing pass is provably wasted."""
+        if self._joins_version != self._struct_version:
+            self._joins_version = self._struct_version
+            self._maybe_joins = any(
+                t.condition.get("name") in CLAIMABLE_CONDITIONS
+                and not t.condition.get("exactly_once")
+                for t in self.triggers.values())
+        return self._maybe_joins
+
     def _entries_for(self, subject: str) -> List[_Entry]:
         entries = self._dispatch.get(subject)
         if entries is None:
@@ -333,6 +385,18 @@ class TFWorker:
         ver = self._struct_version
         pos = 0
         n = len(events)
+        # The action plane: a fire-run condition reports *every* fire position
+        # in one call and a batched action handles the whole run in one call —
+        # the per-fire evaluate→act loop below collapses to two Python calls
+        # per (trigger, slice).  Only for non-transient triggers (a transient
+        # must stop at its first fire) whose action opted into batching (the
+        # scalar per-fire path stays the oracle for invoke/intercepted/pyfunc
+        # and any dynamic-structure choreography they perform).
+        if (self.action_plane and entry.rfn is not None
+                and entry.bafn is not None and not trg.transient):
+            res = self._eval_entry_run(entry, events, pos_base)
+            if res is not None:
+                return res
         try:
             while pos < n:
                 sl = events[pos:] if pos else events
@@ -393,7 +457,57 @@ class TFWorker:
                     trg.enabled = False
                     self._mark_trigger_dirty(trg.trigger_id)
                     return pos - 1, fired_any, changed_at
+                if not trg.enabled:
+                    # the action disabled its own trigger: stop consuming, as
+                    # the scalar oracle (which re-checks enabled per event)
+                    # would — the tail re-enters candidate resolution
+                    return pos - 1, fired_any, changed_at
             return n - 1, fired_any, changed_at
+        finally:
+            self._slice_pos = None
+
+    def _eval_entry_run(self, entry: _Entry, events: List[CloudEvent],
+                        pos_base: int = 0) -> Optional[Tuple[int, bool, Optional[int]]]:
+        """The action-plane fast path: one fire-run condition call + one
+        batched action call for the whole slice.  Returns ``None`` when the
+        condition declines the run (dedup, timeouts, anything needing
+        per-event care) — the caller then falls through to the per-fire
+        protocol.  Structure changes made by the batched action are anchored
+        at the run's first fire (the earliest event whose action could have
+        caused them) for the caller's re-offer pass."""
+        trg = entry.trg
+        ctx = entry.ctx
+        stats = self.stats
+        n = len(events)
+        ver = self._struct_version
+        self._slice_pos = pos_base
+        try:
+            try:
+                fires = entry.rfn(ctx, events, entry.cspec)
+            except Exception:  # noqa: BLE001
+                # same contract as a failed batched-condition call: the run
+                # may have partially mutated the context, so re-sweeping
+                # would double-count — condition error ⇒ no fire.
+                traceback.print_exc()
+                stats.activations += n
+                return n - 1, False, (0 if self._struct_version != ver else None)
+            if fires is None:
+                return None
+            changed_at: Optional[int] = 0 if self._struct_version != ver else None
+            ver = self._struct_version
+            stats.activations += n
+            if not fires:
+                return n - 1, False, changed_at
+            fired = events if len(fires) == n else [events[i] for i in fires]
+            self._slice_pos = pos_base + fires[0]
+            try:
+                entry.bafn(ctx, fired, entry.aspec)
+            except Exception:  # noqa: BLE001
+                traceback.print_exc()
+            if self._struct_version != ver and changed_at is None:
+                changed_at = fires[0]
+            stats.fires += len(fires)
+            return n - 1, True, changed_at
         finally:
             self._slice_pos = None
 
@@ -437,10 +551,13 @@ class TFWorker:
                 # All candidate triggers disabled → out-of-order → DLQ (§3.4).
                 to_dlq = self.event_store.to_dlq
                 seen_discard = self._seen.discard
+                counted = self._dlq_counted
                 for e in sl:
                     to_dlq(self.workflow, e)
                     seen_discard(e.id)
-                stats.dlq_events += len(sl)
+                    if e.id not in counted:
+                        counted.add(e.id)
+                        stats.dlq_events += 1
                 return fired_any
             if change_min is not None:
                 # An action (or condition) changed trigger structure at slice
@@ -528,7 +645,8 @@ class TFWorker:
             # folded into one segmented-sum array op and only the leftover
             # events enter the Python path.
             if (vector_plane is not None and not seen and is_committed is None
-                    and event_log is None and not self._sink and len(batch) > 1):
+                    and event_log is None and not self._sink and len(batch) > 1
+                    and self._has_join_triggers()):
                 try:
                     res = vector_plane.triage(batch, self._entries_for, stats)
                 except Exception:  # noqa: BLE001
@@ -633,7 +751,9 @@ class TFWorker:
             # All candidate triggers disabled → out-of-order event → DLQ (§3.4).
             self.event_store.to_dlq(self.workflow, event)
             self._seen.discard(event.id)
-            self.stats.dlq_events += 1
+            if event.id not in self._dlq_counted:
+                self._dlq_counted.add(event.id)
+                self.stats.dlq_events += 1
             return False
         return fired
 
@@ -705,6 +825,10 @@ class TFWorker:
             self._dirty_triggers.clear()
         self._commit(processed_ids)
         self._seen.difference_update(processed_ids)
+        if self._dlq_counted:
+            # a once-quarantined event that finally committed leaves the DLQ
+            # lifecycle: a *future* quarantine is a new one and counts again
+            self._dlq_counted.difference_update(processed_ids)
 
     # -- loops ------------------------------------------------------------------------
     def run_until_complete(self, timeout: float = 60.0, poll: float = 0.001) -> Any:

@@ -1,0 +1,644 @@
+"""Action-plane (batched fire path) parity + bulk-publish + DLQ-stat tests.
+
+Three-way oracle: every stream runs through (a) the scalar per-event
+interpreter, (b) the batch plane with the action plane disabled (per-fire
+actions — the PR-2 behavior), and (c) the full action plane (fire-run
+conditions + batched actions).  All observables must agree.
+"""
+import random
+import threading
+
+import pytest
+
+from repro.core import (
+    BATCHED_ACTIONS,
+    FIRE_RUN_CONDITIONS,
+    FileEventStore,
+    FileStateStore,
+    MemoryEventStore,
+    MemoryStateStore,
+    Trigger,
+    Triggerflow,
+    make_trigger,
+    register_action,
+    termination_event,
+)
+from repro.core.events import CloudEvent
+from repro.core.functions import FunctionBackend
+from repro.core.worker import TFWorker
+
+
+def _mk_worker(state_store=None, event_store=None, batch_plane=True,
+               action_plane=True, commit_policy="every_batch",
+               vector_join=None):
+    es = event_store or MemoryEventStore()
+    ss = state_store or MemoryStateStore()
+    return TFWorker("w", es, ss, FunctionBackend(es, inline=True),
+                    commit_policy=commit_policy, batch_plane=batch_plane,
+                    action_plane=action_plane, vector_join=vector_join)
+
+
+def _drain(w, batch=512, rounds=200):
+    for _ in range(rounds):
+        if w.run_once(batch) == 0 and not w._sink:
+            break
+
+
+def _ctx_norm(w):
+    out = {}
+    for tid in w.triggers:
+        ctx = dict(w.context_of(tid))
+        if isinstance(ctx.get("seen_ids"), (set, frozenset, list)):
+            ctx["seen_ids"] = sorted(ctx["seen_ids"])
+        out[tid] = ctx
+    return out
+
+
+def _observables(w):
+    return {
+        "fires": w.stats.fires,
+        "activations": w.stats.activations,
+        "events": w.stats.events_processed,
+        "dlq": w.stats.dlq_events,
+        "contexts": _ctx_norm(w),
+        "enabled": {tid: t.enabled for tid, t in w.triggers.items()},
+        "store_dlq": w.event_store.dlq_size("w"),
+        "lag": w.event_store.lag("w"),
+        # sinked events mint fresh ids per run: compare the count, not ids
+        "n_committed": len(w.event_store.committed_events("w")),
+    }
+
+
+PLANES = (
+    dict(batch_plane=False),                      # scalar oracle
+    dict(batch_plane=True, action_plane=False),   # per-fire batch plane
+    dict(batch_plane=True, action_plane=True),    # full action plane
+)
+
+
+def _parity3(triggers, events, batch=512, setup=None):
+    """Run the same stream through all three planes; observables must agree."""
+    results = []
+    for cfg in PLANES:
+        w = _mk_worker(**cfg)
+        for spec in triggers:
+            w.add_trigger(make_trigger(**spec))
+        if setup is not None:
+            setup(w)
+        w.event_store.publish_batch("w", events)
+        _drain(w, batch)
+        results.append(_observables(w))
+    assert results[0] == results[1] == results[2]
+    return results[2]
+
+
+def test_builtin_actions_have_batched_impls():
+    for name in ("noop", "produce", "workflow_end", "chain"):
+        assert name in BATCHED_ACTIONS, name
+    # exact-interleaving actions deliberately stay scalar-only
+    for name in ("invoke", "map_invoke", "intercepted", "pyfunc"):
+        assert name not in BATCHED_ACTIONS, name
+    for name in ("true", "false", "counter", "threshold_join"):
+        assert name in FIRE_RUN_CONDITIONS, name
+
+
+def test_noop_fire_run_parity_randomized():
+    rng = random.Random(23)
+    for _ in range(5):
+        subjects = [f"s{i}" for i in range(rng.randint(1, 4))]
+        triggers = []
+        for i, s in enumerate(subjects):
+            cond = rng.choice([
+                {"name": "true"},
+                {"name": "counter", "expected": rng.randint(1, 9),
+                 "aggregate": rng.random() < 0.5,
+                 "reset_on_fire": rng.random() < 0.5},
+                {"name": "threshold_join", "expected": rng.randint(2, 20),
+                 "fraction": rng.choice([0.5, 1.0])},
+            ])
+            triggers.append(dict(
+                subjects=s, condition=cond, action={"name": "noop"},
+                trigger_id=f"t{i}", transient=False))
+        events = [termination_event(rng.choice(subjects), i)
+                  for i in range(rng.randint(20, 150))]
+        _parity3(triggers, events, batch=rng.choice([5, 32, 512]))
+
+
+def test_produce_fanout_parity_and_bulk_publish():
+    """A counter firing a batched produce must sink the same events as the
+    scalar oracle — and do it through one publish_batch per run."""
+    triggers = [
+        dict(subjects="in",
+             condition={"name": "counter", "expected": 3, "aggregate": False,
+                        "reset_on_fire": True},
+             action={"name": "produce", "subject": "out", "result": 7},
+             trigger_id="prod", transient=False),
+        dict(subjects="out",
+             condition={"name": "counter", "expected": 100, "aggregate": True},
+             action={"name": "noop"}, trigger_id="sinked", transient=False),
+    ]
+    events = [termination_event("in", i) for i in range(30)]
+    res = _parity3(triggers, events)
+    assert res["fires"] == 10  # 10 produce fires; sink counter never fires
+    assert res["contexts"]["sinked"]["count"] == 10
+    assert res["contexts"]["sinked"]["results"] == [7] * 10
+
+
+def test_produce_pass_result_parity():
+    triggers = [
+        dict(subjects="in", condition={"name": "true"},
+             action={"name": "produce", "subject": "out", "pass_result": True},
+             trigger_id="prod", transient=False),
+        dict(subjects="out",
+             condition={"name": "counter", "expected": 1000},
+             action={"name": "noop"}, trigger_id="sinked", transient=False),
+    ]
+    events = [termination_event("in", i * 10) for i in range(12)]
+    res = _parity3(triggers, events)
+    assert res["contexts"]["sinked"]["results"] == [i * 10 for i in range(12)]
+
+
+def test_single_action_chain_batches_multi_action_chain_stays_exact():
+    triggers = [dict(
+        subjects="in", condition={"name": "true"},
+        action={"name": "chain", "actions": [
+            {"name": "produce", "subject": "a", "result": 1},
+            {"name": "produce", "subject": "b", "result": 2},
+        ]},
+        trigger_id="t", transient=False),
+        dict(subjects="a", condition={"name": "counter", "expected": 99},
+             action={"name": "noop"}, trigger_id="ca", transient=False),
+        dict(subjects="b", condition={"name": "counter", "expected": 99},
+             action={"name": "noop"}, trigger_id="cb", transient=False)]
+    events = [termination_event("in", i) for i in range(7)]
+    res = _parity3(triggers, events)
+    assert res["contexts"]["ca"]["count"] == 7
+    assert res["contexts"]["cb"]["count"] == 7
+
+    single = [dict(
+        subjects="in", condition={"name": "true"},
+        action={"name": "chain", "actions": [
+            {"name": "produce", "subject": "a", "result": 3}]},
+        trigger_id="t", transient=False),
+        dict(subjects="a", condition={"name": "counter", "expected": 99},
+             action={"name": "noop"}, trigger_id="ca", transient=False)]
+    res = _parity3(single, events)
+    assert res["contexts"]["ca"]["results"] == [3] * 7
+
+
+def test_chain_wrapped_scalar_action_keeps_per_fire_path():
+    """A chain wrapping a scalar-only sub-action must NOT ride the action
+    plane: the per-fire path re-checks trigger state between fires, so a
+    self-disabling pyfunc inside a chain stops the run exactly like the
+    scalar oracle (review repro: the whole run used to fire)."""
+    from repro.core import register_pyfunc
+    from repro.core.actions import batchable_action
+
+    assert not batchable_action(
+        {"name": "chain", "actions": [{"name": "pyfunc", "func": "x"}]})
+    assert not batchable_action(
+        {"name": "chain", "actions": [
+            {"name": "noop"},
+            {"name": "chain", "actions": [{"name": "invoke", "fn": "f",
+                                           "subject": "s"}]}]})
+    assert batchable_action(
+        {"name": "chain", "actions": [
+            {"name": "noop"},
+            {"name": "produce", "subject": "s", "result": 1}]})
+
+    def disable_self(ctx, ev, p):
+        ctx.disable_trigger("t")
+
+    register_pyfunc("chain_disable_self", disable_self)
+    triggers = [dict(
+        subjects="x", condition={"name": "true"},
+        action={"name": "chain", "actions": [
+            {"name": "pyfunc", "func": "chain_disable_self"}]},
+        trigger_id="t", transient=False)]
+    events = [termination_event("x", i) for i in range(5)]
+    res = _parity3(triggers, events)
+    assert res["fires"] == 1
+    assert res["store_dlq"] == 4
+
+
+def test_workflow_end_batched_parity():
+    triggers = [dict(
+        subjects="s", condition={"name": "counter", "expected": 4,
+                                 "aggregate": False},
+        action={"name": "workflow_end", "result": "done"},
+        trigger_id="t", transient=False)]
+    events = [termination_event("s", i) for i in range(6)]
+    obs = []
+    for cfg in PLANES:
+        w = _mk_worker(**cfg)
+        for spec in triggers:
+            w.add_trigger(make_trigger(**spec))
+        w.event_store.publish_batch("w", events)
+        _drain(w)
+        obs.append((w.finished, w.result, _observables(w)))
+    assert obs[0] == obs[1] == obs[2]
+    assert obs[2][0] is True
+    assert obs[2][1]["result"] == "done"
+
+
+def test_transient_trigger_excluded_from_fire_run():
+    """A transient trigger must stop at its first fire even when its
+    condition/action pair is fire-run capable: the tail of the slice is
+    DLQ'd exactly like the scalar oracle."""
+    triggers = [dict(subjects="x", condition={"name": "true"},
+                     action={"name": "noop"}, trigger_id="t", transient=True)]
+    events = [termination_event("x", i) for i in range(8)]
+    res = _parity3(triggers, events)
+    assert res["fires"] == 1
+    assert res["store_dlq"] == 7
+
+
+def test_action_plane_self_disable_mid_run():
+    """A scalar action that disables its own (non-transient) trigger stops
+    consumption at that event in every plane (the oracle re-checks enabled
+    per event); the tail is quarantined."""
+    from repro.core import register_pyfunc
+
+    def disable_self(ctx, ev, p):
+        if (ev.data or {}).get("result") == 2:
+            ctx.disable_trigger("t")
+
+    register_pyfunc("disable_self", disable_self)
+    triggers = [dict(subjects="x", condition={"name": "true"},
+                     action={"name": "pyfunc", "func": "disable_self"},
+                     trigger_id="t", transient=False)]
+    events = [termination_event("x", i) for i in range(6)]
+    res = _parity3(triggers, events)
+    assert res["fires"] == 3      # events 0,1,2 fire; 3..5 quarantined
+    assert res["store_dlq"] == 3
+    assert res["enabled"]["t"] is False
+
+
+def test_batched_action_exception_is_contained():
+    """A batched action that raises mid-run must not kill the worker or
+    poison the stream: the slice's events are still consumed and committed,
+    fires are still counted, and later batches process normally."""
+    calls = {"scalar": 0, "batched": 0}
+
+    def ok_scalar(ctx, ev, p):
+        calls["scalar"] += 1
+
+    def bad_batched(ctx, events, p):
+        calls["batched"] += 1
+        raise RuntimeError("boom mid-run")
+
+    register_action("explodes_batched", ok_scalar, batched=bad_batched)
+    try:
+        w = _mk_worker()
+        w.add_trigger(make_trigger(
+            "x", condition={"name": "true"},
+            action={"name": "explodes_batched"}, trigger_id="t",
+            transient=False))
+        w.event_store.publish_batch(
+            "w", [termination_event("x", i) for i in range(5)])
+        _drain(w)  # must not raise
+        assert calls["batched"] == 1
+        assert w.stats.fires == 5
+        assert w.event_store.lag("w") == 0  # consumed and committed
+        # the worker is healthy: a later batch still fires
+        w.event_store.publish("w", termination_event("x", 99))
+        _drain(w)
+        assert w.stats.fires == 6
+    finally:
+        register_action("explodes_batched", ok_scalar)  # drop batched impl
+
+
+def test_slice_isolating_batched_action_keeps_parity():
+    """The documented way to write a raising batched action — per-event
+    isolation, like the scalar loop's per-fire try/except — keeps all three
+    planes observably identical."""
+    def scalar(ctx, ev, p):
+        done = ctx.get("done", 0)
+        if (ev.data or {}).get("result") == 3:
+            raise ValueError("poisoned event")
+        ctx["done"] = done + 1
+
+    def batched(ctx, events, p):
+        for e in events:
+            try:
+                scalar(ctx, e, p)
+            except Exception:  # noqa: BLE001 - mirrors the worker's per-fire catch
+                import traceback
+                traceback.print_exc()
+
+    register_action("picky", scalar, batched=batched)
+    try:
+        triggers = [dict(subjects="x", condition={"name": "true"},
+                         action={"name": "picky"}, trigger_id="t",
+                         transient=False)]
+        events = [termination_event("x", i) for i in range(6)]
+        res = _parity3(triggers, events)
+        assert res["fires"] == 6
+        assert res["contexts"]["t"]["done"] == 5  # event 3 raised in all planes
+    finally:
+        register_action("picky", scalar)
+    # restore nothing else: 'picky' without batched impl now
+    assert "picky" not in BATCHED_ACTIONS
+
+
+def test_dynamic_trigger_registered_by_batched_action():
+    """A batched action adding a trigger on its first fire anchors the new
+    trigger at that fire (== the scalar oracle's birth event when the add
+    happens on the run's first fire), so the re-offered tail matches."""
+    def scalar_add(ctx, ev, p):
+        if not ctx.get("added"):
+            ctx["added"] = True
+            ctx.add_trigger(Trigger(
+                activation_events=["x"],
+                condition={"name": "counter", "expected": 99,
+                           "aggregate": False},
+                action={"name": "noop"}, trigger_id="B", transient=False))
+
+    def batched_add(ctx, events, p):
+        for e in events:
+            scalar_add(ctx, e, p)
+
+    register_action("adds_b", scalar_add, batched=batched_add)
+    try:
+        triggers = [dict(subjects="x", condition={"name": "true"},
+                         action={"name": "adds_b"}, trigger_id="A",
+                         transient=False)]
+        events = [termination_event("x", i) for i in range(9)]
+        res = _parity3(triggers, events)
+        assert res["contexts"]["B"]["count"] == 9  # born at e0, saw the batch
+    finally:
+        register_action("adds_b", scalar_add)
+
+
+def test_fire_run_condition_exception_consumes_slice_without_fire():
+    from repro.core import register_condition
+
+    def scalar_raises(ctx, ev, p):
+        raise RuntimeError("condition boom")
+
+    register_condition("always_raises", scalar_raises,
+                       fire_run=lambda ctx, events, p: (_ for _ in ()).throw(
+                           RuntimeError("condition boom")))
+    try:
+        w = _mk_worker()
+        w.add_trigger(make_trigger(
+            "x", condition={"name": "always_raises"}, action={"name": "noop"},
+            trigger_id="t", transient=False))
+        w.event_store.publish_batch(
+            "w", [termination_event("x", i) for i in range(4)])
+        _drain(w)
+        assert w.stats.fires == 0
+        assert w.event_store.lag("w") == 0
+    finally:
+        register_condition("always_raises", scalar_raises)
+
+
+# -- bulk publish: crash / redelivery ----------------------------------------
+
+def test_publish_batch_crash_redelivery_exactly_once(tmp_path):
+    """publish_batch on the durable store is one commit-log write; a crash
+    before commit redelivers the whole batch, and exactly_once counting
+    stays exact across the restart."""
+    root = str(tmp_path / "es")
+    es = FileEventStore(root)
+    ss = FileStateStore(str(tmp_path / "ss"))
+    events = [termination_event("x", i) for i in range(20)]
+    es.publish_batch("w", events)
+
+    w = TFWorker("w", es, ss, FunctionBackend(es, inline=True),
+                 commit_policy="every_batch", batch_plane=True)
+    w.add_trigger(make_trigger(
+        "x", condition={"name": "counter", "expected": 100,
+                        "aggregate": False, "exactly_once": True},
+        action={"name": "noop"}, trigger_id="t", transient=False))
+    w.run_once(7)  # partial progress: 7 committed, 13 pending
+
+    # crash: fresh store + worker from the same files
+    es2 = FileEventStore(root)
+    assert es2.lag("w") == 13  # committed events are not redelivered
+    w2 = TFWorker("w", es2, ss, FunctionBackend(es2, inline=True),
+                  commit_policy="every_batch", batch_plane=True)
+    _drain(w2)
+    assert dict(w2.context_of("t"))["count"] == 20
+    assert es2.lag("w") == 0
+
+    # a broker-style duplicate re-publish of the same batch is deduped
+    es2.publish_batch("w", events)
+    _drain(w2)
+    assert dict(w2.context_of("t"))["count"] == 20
+
+
+def test_batched_produce_uses_publish_batch():
+    """The batched produce path must publish the whole run in one
+    publish_batch call (one append per partition / one commit-log write)."""
+    calls = {"publish": 0, "publish_batch": 0}
+
+    class CountingStore(MemoryEventStore):
+        def publish(self, workflow, event):
+            calls["publish"] += 1
+            super().publish(workflow, event)
+
+        def publish_batch(self, workflow, events):
+            calls["publish_batch"] += 1
+            super().publish_batch(workflow, events)
+
+    es = CountingStore()
+    w = _mk_worker(event_store=es)
+    w.add_trigger(make_trigger(
+        "in", condition={"name": "true"},
+        action={"name": "produce", "subject": "out", "result": 1},
+        trigger_id="t", transient=False))
+    w.add_trigger(make_trigger(
+        "out", condition={"name": "counter", "expected": 999},
+        action={"name": "noop"}, trigger_id="c", transient=False))
+    es.publish_batch("w", [termination_event("in", i) for i in range(50)])
+    calls["publish"] = calls["publish_batch"] = 0
+    _drain(w)
+    assert w.stats.fires == 50
+    assert calls["publish"] == 0          # no per-event publishes
+    assert 1 <= calls["publish_batch"] <= 2  # one bulk sink per fire run
+
+
+def test_triage_poisoned_results_not_double_counted():
+    """A truthy non-list ctx['results'] (introspection poisoning) must be
+    declined by triage screening, not die mid-apply: writing counts before
+    a failing extend would re-process the batch double-counted (review
+    repro: 10 delivered events used to leave count == 20)."""
+    obs = []
+    for plane in (False, True):
+        w = _mk_worker(batch_plane=plane, vector_join="numpy")
+        for i in range(3):
+            w.add_trigger(make_trigger(
+                f"s{i}", condition={"name": "counter", "expected": 50},
+                action={"name": "noop"}, trigger_id=f"t{i}", transient=False))
+        w.context_of("t0")["results"] = "oops"
+        w.event_store.publish_batch(
+            "w", [termination_event(f"s{i % 3}", i) for i in range(9)])
+        _drain(w)  # must not raise
+        obs.append(_observables(w))
+    # the poisoned trigger's count advances once per delivered event in both
+    # planes (the scalar fn also increments before the append raises), and
+    # the healthy triggers agree exactly
+    for plane_obs in obs:
+        assert plane_obs["contexts"]["t0"]["count"] == 3
+    for tid in ("t1", "t2"):
+        assert obs[0]["contexts"][tid] == obs[1]["contexts"][tid]
+        assert obs[1]["contexts"][tid]["count"] == 3
+    for key in ("fires", "dlq", "events", "lag", "store_dlq"):
+        assert obs[0][key] == obs[1][key], key
+
+
+# -- DLQ stat: count each quarantined event once ------------------------------
+
+def test_dlq_event_counted_once_across_redrive_cycles():
+    """A quarantined event that cycles DLQ → redrive → DLQ (its trigger
+    stays disabled while other triggers keep firing) is ONE dlq event, not
+    one per cycle — in both planes."""
+    for plane in (False, True):
+        w = _mk_worker(batch_plane=plane)
+        w.add_trigger(make_trigger(
+            "x", condition={"name": "true"}, action={"name": "noop"},
+            trigger_id="tx", transient=False))
+        ty = make_trigger("y", condition={"name": "true"},
+                          action={"name": "noop"}, trigger_id="ty",
+                          transient=False)
+        ty.enabled = False
+        w.add_trigger(ty)
+        w.event_store.publish("w", termination_event("y", 0))
+        for i in range(5):  # every fire redrives the DLQ'd event again
+            w.event_store.publish("w", termination_event("x", i))
+            w.run_once()
+        assert w.stats.dlq_events == 1, plane
+        # once processed after an enable, a *new* quarantine counts again
+        w.set_trigger_enabled("ty", True)
+        _drain(w)
+        assert w.stats.dlq_events == 1, plane
+        w.set_trigger_enabled("ty", False)
+        w.event_store.publish("w", termination_event("y", 1))
+        w.event_store.publish("w", termination_event("x", 9))
+        w.run_once()
+        assert w.stats.dlq_events == 2, plane
+
+
+# -- size-based delta-log compaction ------------------------------------------
+
+def test_delta_log_compacts_on_byte_threshold(tmp_path):
+    ss = FileStateStore(str(tmp_path / "b"), compact_every=10_000,
+                        compact_bytes=600)
+    log = tmp_path / "b" / "w" / "contexts.delta.jsonl"
+    for i in range(40):
+        ss.put_contexts_delta("w", {"t": {"set": {"count": i, "pad": "x" * 40}}})
+        if log.exists():
+            assert log.stat().st_size <= 600 + 80  # bounded by the threshold
+    assert ss.get_contexts("w")["t"]["count"] == 39
+    # the byte counter survives a restart (recomputed from the file)
+    ss2 = FileStateStore(str(tmp_path / "b"), compact_every=10_000,
+                         compact_bytes=600)
+    for i in range(40):
+        ss2.put_contexts_delta("w", {"t": {"set": {"count": 100 + i,
+                                                   "pad": "y" * 40}}})
+        if log.exists():
+            assert log.stat().st_size <= 600 + 80
+    assert ss2.get_contexts("w")["t"]["count"] == 139
+
+
+def test_compact_bytes_none_keeps_count_behavior(tmp_path):
+    ss = FileStateStore(str(tmp_path / "c"), compact_every=5)
+    for i in range(7):
+        ss.put_contexts_delta("w", {"t": {"set": {"count": i}}})
+    log = tmp_path / "c" / "w" / "contexts.delta.jsonl"
+    lines = [x for x in log.read_text().splitlines() if x.strip()] \
+        if log.exists() else []
+    assert len(lines) == 2  # compacted at 5, then 2 more
+    assert ss.get_contexts("w")["t"]["count"] == 6
+
+
+# -- striped bus under concurrency --------------------------------------------
+
+def test_striped_bus_concurrent_publish_consume_commit():
+    """Hammer disjoint partitions from concurrent publishers and consumers:
+    no event lost, none double-committed, per-partition order preserved."""
+    from repro.bus import PartitionedEventStore
+
+    store = PartitionedEventStore(8, partitioner=lambda s, n: int(s[1:]) % n)
+    store.create_stream("w")
+    n_per = 400
+    stop = threading.Event()
+    errors = []
+
+    def publisher(part):
+        try:
+            for i in range(n_per):
+                store.publish("w", termination_event(f"p{part}", i))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    consumed = {p: [] for p in range(8)}
+
+    def consumer(part):
+        try:
+            while not stop.is_set() or store.lag_partitions("w", [part]):
+                batch = store.consume_partitions("w", [part], 64)
+                if not batch:
+                    continue
+                store.commit_partitions("w", [part], [e.id for e in batch])
+                consumed[part].extend(batch)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    pubs = [threading.Thread(target=publisher, args=(p,)) for p in range(8)]
+    cons = [threading.Thread(target=consumer, args=(p,)) for p in range(8)]
+    for t in pubs + cons:
+        t.start()
+    for t in pubs:
+        t.join()
+    stop.set()
+    for t in cons:
+        t.join(timeout=10)
+    assert not errors, errors
+    assert store.lag("w") == 0
+    for p in range(8):
+        got = [(e.data or {}).get("result") for e in consumed[p]]
+        assert got == list(range(n_per)), f"partition {p} order broken"
+    assert sum(store.commit_offsets("w")) == 8 * n_per
+
+
+def test_coarse_mode_still_works():
+    from repro.bus import PartitionedEventStore
+
+    store = PartitionedEventStore(4, striped=False)
+    store.publish_batch("w", [termination_event(f"s{i}", i) for i in range(20)])
+    assert store.lag("w") == 20
+    got = store.consume("w", 50)
+    store.commit("w", [e.id for e in got])
+    assert store.lag("w") == 0
+    # all shards of one workflow share one lock object in coarse mode
+    shards = store._shards("w")
+    assert all(s.lock is shards[0].lock for s in shards)
+
+
+def test_sharded_pool_action_plane_parity():
+    """The action plane composes with the sharded dataplane: same fires and
+    contexts as the per-fire pool."""
+    from repro.bus import PartitionedEventStore
+
+    obs = []
+    for action_plane in (False, True):
+        store = PartitionedEventStore(8)
+        tf = Triggerflow(event_store=store, inline_functions=True,
+                         commit_policy="every_batch")
+        tf.pool.action_plane = action_plane
+        tf.create_workflow("load")
+        for s in range(16):
+            tf.add_trigger("load", make_trigger(
+                f"e{s}", condition={"name": "true"}, action={"name": "noop"},
+                trigger_id=f"n{s}", transient=False))
+        store.publish_batch(
+            "load", [termination_event(f"e{i % 16}", i) for i in range(800)])
+        tf.pool.set_shard_count("load", 4)
+        tf.pool.drive("load", timeout=30)
+        obs.append((tf.pool.total_fires("load"),
+                    tf.pool.total_events_processed("load")))
+        tf.shutdown()
+    assert obs[0] == obs[1]
+    assert obs[1][0] == 800
