@@ -1,17 +1,22 @@
-"""CI perf-regression gate for the batch plane and the action plane.
+"""CI perf-regression gate for the batch plane, action plane + process bus.
 
-Two gated ratios, both measured through the real TF-Worker within one job:
+Three gated ratios, all measured through the real runtimes within one job:
 
 * join  — per-event interpreter (``batch_plane=False``) vs batch plane
           (Table-1 join workload, 100 triggers x 1000 events).
 * noop  — per-fire action loop (``action_plane=False``) vs action plane
           (fire-run conditions + batched actions, Table-1 noop workload).
+* proc  — 2 threaded shards (in-memory bus) vs 2 shard *processes* over the
+          durable file-backed bus (``sharded_load --mode=process``): guards
+          the multiprocess runtime + file-bus hot path against regressions
+          (a broken sync/commit path or serialization blow-up collapses the
+          ratio).
 
 Each measured speedup is compared against the one committed in
 ``results/benchmarks.json``.  The gate is on the *ratio*, not raw events/s:
 CI runners differ by far more than 30% in absolute speed, but before and
 after share the machine within one job, so their ratio cancels host speed
-out.  A >30% drop in either ratio fails the job.
+out.  A >30% drop in any ratio fails the job.
 
     PYTHONPATH=src:. python scripts/perf_gate.py [--reps 2] [--tolerance 0.7]
 """
@@ -46,8 +51,10 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks.load_test import bench_join, bench_noop
+    from benchmarks.sharded_load import bench_proc_noop, bench_sharded_noop
 
     join_interp = join_batch = noop_scalar = noop_ap = 0.0
+    thread2 = proc2 = 0.0
     for _ in range(args.reps):
         join_interp = max(join_interp,
                           bench_join(batch_plane=False)["events_per_s"])
@@ -57,6 +64,12 @@ def main() -> int:
                           bench_noop(action_plane=False)["events_per_s"])
         noop_ap = max(noop_ap,
                       bench_noop(action_plane=True)["events_per_s"])
+        thread2 = max(thread2, bench_sharded_noop(
+            n_events=20_000, shards=2, partitions=8,
+            subjects=32)["events_per_s"])
+        proc2 = max(proc2, bench_proc_noop(
+            n_events=20_000, shards=2, partitions=8, subjects=32,
+            batch_size=1024)["events_per_s"])
 
     gates = [
         # (label, before ev/s, after ev/s, committed before/after row names)
@@ -64,10 +77,12 @@ def main() -> int:
          "load_test.join_interpreter", "load_test.join"),
         ("noop (action plane)", noop_scalar, noop_ap,
          "load_test.noop", "load_test.noop_action_plane"),
+        ("noop (2 process shards vs 2 thread shards)", thread2, proc2,
+         "sharded_load.noop_2shard", "sharded_load.noop_2proc_file"),
     ]
 
     lines = [
-        "## Perf gate (batch plane + action plane)",
+        "## Perf gate (batch plane + action plane + process bus)",
         "",
         "| scenario | before ev/s | after ev/s | speedup | committed |",
         "|---|---|---|---|---|",

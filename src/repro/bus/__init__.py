@@ -1,12 +1,19 @@
-# Partitioned event bus + sharded worker-pool runtime (paper §4 dataplane:
-# Kafka partitions / Redis Streams consumer groups, scaled TF-Workers).
+# Partitioned event bus + sharded worker-pool runtimes (paper §4 dataplane:
+# Kafka partitions / Redis Streams consumer groups, scaled TF-Workers —
+# threaded over the in-memory bus, or one OS process per shard over the
+# durable file-backed bus).
 from .group import ConsumerGroup
-from .partitioned import PartitionedEventStore, subject_partitioner
+from .partitioned import (FilePartitionedEventStore, PartitionedEventStore,
+                          PartitionedStoreBase, subject_partitioner)
 from .pool import ShardedWorkerPool, ShardWorker
+from .proc import ProcessShardPool
 
 __all__ = [
     "ConsumerGroup",
+    "FilePartitionedEventStore",
     "PartitionedEventStore",
+    "PartitionedStoreBase",
+    "ProcessShardPool",
     "ShardWorker",
     "ShardedWorkerPool",
     "subject_partitioner",

@@ -1,6 +1,6 @@
 """Partitioned event bus (paper §4: Kafka partitions / Redis Streams).
 
-A ``PartitionedEventStore`` is N independent ``StreamShard`` commit logs per
+A partitioned store is N independent ``StreamShard`` commit logs per
 workflow, with pluggable key→partition routing.  The default router is a
 stable hash of the event *subject*, so a workflow's causally-related events
 (everything addressed to the same trigger subject) stay totally ordered
@@ -12,25 +12,49 @@ Consumers address partitions explicitly (``consume_partitions`` /
 partition subsets to worker shards and scale horizontally without breaking
 the per-subject ordering or the at-least-once commit contract.
 
-Locking is **striped per partition**: every ``StreamShard`` carries its own
-lock and each operation takes only the locks of the partitions it touches,
-so shard workers draining disjoint partition sets never serialize on the
-store — they contend only on the interpreter itself.  (The pre-striping
-behavior — one global RLock serializing all partitions — is kept behind
-``striped=False`` as the contention baseline the benchmarks A/B against.)
-Aggregate reads (``lag``, ``partition_lags`` …) visit shards one lock at a
-time and are therefore momentary snapshots, exactly like Kafka consumer-lag
-metrics; nothing in the worker/autoscaler contract needs a cross-partition
-atomic view.
+Two backends share the routing and consumer-API orchestration
+(``PartitionedStoreBase``); they differ only in the per-partition
+primitives:
+
+* ``PartitionedEventStore`` — in-memory, the thread-shard fast path.
+  Locking is **striped per partition**: every ``StreamShard`` carries its
+  own lock and each operation takes only the locks of the partitions it
+  touches, so shard workers draining disjoint partition sets never
+  serialize on the store — they contend only on the interpreter itself.
+  (The pre-striping behavior — one global RLock serializing all
+  partitions — is kept behind ``striped=False`` as the contention baseline
+  the benchmarks A/B against.)
+
+* ``FilePartitionedEventStore`` — durable and **cross-process**: one
+  append-only segment log (+ committed-offset log + DLQ ledger) per
+  partition, file-locked per partition, with a ``StreamShard`` mirror per
+  partition kept in sync by incremental replay.  This is what the
+  multiprocess shard runtime (``repro.bus.proc``) runs on: the striped
+  in-process locks become striped *file* locks, so independent partitions
+  never contend across processes either.
+
+Aggregate reads (``lag``, ``partition_lags`` …) visit partitions one lock
+at a time and are therefore momentary snapshots, exactly like Kafka
+consumer-lag metrics; nothing in the worker/autoscaler contract needs a
+cross-partition atomic view.
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
+import time
 import zlib
-from typing import Callable, Dict, Iterable, List, Optional
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: in-process locks only
+    fcntl = None  # type: ignore[assignment]
 
 from ..core.events import CloudEvent
-from ..core.eventstore import EventStore, StreamShard
+from ..core.eventstore import EventStore, SegmentLog, StreamShard
 
 # subject -> partition. Stable across processes/restarts (crc32, not hash()).
 Partitioner = Callable[[str, int], int]
@@ -40,8 +64,9 @@ def subject_partitioner(subject: str, num_partitions: int) -> int:
     return zlib.crc32(subject.encode("utf-8")) % num_partitions
 
 
-class PartitionedEventStore(EventStore):
-    """``EventStore`` contract per partition + partition-scoped consumer API.
+class PartitionedStoreBase(EventStore):
+    """Routing + the partition-scoped consumer API, over abstract
+    per-partition primitives (``_*_p`` methods).
 
     Per-partition guarantees (mirroring the single-stream ``StreamShard``):
     arrival order preserved, at-least-once redelivery of uncommitted events,
@@ -54,25 +79,187 @@ class PartitionedEventStore(EventStore):
     #: checks and dedup only against its own in-flight set.
     UNCOMMITTED_ONLY = True
 
+    def __init__(self, num_partitions: int = 8,
+                 partitioner: Optional[Partitioner] = None) -> None:
+        if num_partitions < 1:
+            raise ValueError("num_partitions must be >= 1")
+        self.num_partitions = num_partitions
+        self.partitioner: Partitioner = partitioner or subject_partitioner
+
+    # -- routing ---------------------------------------------------------------
+    def partition_for(self, subject: str) -> int:
+        return self.partitioner(subject, self.num_partitions)
+
+    # -- per-partition primitives (subclass responsibility) --------------------
+    def _have(self, workflow: str) -> bool:
+        raise NotImplementedError
+
+    def _publish_p(self, workflow: str, p: int, events: List[CloudEvent]) -> None:
+        raise NotImplementedError
+
+    def _consume_p(self, workflow: str, p: int, max_events: int) -> List[CloudEvent]:
+        raise NotImplementedError
+
+    def _commit_p(self, workflow: str, p: int, ids: set) -> int:
+        raise NotImplementedError
+
+    def _lag_p(self, workflow: str, p: int) -> int:
+        raise NotImplementedError
+
+    def _dlq_size_p(self, workflow: str, p: int) -> int:
+        raise NotImplementedError
+
+    def _redrive_p(self, workflow: str, p: int) -> int:
+        raise NotImplementedError
+
+    def _to_dlq_p(self, workflow: str, p: int, event: CloudEvent) -> None:
+        raise NotImplementedError
+
+    def _is_committed_p(self, workflow: str, p: int, event_id: str) -> bool:
+        raise NotImplementedError
+
+    def _commit_offset_p(self, workflow: str, p: int) -> int:
+        raise NotImplementedError
+
+    def _committed_events_p(self, workflow: str, p: int) -> List[CloudEvent]:
+        raise NotImplementedError
+
+    # -- EventStore contract (whole-stream view) -------------------------------
+    def publish(self, workflow: str, event: CloudEvent) -> None:
+        self._publish_p(workflow, self.partition_for(event.subject), [event])
+
+    def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
+        by_part: Dict[int, List[CloudEvent]] = {}
+        for e in events:
+            by_part.setdefault(self.partition_for(e.subject), []).append(e)
+        # one append per touched partition, under that partition's lock only
+        for p, evs in by_part.items():
+            self._publish_p(workflow, p, evs)
+
+    def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
+        return self.consume_partitions(
+            workflow, range(self.num_partitions), max_events)
+
+    def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
+        self.commit_partitions(workflow, range(self.num_partitions), event_ids)
+
+    def is_committed(self, workflow: str, event_id: str) -> bool:
+        if not self._have(workflow):
+            return False
+        return any(self._is_committed_p(workflow, p, event_id)
+                   for p in range(self.num_partitions))
+
+    def lag(self, workflow: str) -> int:
+        return self.lag_partitions(workflow, range(self.num_partitions))
+
+    def to_dlq(self, workflow: str, event: CloudEvent) -> None:
+        self._to_dlq_p(workflow, self.partition_for(event.subject), event)
+
+    def redrive(self, workflow: str) -> int:
+        return self.redrive_partitions(workflow, range(self.num_partitions))
+
+    def dlq_size(self, workflow: str) -> int:
+        return self.dlq_size_partitions(workflow, range(self.num_partitions))
+
+    def committed_events(self, workflow: str) -> List[CloudEvent]:
+        """Committed events, per-partition commit order, concatenated by
+        partition index (cross-partition order is unspecified)."""
+        out: List[CloudEvent] = []
+        if not self._have(workflow):
+            return out
+        for p in range(self.num_partitions):
+            out.extend(self._committed_events_p(workflow, p))
+        return out
+
+    # -- partition-scoped consumer API (the consumer-group fast path) ----------
+    def consume_partition(
+        self, workflow: str, partition: int, max_events: int = 512
+    ) -> List[CloudEvent]:
+        if not self._have(workflow):
+            return []
+        return self._consume_p(workflow, partition, max_events)
+
+    def consume_partitions(
+        self, workflow: str, partitions: Iterable[int], max_events: int = 512
+    ) -> List[CloudEvent]:
+        """Up to ``max_events`` uncommitted events from the given partitions,
+        preserving arrival order *within* each partition."""
+        if not self._have(workflow):
+            return []
+        out: List[CloudEvent] = []
+        budget = max_events
+        for p in partitions:
+            if budget <= 0:
+                break
+            got = self._consume_p(workflow, p, budget)
+            out.extend(got)
+            budget -= len(got)
+        return out
+
+    def commit_partitions(
+        self, workflow: str, partitions: Iterable[int], event_ids: Iterable[str]
+    ) -> int:
+        ids = set(event_ids)
+        if not ids or not self._have(workflow):
+            return 0
+        # Per partition: intersect once (C-level), then the shard's bulk
+        # commit handles its share — an O(batch) slice/set compare in the
+        # common in-order case, degrading to prefix walk + scan only for
+        # ids skipped mid-stream.
+        n = 0
+        want = len(ids)
+        for p in partitions:
+            n += self._commit_p(workflow, p, ids)
+            if n == want:
+                break
+        return n
+
+    def partition_lags(self, workflow: str) -> List[int]:
+        """Per-partition lag vector — the autoscaler's scaling signal."""
+        if not self._have(workflow):
+            return [0] * self.num_partitions
+        return [self._lag_p(workflow, p) for p in range(self.num_partitions)]
+
+    def lag_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
+        if not self._have(workflow):
+            return 0
+        return sum(self._lag_p(workflow, p) for p in partitions)
+
+    def commit_offsets(self, workflow: str) -> List[int]:
+        """Per-partition committed-event counts (isolated commit offsets)."""
+        if not self._have(workflow):
+            return [0] * self.num_partitions
+        return [self._commit_offset_p(workflow, p)
+                for p in range(self.num_partitions)]
+
+    def dlq_size_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
+        if not self._have(workflow):
+            return 0
+        return sum(self._dlq_size_p(workflow, p) for p in partitions)
+
+    def redrive_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
+        if not self._have(workflow):
+            return 0
+        return sum(self._redrive_p(workflow, p) for p in partitions)
+
+
+class PartitionedEventStore(PartitionedStoreBase):
+    """In-memory partitioned store: one ``StreamShard`` per partition,
+    striped per-partition locking (``striped=False`` restores the old
+    single-global-lock mode as the contention baseline)."""
+
     def __init__(
         self,
         num_partitions: int = 8,
         partitioner: Optional[Partitioner] = None,
         striped: bool = True,
     ) -> None:
-        if num_partitions < 1:
-            raise ValueError("num_partitions must be >= 1")
-        self.num_partitions = num_partitions
-        self.partitioner: Partitioner = partitioner or subject_partitioner
+        super().__init__(num_partitions, partitioner)
         self.striped = striped
         # Guards only the workflow → shard-list map; every shard operation
         # synchronizes on the shard's own lock.
         self._lock = threading.Lock()
         self._parts: Dict[str, List[StreamShard]] = {}
-
-    # -- routing ---------------------------------------------------------------
-    def partition_for(self, subject: str) -> int:
-        return self.partitioner(subject, self.num_partitions)
 
     def _shards(self, workflow: str) -> List[StreamShard]:
         parts = self._parts.get(workflow)
@@ -90,166 +277,467 @@ class PartitionedEventStore(EventStore):
                     self._parts[workflow] = parts
         return parts
 
-    # -- EventStore contract (whole-stream view) -------------------------------
     def create_stream(self, workflow: str) -> None:
         self._shards(workflow)
-
-    def publish(self, workflow: str, event: CloudEvent) -> None:
-        shard = self._shards(workflow)[self.partition_for(event.subject)]
-        with shard.lock:
-            shard.publish((event,))
-
-    def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
-        parts = self._shards(workflow)
-        by_part: Dict[int, List[CloudEvent]] = {}
-        for e in events:
-            by_part.setdefault(self.partition_for(e.subject), []).append(e)
-        # one append per touched partition, under that partition's lock only
-        for p, evs in by_part.items():
-            shard = parts[p]
-            with shard.lock:
-                shard.publish(evs)
-
-    def _map_shards(self, workflow: str, fn) -> List:
-        """Apply ``fn`` to every shard, each under its own lock (momentary
-        per-partition snapshots — no cross-partition atomicity implied)."""
-        parts = self._parts.get(workflow)
-        if not parts:
-            return []
-        out = []
-        for s in parts:
-            with s.lock:
-                out.append(fn(s))
-        return out
-
-    def _sum_partitions(self, workflow: str, partitions: Iterable[int],
-                        fn) -> int:
-        """Sum ``fn(shard)`` over the given partitions, striped-locked."""
-        parts = self._parts.get(workflow)
-        if not parts:
-            return 0
-        total = 0
-        for p in partitions:
-            shard = parts[p]
-            with shard.lock:
-                total += fn(shard)
-        return total
-
-    def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
-        return self.consume_partitions(
-            workflow, range(self.num_partitions), max_events
-        )
-
-    def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
-        self.commit_partitions(workflow, range(self.num_partitions), event_ids)
-
-    def is_committed(self, workflow: str, event_id: str) -> bool:
-        parts = self._parts.get(workflow)
-        if not parts:
-            return False
-        for s in parts:
-            with s.lock:
-                if s.is_committed(event_id):
-                    return True
-        return False
-
-    def lag(self, workflow: str) -> int:
-        return sum(self._map_shards(workflow, StreamShard.lag))
-
-    def to_dlq(self, workflow: str, event: CloudEvent) -> None:
-        shard = self._shards(workflow)[self.partition_for(event.subject)]
-        with shard.lock:
-            shard.to_dlq(event)
-
-    def redrive(self, workflow: str) -> int:
-        return self.redrive_partitions(workflow, range(self.num_partitions))
-
-    def dlq_size(self, workflow: str) -> int:
-        return self.dlq_size_partitions(workflow, range(self.num_partitions))
 
     def workflows(self) -> List[str]:
         with self._lock:
             return list(self._parts.keys())
 
-    def committed_events(self, workflow: str) -> List[CloudEvent]:
-        """Committed events, per-partition commit order, concatenated by
-        partition index (cross-partition order is unspecified)."""
-        out: List[CloudEvent] = []
-        for chunk in self._map_shards(workflow, StreamShard.committed_events):
-            out.extend(chunk)
-        return out
+    # -- per-partition primitives ----------------------------------------------
+    def _have(self, workflow: str) -> bool:
+        return workflow in self._parts
 
-    # -- partition-scoped consumer API (the consumer-group fast path) ----------
-    def consume_partition(
-        self, workflow: str, partition: int, max_events: int = 512
-    ) -> List[CloudEvent]:
-        parts = self._parts.get(workflow)
-        if not parts:
-            return []
-        shard = parts[partition]
+    def _publish_p(self, workflow: str, p: int, events: List[CloudEvent]) -> None:
+        shard = self._shards(workflow)[p]
+        with shard.lock:
+            shard.publish(events)
+
+    def _consume_p(self, workflow: str, p: int, max_events: int) -> List[CloudEvent]:
+        shard = self._parts[workflow][p]
         with shard.lock:
             return shard.consume(max_events)
+
+    def _commit_p(self, workflow: str, p: int, ids: set) -> int:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            mine = ids & shard.pending_ids
+            return shard.commit(mine) if mine else 0
+
+    def _lag_p(self, workflow: str, p: int) -> int:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            return shard.lag()
+
+    def _dlq_size_p(self, workflow: str, p: int) -> int:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            return shard.dlq_size()
+
+    def _redrive_p(self, workflow: str, p: int) -> int:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            return shard.redrive()
+
+    def _to_dlq_p(self, workflow: str, p: int, event: CloudEvent) -> None:
+        shard = self._shards(workflow)[p]
+        with shard.lock:
+            shard.to_dlq(event)
+
+    def _is_committed_p(self, workflow: str, p: int, event_id: str) -> bool:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            return shard.is_committed(event_id)
+
+    def _commit_offset_p(self, workflow: str, p: int) -> int:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            return shard.commit_offset()
+
+    def _committed_events_p(self, workflow: str, p: int) -> List[CloudEvent]:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            return shard.committed_events()
+
+
+#: DLQ-ledger record marking "everything quarantined so far went back into
+#: the stream" (``redrive``).  Ordinary ledger records are CloudEvent dicts.
+_REDRIVE_MARKER = {"__redrive__": 1}
+
+
+def _encode_event_batch(events: List[CloudEvent]) -> str:
+    """One log record per *publish batch* (a JSON array of event dicts):
+    amortizes the per-record JSON overhead across the batch — decode cost is
+    the consumer's per-event floor — and keeps the torn-tail contract at the
+    granularity writes actually happen (a torn batch was never
+    acknowledged, so dropping it whole is exactly right)."""
+    return json.dumps([e.to_dict() for e in events], separators=(",", ":"))
+
+
+def _decode_event_batch(line: str) -> List[CloudEvent]:
+    from_dict = CloudEvent.from_dict
+    return [from_dict(d) for d in json.loads(line)]
+
+
+class _FilePartition:
+    """One partition's durable state + its in-process mirror.
+
+    Files (all append-only ``SegmentLog``s, named ``p<k>.*``):
+
+    * ``.log`` — the event segment log (publish order).
+    * ``.committed`` — committed event ids, append order = commit order.
+    * ``.dlq`` — quarantine ledger: event records interleaved with redrive
+      markers; replaying it in order reconstructs the DLQ exactly.
+    * ``.lock`` — the partition's cross-process lock file (``flock``): every
+      *mutating* operation holds it exclusively, so the striped-locking
+      design carries over across processes — writers to different partitions
+      never contend.
+
+    The ``StreamShard`` mirror gives consumers the same O(batch) commit/DLQ
+    semantics as the in-memory bus; ``sync`` incrementally replays whatever
+    the files gained since the last look (only whole, parseable lines — a
+    torn tail from a crashed writer is invisible until the next locked
+    writer truncates it).  Readers sync lock-free; the mirror is private.
+    """
+
+    __slots__ = ("shard", "log", "com", "dlq", "lockf", "log_off", "com_off",
+                 "dlq_off", "dlq_ids", "deferred", "last_full")
+
+    #: How stale the committed/DLQ view of a *follower* mirror may get
+    #: between full syncs.  Owners don't rely on it: every mutating op
+    #: (commit / quarantine / redrive) full-syncs under the partition flock,
+    #: and a partition's first sync after (re)assignment is always full.
+    FULL_SYNC_INTERVAL = 0.05
+
+    def __init__(self, base: str, fsync: bool) -> None:
+        self.shard = StreamShard()
+        self.log = SegmentLog(base + ".log", fsync=fsync)
+        self.com = SegmentLog(base + ".committed", fsync=fsync)
+        self.dlq = SegmentLog(base + ".dlq", fsync=fsync)
+        self.lockf = open(base + ".lock", "a")
+        self.log_off = 0
+        self.com_off = 0
+        self.dlq_off = 0
+        self.dlq_ids: set = set()
+        # committed ids seen before their event's log line (the owner can
+        # append log + committed between two of our scans): applied as soon
+        # as the event appears.
+        self.deferred: set = set()
+        self.last_full = 0.0  # 0 ⇒ the very first sync is always full
+
+    def sync(self, scan_log: bool = True, full: bool = False) -> None:
+        """Replay new file records into the mirror (log → DLQ → committed:
+        an id's lifecycle is publish → quarantine/redrive* → commit, so this
+        order never applies an op before its subject exists; ops racing past
+        the scan window land in ``deferred`` until their event shows up).
+
+        Every file probe is a (sandbox-expensive) stat, so callers steer the
+        scope: ``scan_log=False`` skips the event-log probe (the store's
+        publish-notify counter already proved nothing was published), and the
+        committed/DLQ ledgers are only re-probed every
+        ``FULL_SYNC_INTERVAL`` seconds unless ``full`` forces it."""
+        now = time.monotonic()
+        if full or now - self.last_full >= self.FULL_SYNC_INTERVAL:
+            full = True
+            scan_log = True
+            self.last_full = now
+        shard = self.shard
+        if scan_log:
+            batches, self.log_off = self.log.scan(
+                _decode_event_batch, self.log_off)
+            if batches:
+                pend, com, dlq = (shard.pending_ids, shard.committed_ids,
+                                  self.dlq_ids)
+                fresh = [e for batch in batches for e in batch
+                         if e.id not in pend and e.id not in com
+                         and e.id not in dlq]
+                if fresh:
+                    shard.publish(fresh)
+        if not full:
+            return
+        ops, self.dlq_off = self.dlq.scan(json.loads, self.dlq_off)
+        for op in ops:
+            if "__redrive__" in op:
+                self.dlq_ids.clear()
+                shard.redrive()
+            else:
+                ev = CloudEvent.from_dict(op)
+                if ev.id in shard.committed_ids or ev.id in self.dlq_ids:
+                    continue
+                self.dlq_ids.add(ev.id)
+                shard.to_dlq(ev)
+        ids, self.com_off = self.com.scan(str, self.com_off)
+        if ids or self.deferred:
+            want = self.deferred
+            want.update(ids)
+            mine = want & shard.pending_ids
+            if mine:
+                shard.commit(mine)
+            self.deferred = want - shard.committed_ids
+
+
+class FilePartitionedEventStore(PartitionedStoreBase):
+    """Durable, cross-process partitioned store (the process-shard bus).
+
+    Layout: ``<root>/<workflow>/p<k>.{log,committed,dlq,lock}`` (see
+    ``_FilePartition``) plus ``<root>/bus.json`` pinning ``num_partitions``
+    (subject routing must agree across every process that opens the root).
+
+    Concurrency model: any process may *publish* to any partition (parent
+    load injection, cross-partition ``ctx.produce``); consume/commit/DLQ of
+    a partition come only from its consumer-group owner.  Every mutating
+    operation syncs + appends under the partition's exclusive ``flock``;
+    reads sync the private mirror lock-free and tolerate in-flight appends
+    (whole-line scans).  A SIGKILLed writer's torn tail is truncated by the
+    next locked writer before it appends (``flock`` dies with the process,
+    and torn bytes are always the final bytes — every writer repairs before
+    appending).
+
+    ``fsync=False`` trades power-loss durability for throughput (the Kafka
+    default-flush analogy: the OS page cache survives process SIGKILL, which
+    is the failure mode the crash tests and the paper's Fig 13 exercise).
+    """
+
+    def __init__(
+        self,
+        root: str,
+        num_partitions: int = 8,
+        partitioner: Optional[Partitioner] = None,
+        fsync: bool = True,
+    ) -> None:
+        super().__init__(num_partitions, partitioner)
+        self.root = root
+        self.fsync = fsync
+        os.makedirs(root, exist_ok=True)
+        meta_p = os.path.join(root, "bus.json")
+        if os.path.exists(meta_p):
+            with open(meta_p) as f:
+                meta = json.load(f)
+            if meta.get("num_partitions") != num_partitions:
+                raise ValueError(
+                    "bus at %s has %s partitions, store opened with %s"
+                    % (root, meta.get("num_partitions"), num_partitions))
+        else:
+            tmp = meta_p + ".%d.tmp" % os.getpid()
+            with open(tmp, "w") as f:
+                json.dump({"num_partitions": num_partitions}, f)
+            os.replace(tmp, meta_p)
+        self._lock = threading.Lock()  # guards the workflow → partitions map
+        self._fps: Dict[str, List[_FilePartition]] = {}
+        # publish-notify counter per workflow: one byte appended per publish
+        # or redrive, so a consumer poll detects "nothing new anywhere" with
+        # ONE stat instead of one per partition (syscalls are the hot cost).
+        # Only *size change* carries meaning, so each writer periodically
+        # resets the file to keep it O(1) on disk (readers compare != , not
+        # >, so a shrink is just another change).
+        self._notify_fd: Dict[str, Any] = {}
+        self._notify_seen: Dict[str, int] = {}
+        self._notify_bumps: Dict[str, int] = {}
+
+    # -- plumbing ---------------------------------------------------------------
+    def _wf_dir(self, workflow: str) -> str:
+        return os.path.join(self.root, workflow.replace("/", "_"))
+
+    def _notify_path(self, workflow: str) -> str:
+        return os.path.join(self._wf_dir(workflow), "pub.notify")
+
+    def _bump_notify(self, workflow: str) -> None:
+        fd = self._notify_fd.get(workflow)
+        if fd is None:
+            fd = open(self._notify_path(workflow), "ab", buffering=0)
+            self._notify_fd[workflow] = fd
+        fd.write(b".")
+        n = self._notify_bumps.get(workflow, 0) + 1
+        self._notify_bumps[workflow] = n
+        if n % 8192 == 0:
+            # bound the counter file: a shrink is a size change too, so
+            # racing readers/writers see it as an ordinary notification
+            try:
+                if os.path.getsize(self._notify_path(workflow)) > 65536:
+                    os.truncate(self._notify_path(workflow), 0)
+            except OSError:  # pragma: no cover
+                pass
+
+    def _notify_changed(self, workflow: str) -> bool:
+        """One stat: did anyone publish/redrive since we last looked?"""
+        try:
+            size = os.path.getsize(self._notify_path(workflow))
+        except OSError:
+            size = 0
+        if size != self._notify_seen.get(workflow):
+            self._notify_seen[workflow] = size
+            return True
+        return False
+
+    def _parts(self, workflow: str) -> List[_FilePartition]:
+        fps = self._fps.get(workflow)
+        if fps is None:
+            with self._lock:
+                fps = self._fps.get(workflow)
+                if fps is None:
+                    d = self._wf_dir(workflow)
+                    os.makedirs(d, exist_ok=True)
+                    fps = [
+                        _FilePartition(os.path.join(d, "p%04d" % p), self.fsync)
+                        for p in range(self.num_partitions)
+                    ]
+                    self._fps[workflow] = fps
+        return fps
+
+    @contextmanager
+    def _plock(self, fp: _FilePartition):
+        """The partition's cross-process writer lock.  ``fp.shard.lock`` (the
+        in-process striped lock) is always held around it, so one process
+        never self-deadlocks on the flock."""
+        if fcntl is None:  # pragma: no cover - non-POSIX
+            yield
+            return
+        fcntl.flock(fp.lockf.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(fp.lockf.fileno(), fcntl.LOCK_UN)
+
+    def _append_clean(self, seg: SegmentLog, off: int, lines) -> int:
+        """Append under the flock: truncate a (dead writer's) torn tail past
+        the synced offset first, so our records land on a line boundary."""
+        seg.truncate(off)
+        return off + seg.append(lines)
+
+    def create_stream(self, workflow: str) -> None:
+        self._parts(workflow)
+
+    def workflows(self) -> List[str]:
+        with self._lock:
+            known = set(self._fps.keys())
+        if os.path.isdir(self.root):
+            known.update(
+                d for d in os.listdir(self.root)
+                if os.path.isdir(os.path.join(self.root, d)))
+        return sorted(known)
+
+    # -- per-partition primitives ----------------------------------------------
+    def _have(self, workflow: str) -> bool:
+        return workflow in self._fps or os.path.isdir(self._wf_dir(workflow))
+
+    def _publish_p(self, workflow: str, p: int, events: List[CloudEvent]) -> None:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock, self._plock(fp):
+            # scan_log before appending is mandatory: log_off must sit at the
+            # true parseable EOF or _append_clean would chop foreign records
+            fp.sync()
+            fp.log_off = self._append_clean(
+                fp.log, fp.log_off, [_encode_event_batch(events)])
+            committed = fp.shard.committed_ids
+            live = [e for e in events if e.id not in committed]
+            if live:
+                fp.shard.publish(live)
+        self._bump_notify(workflow)
+
+    def _consume_p(self, workflow: str, p: int, max_events: int) -> List[CloudEvent]:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            fp.sync()
+            return fp.shard.consume(max_events)
 
     def consume_partitions(
         self, workflow: str, partitions: Iterable[int], max_events: int = 512
     ) -> List[CloudEvent]:
-        """Up to ``max_events`` uncommitted events from the given partitions,
-        preserving arrival order *within* each partition."""
-        parts = self._parts.get(workflow)
-        if not parts:
+        """The consumer hot path, syscall-gated: ONE stat on the workflow's
+        publish-notify counter decides whether any partition log needs
+        re-probing; otherwise events come straight from the mirrors (the
+        periodic full sync inside ``_FilePartition.sync`` still bounds
+        committed/DLQ staleness and backstops a publisher that died between
+        its append and its notify bump)."""
+        if not self._have(workflow):
             return []
+        probe_logs = self._notify_changed(workflow)
+        parts = self._parts(workflow)
         out: List[CloudEvent] = []
         budget = max_events
         for p in partitions:
             if budget <= 0:
                 break
-            shard = parts[p]
-            with shard.lock:
-                got = shard.consume(budget)
+            fp = parts[p]
+            with fp.shard.lock:
+                fp.sync(scan_log=probe_logs or fp.last_full == 0.0)
+                got = fp.shard.consume(budget)
             out.extend(got)
             budget -= len(got)
         return out
 
-    def commit_partitions(
-        self, workflow: str, partitions: Iterable[int], event_ids: Iterable[str]
-    ) -> int:
-        ids = set(event_ids)
-        if not ids:
-            return 0
-        parts = self._parts.get(workflow)
-        if not parts:
-            return 0
-        # Per partition: intersect once (C-level), then the shard's bulk
-        # commit handles its share — an O(batch) slice/set compare in the
-        # common in-order case, degrading to prefix walk + scan only for
-        # ids skipped mid-stream.
-        n = 0
-        want = len(ids)
-        for p in partitions:
-            shard = parts[p]
-            with shard.lock:
-                mine = ids & shard.pending_ids
-                if mine:
-                    n += shard.commit(mine)
-            if n == want:
-                break
-        return n
+    def _commit_p(self, workflow: str, p: int, ids: set) -> int:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            # cheap miss, zero syscalls: committed ids were consumed from
+            # this very mirror, so "none of them pending here" is exact
+            if not ids & fp.shard.pending_ids:
+                return 0
+            with self._plock(fp):
+                fp.sync(full=True)
+                mine = ids & fp.shard.pending_ids
+                if not mine:
+                    return 0
+                fp.com_off = self._append_clean(fp.com, fp.com_off, sorted(mine))
+                return fp.shard.commit(mine)
 
-    def partition_lags(self, workflow: str) -> List[int]:
-        """Per-partition lag vector — the autoscaler's scaling signal."""
-        return self._map_shards(workflow, StreamShard.lag) \
-            or [0] * self.num_partitions
+    def _lag_p(self, workflow: str, p: int) -> int:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            fp.sync()
+            return fp.shard.lag()
 
     def lag_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
-        return self._sum_partitions(workflow, partitions, StreamShard.lag)
+        """Like the consume path, syscall-gated: one notify stat decides
+        whether any partition log needs probing; commits (which don't bump
+        the notify counter) surface through the periodic full sync, so a
+        drain-watcher polling lag converges within FULL_SYNC_INTERVAL."""
+        if not self._have(workflow):
+            return 0
+        probe = self._notify_changed(workflow)
+        parts = self._parts(workflow)
+        total = 0
+        for p in partitions:
+            fp = parts[p]
+            with fp.shard.lock:
+                fp.sync(scan_log=probe or fp.last_full == 0.0)
+                total += fp.shard.lag()
+        return total
 
-    def commit_offsets(self, workflow: str) -> List[int]:
-        """Per-partition committed-event counts (isolated commit offsets)."""
-        return self._map_shards(workflow, StreamShard.commit_offset) \
-            or [0] * self.num_partitions
+    def partition_lags(self, workflow: str) -> List[int]:
+        if not self._have(workflow):
+            return [0] * self.num_partitions
+        probe = self._notify_changed(workflow)
+        parts = self._parts(workflow)
+        out: List[int] = []
+        for fp in parts:
+            with fp.shard.lock:
+                fp.sync(scan_log=probe or fp.last_full == 0.0)
+                out.append(fp.shard.lag())
+        return out
 
-    def dlq_size_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
-        return self._sum_partitions(workflow, partitions, StreamShard.dlq_size)
+    def _dlq_size_p(self, workflow: str, p: int) -> int:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            fp.sync(scan_log=False)
+            return fp.shard.dlq_size()
 
-    def redrive_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
-        return self._sum_partitions(workflow, partitions, StreamShard.redrive)
+    def _redrive_p(self, workflow: str, p: int) -> int:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock, self._plock(fp):
+            fp.sync(full=True)
+            if not fp.shard.dlq_size():
+                return 0
+            fp.dlq_off = self._append_clean(
+                fp.dlq, fp.dlq_off, [json.dumps(_REDRIVE_MARKER)])
+            fp.dlq_ids.clear()
+            n = fp.shard.redrive()
+        self._bump_notify(workflow)
+        return n
+
+    def _to_dlq_p(self, workflow: str, p: int, event: CloudEvent) -> None:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock, self._plock(fp):
+            fp.sync(full=True)
+            fp.dlq_off = self._append_clean(
+                fp.dlq, fp.dlq_off, [event.to_json()])
+            fp.dlq_ids.add(event.id)
+            fp.shard.to_dlq(event)
+
+    def _is_committed_p(self, workflow: str, p: int, event_id: str) -> bool:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            fp.sync(full=True)
+            return fp.shard.is_committed(event_id)
+
+    def _commit_offset_p(self, workflow: str, p: int) -> int:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            fp.sync(full=True)
+            return fp.shard.commit_offset()
+
+    def _committed_events_p(self, workflow: str, p: int) -> List[CloudEvent]:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            fp.sync(full=True)
+            return fp.shard.committed_events()

@@ -80,14 +80,18 @@ class _Runner(threading.Thread):
 
     A shard leaves its runner when it is stopped, finishes its workflow,
     idles past ``idle_timeout`` (KEDA-style scale-down), or its batch raises;
-    the runner exits once it owns no shards.  ``ShardedWorkerPool.reap``
-    turns departures into consumer-group leaves."""
+    the departure *reason* is recorded on the worker (``exit_reason``) and
+    ``on_exit`` fires so the pool can react immediately — in particular a
+    batch that raised must surrender its partitions right away, not wait for
+    someone to call ``reap()``.  The runner exits once it owns no shards."""
 
-    def __init__(self, name: str, idle_timeout: Optional[float], poll: float) -> None:
+    def __init__(self, name: str, idle_timeout: Optional[float], poll: float,
+                 on_exit=None) -> None:
         super().__init__(name=name, daemon=True)
         self.workers: Dict[str, ShardWorker] = {}
         self.idle_timeout = idle_timeout
         self.poll = poll
+        self.on_exit = on_exit
         self.closing = False
         self._close_lock = threading.Lock()
 
@@ -99,25 +103,36 @@ class _Runner(threading.Thread):
             if self.closing:
                 return False
             worker.last_active = time.monotonic()
+            worker.exit_reason = None
             self.workers[member] = worker
             return True
+
+    def _drop(self, member: str, w: ShardWorker, reason: str) -> None:
+        w.exit_reason = reason
+        self.workers.pop(member, None)
+        if self.on_exit is not None:
+            try:
+                self.on_exit(member, w)
+            except Exception:  # noqa: BLE001 - pool reaction must not kill the runner
+                traceback.print_exc()
 
     def run(self) -> None:
         while True:
             n = 0
             for member, w in list(self.workers.items()):
                 if w._stop.is_set() or w.finished:
-                    self.workers.pop(member, None)
+                    self._drop(member, w,
+                               "finished" if w.finished else "stopped")
                     continue
                 try:
                     n += w.run_once()
                 except Exception:  # noqa: BLE001 - a broken shard must not kill siblings
                     traceback.print_exc()
-                    self.workers.pop(member, None)
+                    self._drop(member, w, "error")
                     continue
                 if self.idle_timeout is not None and \
                         time.monotonic() - w.last_active > self.idle_timeout:
-                    self.workers.pop(member, None)
+                    self._drop(member, w, "idle")
             if not self.workers:
                 with self._close_lock:
                     if not self.workers:  # nothing raced in: commit to exit
@@ -128,13 +143,16 @@ class _Runner(threading.Thread):
 
 
 class _WorkflowShards:
-    __slots__ = ("group", "shards", "runner_of", "next_id")
+    __slots__ = ("group", "shards", "runner_of", "next_id",
+                 "failures", "failed_unreaped")
 
     def __init__(self, num_partitions: int) -> None:
         self.group = ConsumerGroup(num_partitions)
         self.shards: Dict[str, ShardWorker] = {}
         self.runner_of: Dict[str, _Runner] = {}
         self.next_id = 0
+        self.failures = 0        # shards whose batch raised (lifetime total)
+        self.failed_unreaped = 0  # …not yet folded into a reap() report
 
 
 class ShardedWorkerPool:
@@ -245,13 +263,50 @@ class ShardedWorkerPool:
 
     def crash_shard(self, workflow: str, member: str) -> None:
         """Simulate a shard crash: drop it with NO further checkpoint/commit.
-        Its uncommitted events stay pending and are redelivered to the shards
-        the group reassigns those partitions to.  (In-process we cannot kill a
-        thread mid-batch, so the crash takes effect at a batch boundary.)"""
+
+        Unlike ``remove_shard`` (which fences and lets an in-flight batch
+        finish, commit and checkpoint — a *graceful* leave), the victim is
+        ``kill()``-ed first: an in-flight batch completes its in-memory work
+        but **discards** its checkpoint/commit, so everything it consumed
+        stays pending in the store and is redelivered to the shards the group
+        reassigns those partitions to — redelivery happens *at the crash
+        point*, not at the next batch boundary.  (In-process a thread cannot
+        be preempted mid-batch; the real mid-batch SIGKILL lives in
+        ``repro.bus.proc.ProcessShardPool``.)"""
         with self._lock:
             wp = self._wfs.get(workflow)
-            if wp is not None and member in wp.shards:
-                self._retire(wp, member)
+            if wp is None or member not in wp.shards:
+                return
+            worker = wp.shards.pop(member)
+            worker.kill()  # in-flight batch now discards its commit
+            runner = wp.runner_of.pop(member, None)
+            if runner is not None:
+                runner.workers.pop(member, None)
+            with worker.lock:  # fence: wait out the (discarding) batch
+                pass
+            wp.group.leave(member)
+            self._rebalance(wp)
+
+    def _shard_exited(self, workflow: str, member: str, worker) -> None:
+        """Runner callback: a shard left its runner.  Only a *failed* batch
+        needs immediate action — the dead shard still owns its partitions and
+        with no autoscaler loop calling ``reap()`` they would stall silently
+        forever.  Surface the failure (stat + log) and rebalance now."""
+        if worker.exit_reason != "error":
+            return  # stopped / finished / idle: reap() accounts for these
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None or wp.shards.get(member) is not worker:
+                return  # already retired (reap/remove raced us)
+            wp.shards.pop(member, None)
+            wp.runner_of.pop(member, None)
+            wp.failures += 1
+            wp.failed_unreaped += 1
+            wp.group.leave(member)
+            self._rebalance(wp)
+        print("[pool] shard %s of workflow %r failed its batch; "
+              "partitions rebalanced to %d remaining shard(s)"
+              % (member, workflow, self.shard_count(workflow)))
 
     def _rebalance(self, wp: _WorkflowShards) -> None:
         assignment = wp.group.assignment()
@@ -299,17 +354,19 @@ class ShardedWorkerPool:
                 worker._stop.clear()
                 unassigned.append(member)
             if unassigned:
+                on_exit = (lambda m, w, _wf=workflow:
+                           self._shard_exited(_wf, m, w))
                 slots = [r for r in set(wp.runner_of.values())
                          if r.is_alive() and not r.closing]
                 fresh = [
                     _Runner(f"tf-{workflow}-runner-{wp.next_id}-{i}",
-                            idle_timeout, poll)
+                            idle_timeout, poll, on_exit)
                     for i in range(min(cap - len(slots), len(unassigned)))
                 ]
                 slots += fresh
                 if not slots:
                     fresh = [_Runner(f"tf-{workflow}-runner-{wp.next_id}-x",
-                                     idle_timeout, poll)]
+                                     idle_timeout, poll, on_exit)]
                     slots = list(fresh)
                 for i, member in enumerate(unassigned):
                     runner = slots[i % len(slots)]
@@ -318,7 +375,7 @@ class ShardedWorkerPool:
                         # and the add — replace the slot with a fresh runner
                         runner = _Runner(
                             f"tf-{workflow}-runner-{wp.next_id}-r{i}",
-                            idle_timeout, poll)
+                            idle_timeout, poll, on_exit)
                         fresh.append(runner)
                         slots[i % len(slots)] = runner
                         runner.add(member, wp.shards[member])
@@ -330,12 +387,23 @@ class ShardedWorkerPool:
     def reap(self, workflow: str) -> Dict[str, int]:
         """Remove shards that left their runner (idle scale-down, workflow
         end, crash, or runner death).  Returns {"reaped": n, "crashed": m}
-        for the autoscaler's accounting."""
+        for the autoscaler's accounting.
+
+        "Crashed" is decided by the *recorded departure reason*, not by
+        circumstantial evidence: an idle-timeout departure is a clean
+        scale-down even if new events arrived after the shard went idle
+        (``_stop`` unset + lag > 0 is not a crash), while a failed batch or a
+        runner thread that died without recording any reason is."""
         reaped = crashed = 0
         with self._lock:
             wp = self._wfs.get(workflow)
             if wp is None:
                 return {"reaped": 0, "crashed": 0}
+            # failed-batch exits were retired immediately by _shard_exited;
+            # fold them into this report exactly once
+            reaped += wp.failed_unreaped
+            crashed += wp.failed_unreaped
+            wp.failed_unreaped = 0
             for member, runner in list(wp.runner_of.items()):
                 if runner.is_alive() and member in runner.workers:
                     continue
@@ -343,11 +411,13 @@ class ShardedWorkerPool:
                 worker = wp.shards.pop(member, None)
                 wp.group.leave(member)
                 reaped += 1
-                if worker is not None and not worker._stop.is_set() \
-                        and not worker.finished \
-                        and self.event_store.lag_partitions(
-                            workflow, worker.partitions) > 0:
-                    crashed += 1
+                if worker is not None and not worker.finished:
+                    reason = worker.exit_reason
+                    if reason == "error" or (
+                            reason is None and not worker._stop.is_set()):
+                        # a failed batch reaped before its callback ran, or a
+                        # runner thread that died mid-flight
+                        crashed += 1
             if reaped:
                 self._rebalance(wp)
         return {"reaped": reaped, "crashed": crashed}
@@ -464,6 +534,7 @@ class ShardedWorkerPool:
             return {
                 "shards": len(shards),
                 "live_shards": self.live_shard_count(workflow),
+                "shard_failures": wp.failures if wp else 0,
                 "generation": wp.group.generation if wp else 0,
                 "assignment": {m: list(w.partitions or ()) for m, w in shards.items()},
                 "partition_lags": self.event_store.partition_lags(workflow),

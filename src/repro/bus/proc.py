@@ -1,0 +1,557 @@
+"""Multiprocess shard runtime: TF-Worker shards as OS processes (§3.4, Fig 13).
+
+``ProcessShardPool`` is the cross-interpreter sibling of
+``ShardedWorkerPool``: each ``ShardWorker`` runs in its **own process** over
+the durable ``FilePartitionedEventStore``, so pure-Python workloads scale
+with cores instead of saturating one GIL (the threaded pool's ceiling — see
+``benchmarks/sharded_load.py --mode=process``).  Crossing the interpreter
+boundary replaces every in-memory shortcut of the threaded pool with its
+real distributed-systems counterpart:
+
+* **data plane** — events, commits and DLQ state flow through per-partition
+  segment logs (file-locked per partition: the striped-lock design carried
+  across processes) instead of shared ``StreamShard`` objects;
+* **checkpoints** — each shard process appends context deltas to its own
+  scope of the ``FileStateStore`` delta log; the pool folds all scopes into
+  the compacted base at every ownership boundary;
+* **control plane** — trigger management (add / enable / disable) is
+  *broadcast over a command pipe* as serialized specs, mirroring the paper's
+  trigger-API → worker path;
+* **membership** — the same ``ConsumerGroup`` (consistent hashing with
+  bounded loads), driven by the parent, with a two-phase rebalance: revoke
+  moved partitions from their old owners (ack'd), fold checkpoint scopes,
+  then grant — so a partition never has two live writers;
+* **crashes** — ``crash_shard`` is a real ``SIGKILL``.  Recovery is §3.4
+  verbatim: the replacement owner reloads trigger defs + last acknowledged
+  checkpoints from disk and the bus redelivers everything uncommitted,
+  including a batch torn mid-append (never acknowledged ⇒ truncated).
+
+Start method: ``fork`` where available (fast; inherits registered
+conditions/actions/pyfuncs), else ``spawn`` (``child_init`` and any custom
+registrations must then be importable/picklable).  Event-id uniqueness
+across forked processes is guaranteed by the per-process id prefix in
+``repro.core.events``.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core.events import CloudEvent  # noqa: F401  (re-exported for callers)
+from ..core.functions import FunctionBackend
+from ..core.statestore import FileStateStore
+from ..core.triggers import Trigger
+from .group import ConsumerGroup
+from .partitioned import FilePartitionedEventStore
+from .pool import ShardWorker
+
+
+def _stats_dict(worker) -> Dict[str, int]:
+    s = worker.stats
+    return {"events_processed": s.events_processed, "fires": s.fires,
+            "activations": s.activations, "batches": s.batches,
+            "dlq_events": s.dlq_events,
+            "cpu_seconds": time.process_time()}
+
+
+def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
+                num_partitions: int, conn, cfg: Dict[str, Any]) -> None:
+    """Shard process entry point: build the stores/worker from disk, then
+    loop — drain commands, run one batch, idle-wait on the pipe.  The final
+    text of every reply carries ``member`` so the parent can assert it is
+    talking to whom it thinks."""
+    store = FilePartitionedEventStore(
+        bus_root, num_partitions, fsync=cfg["fsync"])
+    state = FileStateStore(state_root, scope=member)
+    backend = FunctionBackend(store, inline=True)
+    child_init = cfg.get("child_init")
+    if child_init is not None:
+        child_init(backend)
+    worker = ShardWorker(
+        member, workflow, store, state, backend,
+        batch_size=cfg["batch_size"], commit_policy=cfg["commit_policy"],
+        keep_event_log=False, timers=None, partitions=(),
+        batch_plane=cfg["batch_plane"], action_plane=cfg["action_plane"],
+    )
+    conn.send(("ready", member))
+    poll = cfg["poll"]
+    notified_finish = False
+    try:
+        while True:
+            while conn.poll(0):
+                msg = conn.recv()
+                op = msg[0]
+                if op == "assign":
+                    parts, gen = tuple(msg[1]), msg[2]
+                    with worker.lock:
+                        if worker.partitions != parts:
+                            worker.partitions = parts
+                            worker.rebalance_reset()
+                    conn.send(("assigned", member, gen))
+                elif op == "add_trigger":
+                    worker.add_trigger(Trigger.from_dict(msg[1]), persist=False)
+                    conn.send(("ok", member))
+                elif op == "enable":
+                    if msg[1] in worker.triggers:
+                        worker.set_trigger_enabled(msg[1], msg[2])
+                    conn.send(("ok", member))
+                elif op == "stats":
+                    conn.send(("stats", member, _stats_dict(worker)))
+                elif op == "ping":
+                    conn.send(("pong", member))
+                elif op == "stop":
+                    conn.send(("stopped", member, _stats_dict(worker)))
+                    return
+            try:
+                n = worker.run_once() if worker.partitions else 0
+            except Exception as exc:  # noqa: BLE001 - a failed batch is a crash
+                # Nothing from the failed batch was checkpointed or
+                # committed (the exception interrupted _checkpoint at the
+                # latest), so dying here leaves the store in the ordinary
+                # crash state: the parent reaps the non-zero exit and the
+                # partitions' next owner replays the uncommitted events.
+                traceback.print_exc()
+                try:
+                    conn.send(("failed", member, repr(exc)))
+                except Exception:  # noqa: BLE001
+                    pass
+                raise SystemExit(1)
+            if worker.finished and not notified_finish:
+                notified_finish = True
+                conn.send(("finished", member, worker.result))
+            if n == 0:
+                conn.poll(poll)  # idle sleep; a command wakes us early
+    except (EOFError, BrokenPipeError):  # parent is gone: nothing to serve
+        return
+
+
+class _ProcShard:
+    __slots__ = ("member", "proc", "conn", "alive", "partitions",
+                 "final_stats", "finished", "result")
+
+    def __init__(self, member: str, proc, conn) -> None:
+        self.member = member
+        self.proc = proc
+        self.conn = conn
+        self.alive = True
+        self.partitions: tuple = ()
+        self.final_stats: Optional[Dict[str, int]] = None
+        self.finished = False
+        self.result: Any = None
+
+
+class _ProcWorkflow:
+    __slots__ = ("group", "shards", "next_id", "crashes", "triggers",
+                 "finished", "result")
+
+    def __init__(self, num_partitions: int) -> None:
+        self.group = ConsumerGroup(num_partitions)
+        self.shards: Dict[str, _ProcShard] = {}
+        self.next_id = 0
+        self.crashes = 0
+        self.triggers: Dict[str, Dict[str, Any]] = {}  # parent spec cache
+        self.finished = False
+        self.result: Any = None
+
+
+class ProcessShardPool:
+    """Runs N ShardWorker *processes* per workflow over the file-backed bus.
+
+    ``root`` holds the whole deployment: ``<root>/bus`` (partitioned event
+    segments) and ``<root>/state`` (workflow/trigger/context database).  A
+    pool constructed over an existing root *recovers* it — streams, trigger
+    defs and checkpoints are all on disk.
+
+    ``fsync=False`` keeps every durability property against process
+    crashes/SIGKILL (the page cache survives) and trades only power-loss
+    durability for a large cut in append latency — the Kafka default-flush
+    analogy.  Crash tests run with the default ``fsync=True``.
+    """
+
+    def __init__(
+        self,
+        root: str,
+        num_partitions: int = 8,
+        batch_size: int = 512,
+        commit_policy: str = "every_batch",
+        poll: float = 0.002,
+        fsync: bool = True,
+        batch_plane: bool = True,
+        action_plane: bool = True,
+        start_method: Optional[str] = None,
+        child_init: Optional[Callable] = None,
+        command_timeout: float = 30.0,
+    ) -> None:
+        # ``command_timeout`` bounds every command-pipe round-trip.  Shard
+        # processes service the pipe between batches, so it must exceed the
+        # worst-case batch (batch_size × the slowest action) — a busy shard
+        # that misses the deadline is treated as hung and SIGKILLed.  Size
+        # batches (or raise this) accordingly for slow-action workloads.
+        self.root = root
+        self.bus_root = os.path.join(root, "bus")
+        self.state_root = os.path.join(root, "state")
+        self.num_partitions = num_partitions
+        self.event_store = FilePartitionedEventStore(
+            self.bus_root, num_partitions, fsync=fsync)
+        self.state_store = FileStateStore(self.state_root)
+        self._cfg: Dict[str, Any] = {
+            "batch_size": batch_size, "commit_policy": commit_policy,
+            "poll": poll, "fsync": fsync, "batch_plane": batch_plane,
+            "action_plane": action_plane, "child_init": child_init,
+        }
+        self.command_timeout = command_timeout
+        if start_method is None:
+            start_method = ("fork" if "fork" in mp.get_all_start_methods()
+                            else "spawn")
+        self.start_method = start_method
+        self._mp = mp.get_context(start_method)
+        self._lock = threading.RLock()
+        self._wfs: Dict[str, _ProcWorkflow] = {}
+
+    # -- workflow / trigger management (the Fig. 1 control plane) --------------
+    def _wf(self, workflow: str) -> _ProcWorkflow:
+        wf = self._wfs.get(workflow)
+        if wf is None:
+            wf = self._wfs.setdefault(workflow, _ProcWorkflow(self.num_partitions))
+        return wf
+
+    def create_workflow(self, workflow: str,
+                        meta: Optional[Dict[str, Any]] = None) -> None:
+        self.event_store.create_stream(workflow)
+        m = {"status": "created"}
+        m.update(meta or {})
+        self.state_store.put_workflow(workflow, m)
+        with self._lock:
+            self._wf(workflow)
+
+    def add_trigger(self, workflow: str, trigger: Trigger) -> str:
+        """Persist the spec (restart/bootstrap source of truth), then
+        broadcast it to every live shard process over the command pipe."""
+        spec = trigger.to_dict()
+        with self._lock:
+            wf = self._wf(workflow)
+            self.state_store.put_trigger(workflow, trigger.trigger_id, spec)
+            wf.triggers[trigger.trigger_id] = spec
+            for shard in self._live(wf):
+                if self._request(wf, shard, ("add_trigger", spec), "ok") is None:
+                    self._observe_death(workflow, wf, shard)
+        return trigger.trigger_id
+
+    def set_trigger_enabled(self, workflow: str, trigger_id: str,
+                            enabled: bool) -> None:
+        """Broadcast the flip; re-enabling also redrives the DLQ of the
+        trigger's subject partitions (§3.4) through the shared bus files —
+        the owning shards pick the requeued events up on their next sync."""
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is None:
+                return
+            for shard in self._live(wf):
+                if self._request(wf, shard,
+                                 ("enable", trigger_id, enabled), "ok") is None:
+                    self._observe_death(workflow, wf, shard)
+            if enabled:
+                spec = wf.triggers.get(trigger_id) or \
+                    self.state_store.get_triggers(workflow).get(trigger_id, {})
+                subjects = spec.get("activation_events", ())
+                if subjects:
+                    parts = {self.event_store.partition_for(s) for s in subjects}
+                    self.event_store.redrive_partitions(workflow, parts)
+
+    def publish(self, workflow: str, event: CloudEvent) -> None:
+        self.event_store.publish(workflow, event)
+
+    def publish_batch(self, workflow: str, events) -> None:
+        self.event_store.publish_batch(workflow, events)
+
+    # -- shard lifecycle --------------------------------------------------------
+    def _live(self, wf: _ProcWorkflow) -> List[_ProcShard]:
+        return [s for s in wf.shards.values() if s.alive]
+
+    def shard_ids(self, workflow: str) -> List[str]:
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            return [s.member for s in self._live(wf)] if wf else []
+
+    def shard_count(self, workflow: str) -> int:
+        return len(self.shard_ids(workflow))
+
+    def start_shards(self, workflow: str, count: int,
+                     ready_timeout: float = 30.0) -> List[str]:
+        """Ensure ``count`` live shard processes serve ``workflow``."""
+        with self._lock:
+            wf = self._wf(workflow)
+            fresh: List[_ProcShard] = []
+            while len(self._live(wf)) + len(fresh) < count:
+                member = "proc-%d" % wf.next_id
+                wf.next_id += 1
+                parent_conn, child_conn = self._mp.Pipe()
+                proc = self._mp.Process(
+                    target=_shard_main,
+                    args=(member, workflow, self.bus_root, self.state_root,
+                          self.num_partitions, child_conn, self._cfg),
+                    name="tf-%s-%s" % (workflow, member), daemon=True)
+                proc.start()
+                child_conn.close()
+                fresh.append(_ProcShard(member, proc, parent_conn))
+            for shard in fresh:
+                wf.shards[shard.member] = shard
+                if self._await(wf, shard, "ready", ready_timeout) is None:
+                    self._observe_death(workflow, wf, shard, rebalance=False)
+            joined = False
+            for shard in fresh:
+                if shard.alive:
+                    wf.group.join(shard.member)
+                    joined = True
+            if joined:
+                self._rebalance(workflow, wf)
+            return [s.member for s in self._live(wf)]
+
+    def remove_shard(self, workflow: str, member: str) -> None:
+        """Graceful leave: drain-stop the process, fold its checkpoint scope,
+        hand its partitions to the rest."""
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            shard = wf.shards.get(member) if wf else None
+            if shard is None:
+                return
+            self._stop_shard(wf, shard)
+            wf.group.leave(member)
+            self._rebalance(workflow, wf)
+
+    def crash_shard(self, workflow: str, member: str) -> None:
+        """A real crash: SIGKILL the shard process mid-whatever-it-was-doing.
+        Nothing it had not checkpointed/committed survives; the group
+        reassigns its partitions and the bus redelivers every uncommitted
+        event to the new owners (§3.4 / Fig 13)."""
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            shard = wf.shards.get(member) if wf else None
+            if shard is None or not shard.alive:
+                return
+            if shard.proc.is_alive():
+                os.kill(shard.proc.pid, signal.SIGKILL)
+            shard.proc.join(timeout=10.0)
+            shard.alive = False
+            shard.conn.close()
+            wf.crashes += 1
+            wf.group.leave(member)
+            self._rebalance(workflow, wf)
+
+    def reap(self, workflow: str) -> Dict[str, int]:
+        """Fold in shards whose process died on its own (OOM-kill, bug, …).
+        Mirrors the thread pool's accounting: {"reaped": n, "crashed": m}."""
+        reaped = crashed = 0
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is None:
+                return {"reaped": 0, "crashed": 0}
+            dead = [s for s in wf.shards.values()
+                    if s.alive and not s.proc.is_alive()]
+            for shard in dead:
+                shard.alive = False
+                shard.conn.close()
+                wf.group.leave(shard.member)
+                reaped += 1
+                if shard.proc.exitcode != 0:
+                    crashed += 1
+                    wf.crashes += 1
+            if dead:
+                self._rebalance(workflow, wf)
+        return {"reaped": reaped, "crashed": crashed}
+
+    def stop(self, workflow: str) -> None:
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is None:
+                return
+            for shard in self._live(wf):
+                self._stop_shard(wf, shard)
+                # the member is gone for good: without the leave, a later
+                # start_shards would assign partitions to a dead member and
+                # the workflow would stall forever
+                wf.group.leave(shard.member)
+            self.state_store.compact(workflow)
+
+    def stop_all(self) -> None:
+        for workflow in list(self._wfs.keys()):
+            self.stop(workflow)
+
+    def _stop_shard(self, wf: _ProcWorkflow, shard: _ProcShard) -> None:
+        reply = self._request(wf, shard, ("stop",), "stopped", timeout=10.0)
+        if reply is not None:
+            shard.final_stats = reply[2]
+        shard.proc.join(timeout=10.0)
+        if shard.proc.is_alive():  # refused to die: escalate
+            os.kill(shard.proc.pid, signal.SIGKILL)
+            shard.proc.join(timeout=10.0)
+        shard.alive = False
+        shard.conn.close()
+
+    def _observe_death(self, workflow: str, wf: _ProcWorkflow,
+                       shard: _ProcShard, rebalance: bool = True) -> None:
+        """A shard stopped answering: confirm it is gone and rebalance."""
+        if shard.proc.is_alive():
+            os.kill(shard.proc.pid, signal.SIGKILL)
+        shard.proc.join(timeout=10.0)
+        shard.alive = False
+        shard.conn.close()
+        wf.crashes += 1
+        wf.group.leave(shard.member)
+        if rebalance:
+            self._rebalance(workflow, wf)
+
+    # -- rebalance (two-phase, ack'd) -------------------------------------------
+    def _rebalance(self, workflow: str, wf: _ProcWorkflow,
+                   _depth: int = 0) -> None:
+        """Never let a partition have two live writers:
+
+        1. *Revoke*: shrink every continuing owner to the partitions it
+           keeps, and wait for each ack (the child resets volatile state to
+           its last checkpoint before answering).
+        2. *Fold*: compact every checkpoint scope into the base — after
+           this, any scope may legally write any trigger.
+        3. *Grant*: send the full new assignment (ack'd as well, so callers
+           returning from membership changes see a settled group).
+
+        A shard found dead mid-rebalance leaves the group and the whole
+        pass re-runs against the shrunken membership, so its partitions are
+        granted to survivors instead of dangling until the next change."""
+        assignment = wf.group.assignment()
+        lost = False
+        for shard in self._live(wf):
+            target = set(assignment.get(shard.member, ()))
+            retained = tuple(sorted(set(shard.partitions) & target))
+            if retained != shard.partitions:
+                if self._request(wf, shard, ("assign", retained, -1),
+                                 "assigned") is None:
+                    self._observe_death(workflow, wf, shard, rebalance=False)
+                    lost = True
+                    continue
+                shard.partitions = retained
+        self.state_store.compact(workflow)
+        gen = wf.group.generation
+        for shard in self._live(wf):
+            target = tuple(sorted(assignment.get(shard.member, ())))
+            if target != shard.partitions:
+                if self._request(wf, shard, ("assign", target, gen),
+                                 "assigned") is None:
+                    self._observe_death(workflow, wf, shard, rebalance=False)
+                    lost = True
+                    continue
+                shard.partitions = target
+        if lost and _depth < len(wf.shards) + 1:
+            self._rebalance(workflow, wf, _depth + 1)
+
+    # -- request/reply over the command pipe -------------------------------------
+    def _absorb(self, wf: _ProcWorkflow, shard: _ProcShard, msg) -> None:
+        if msg[0] == "finished":
+            shard.finished = True
+            shard.result = msg[2]
+            wf.finished = True
+            wf.result = msg[2]
+        elif msg[0] == "stats":
+            shard.final_stats = msg[2]
+
+    def _await(self, wf: _ProcWorkflow, shard: _ProcShard, op: str,
+               timeout: Optional[float] = None):
+        """Wait for a reply of type ``op``, absorbing unsolicited messages
+        (``finished`` notifications, stale replies).  None ⇒ shard is gone."""
+        deadline = time.monotonic() + (timeout or self.command_timeout)
+        try:
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not shard.conn.poll(remaining):
+                    return None
+                msg = shard.conn.recv()
+                if msg[0] == op:
+                    return msg
+                self._absorb(wf, shard, msg)
+        except (EOFError, BrokenPipeError, OSError):
+            return None
+
+    def _request(self, wf: _ProcWorkflow, shard: _ProcShard, msg, reply_op: str,
+                 timeout: Optional[float] = None):
+        if not shard.alive:
+            return None
+        try:
+            shard.conn.send(msg)
+        except (BrokenPipeError, OSError):
+            return None
+        return self._await(wf, shard, reply_op, timeout)
+
+    # -- observability -----------------------------------------------------------
+    def lag(self, workflow: str) -> int:
+        return self.event_store.lag(workflow)
+
+    def _stats(self, workflow: str) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is None:
+                return out
+            for member, shard in wf.shards.items():
+                if shard.alive:
+                    reply = self._request(wf, shard, ("stats",), "stats")
+                    if reply is not None:
+                        out[member] = reply[2]
+                        continue
+                if shard.final_stats is not None:
+                    out[member] = shard.final_stats
+        return out
+
+    def total_events_processed(self, workflow: str) -> int:
+        return sum(s.get("events_processed", 0)
+                   for s in self._stats(workflow).values())
+
+    def total_fires(self, workflow: str) -> int:
+        return sum(s.get("fires", 0) for s in self._stats(workflow).values())
+
+    def trigger_context(self, workflow: str, trigger_id: str) -> Dict[str, Any]:
+        """The trigger's last *acknowledged checkpoint* (base + all scope
+        logs) — the durable truth a replacement owner would recover."""
+        return self.state_store.get_contexts(workflow).get(trigger_id, {})
+
+    def metrics(self, workflow: str) -> Dict[str, Any]:
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            shards = self._live(wf) if wf else []
+            return {
+                "shards": len(shards),
+                "crashes": wf.crashes if wf else 0,
+                "generation": wf.group.generation if wf else 0,
+                "assignment": {s.member: list(s.partitions) for s in shards},
+                "partition_lags": self.event_store.partition_lags(workflow),
+                "commit_offsets": self.event_store.commit_offsets(workflow),
+                "total_lag": self.event_store.lag(workflow),
+            }
+
+    def result(self, workflow: str) -> Any:
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is not None and wf.finished:
+                return wf.result
+        meta = self.state_store.get_workflow(workflow) or {}
+        return meta.get("result")
+
+    def wait_drained(self, workflow: str, timeout: float = 60.0,
+                     poll: float = 0.02) -> None:
+        """Block until every published event is committed (lag 0).  The
+        multiprocess analogue of the thread pool's ``drive`` exit condition.
+        Each poll also reaps shards whose process died on its own (a failed
+        batch exits non-zero), so their partitions rebalance to survivors
+        instead of stalling the drain until the timeout."""
+        deadline = time.monotonic() + timeout
+        while self.event_store.lag(workflow) > 0:
+            self.reap(workflow)
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    "workflow %r did not drain: lag=%d, partition_lags=%s"
+                    % (workflow, self.event_store.lag(workflow),
+                       self.event_store.partition_lags(workflow)))
+            time.sleep(poll)

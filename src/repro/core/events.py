@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import itertools
 import json
+import os
 import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
@@ -23,11 +24,26 @@ TYPE_TIMEOUT = "event.triggerflow.timeout"
 TYPE_WORKFLOW_END = "event.triggerflow.workflow.end"
 
 _counter = itertools.count()
+# Uniqueness must hold across *processes* now that the shard runtime forks
+# workers (repro.bus.proc): a forked child inherits the parent's counter
+# position, so the prefix carries the pid (plus a random salt against pid
+# reuse across restarts) and is re-derived in fork children.
+_prefix = f"{os.getpid():x}.{uuid.uuid4().hex[:8]}"
+
+
+def _reseed_id_prefix() -> None:
+    global _prefix
+    _prefix = f"{os.getpid():x}.{uuid.uuid4().hex[:8]}"
+
+
+if hasattr(os, "register_at_fork"):  # not on Windows
+    os.register_at_fork(after_in_child=_reseed_id_prefix)
 
 
 def _new_id() -> str:
-    # uuid4 is comparatively expensive; the paper only requires uniqueness.
-    return f"{uuid.getnode():x}-{next(_counter):x}"
+    # uuid4-per-event is comparatively expensive; the paper only requires
+    # uniqueness, so ids are a per-process prefix + a counter.
+    return f"{_prefix}-{next(_counter):x}"
 
 
 @dataclass(frozen=True)
@@ -58,15 +74,20 @@ class CloudEvent:
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "CloudEvent":
-        return CloudEvent(
-            subject=d["subject"],
-            type=d.get("type", TYPE_TERMINATION),
-            data=d.get("data"),
-            source=d.get("source", "triggerflow"),
-            id=d["id"],
-            time=d.get("time"),
-            specversion=d.get("specversion", SPECVERSION),
-        )
+        # Deserialization is the file-bus consumer's per-event floor, so it
+        # bypasses the frozen-dataclass __init__ (~4x): build the instance
+        # directly in __dict__ (writes don't go through __setattr__).
+        ev = object.__new__(CloudEvent)
+        ev.__dict__.update({
+            "subject": d["subject"],
+            "type": d.get("type", TYPE_TERMINATION),
+            "data": d.get("data"),
+            "source": d.get("source", "triggerflow"),
+            "id": d["id"],
+            "time": d.get("time"),
+            "specversion": d.get("specversion", SPECVERSION),
+        })
+        return ev
 
     @staticmethod
     def from_json(s: str) -> "CloudEvent":

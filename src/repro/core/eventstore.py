@@ -20,7 +20,13 @@ import json
 import os
 import threading
 from collections import deque
+from contextlib import contextmanager
 from typing import Dict, Iterable, List, Optional
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: single-process only
+    fcntl = None  # type: ignore[assignment]
 
 from .events import CloudEvent
 
@@ -210,6 +216,136 @@ class StreamShard:
         return list(self._committed_log)
 
 
+class SegmentLog:
+    """Append-only line-record segment: the durable log primitive.
+
+    One record per line, appended with flush (+ optional fsync) — the shared
+    building block of ``FileEventStore``, the partitioned file bus
+    (``repro.bus.FilePartitionedEventStore``: per-partition event/committed/DLQ
+    segments) and the state store's checkpoint delta logs.
+
+    Torn-tail contract (crash mid-append, §3.4): a write that never completed
+    was never acknowledged, so readers must not see it.  ``scan`` consumes
+    only *whole* lines whose ``parse`` succeeds and stops (without advancing)
+    at the first torn or unparseable line; ``repair`` truncates such a tail so
+    later appends cannot land beyond it and masquerade as part of a valid
+    record.  Writers must ``repair`` before their first append to a segment
+    they did not create (the owning store does this once per open).
+
+    Offsets are byte offsets; records are ASCII (``json.dumps`` default /
+    hex ids), so text-mode character counts equal byte counts.
+
+    File handles persist across calls (``open`` costs ~ms under syscall
+    sandboxes): one lazily-opened append handle, one read handle.  They stay
+    valid across truncation and cross-process appends (same inode); a caller
+    that *removes* the file must go through ``remove`` so both are dropped.
+    """
+
+    __slots__ = ("path", "fsync", "_rf", "_af")
+
+    def __init__(self, path: str, fsync: bool = True) -> None:
+        self.path = path
+        self.fsync = fsync
+        self._rf = None
+        self._af = None
+
+    def size(self) -> int:
+        try:
+            return os.path.getsize(self.path)
+        except OSError:
+            return 0
+
+    def _close(self) -> None:
+        for f in (self._rf, self._af):
+            if f is not None:
+                try:
+                    f.close()
+                except OSError:  # pragma: no cover
+                    pass
+        self._rf = self._af = None
+
+    def reset(self) -> None:
+        """Drop the cached handles.  Writers sharing a path across processes
+        call this when they detect the file was removed/recreated under them
+        (e.g. a concurrent delta-log compaction) — the next append/scan
+        reopens the *current* inode instead of feeding the unlinked one."""
+        self._close()
+
+    def remove(self) -> None:
+        """Delete the file (and drop the cached handles, so a later append
+        recreates it instead of writing to the unlinked inode)."""
+        self._close()
+        if os.path.exists(self.path):
+            os.remove(self.path)
+
+    def append(self, lines: Iterable[str]) -> int:
+        """Append one line per record (flush + optional fsync).  Returns the
+        number of bytes written."""
+        data = "\n".join(lines) + "\n"
+        f = self._af
+        if f is None:
+            f = self._af = open(self.path, "a")
+        f.write(data)
+        f.flush()
+        if self.fsync:
+            os.fsync(f.fileno())
+        return len(data)
+
+    def scan(self, parse, offset: int = 0):
+        """Parse whole records from ``offset``.  Returns
+        ``(records, next_offset)`` where ``next_offset`` is the end of the
+        parseable prefix — a torn final line (no newline: the append never
+        completed) or an unparseable line (a tail that was never repaired)
+        stops the scan without advancing past it."""
+        size = self.size()
+        if size <= offset:
+            return [], offset
+        f = self._rf
+        if f is None:
+            try:
+                f = self._rf = open(self.path)
+            except OSError:
+                return [], offset
+        f.seek(offset)
+        chunk = f.read()
+        records = []
+        valid = offset
+        pos = 0
+        while True:
+            nl = chunk.find("\n", pos)
+            if nl < 0:
+                break
+            line = chunk[pos:nl].strip()
+            if line:
+                try:
+                    records.append(parse(line))
+                except Exception:  # noqa: BLE001 - frankenline: stop before it
+                    break
+            valid = offset + nl + 1
+            pos = nl + 1
+        return records, valid
+
+    def truncate(self, size: int) -> None:
+        """Drop everything past ``size`` (a known record boundary, e.g. the
+        ``next_offset`` of a full ``scan``) so new appends land clean.
+        The persistent handles survive: the append handle is in append mode
+        (kernel-positioned at EOF per write) and the read handle seeks
+        absolutely."""
+        if size < self.size():
+            with open(self.path, "r+") as f:
+                f.truncate(size)
+                f.flush()
+                os.fsync(f.fileno())
+
+
+    def repair(self, parse):
+        """Truncate a torn/unparseable tail (fsynced) so new appends land on
+        a clean record boundary.  Returns ``(records, valid_size)``."""
+        records, valid = self.scan(parse, 0)
+        self.truncate(valid)
+        return records, valid
+
+
 class EventStore:
     """Interface."""
 
@@ -350,45 +486,54 @@ class FileEventStore(EventStore):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._lock = threading.RLock()
-        # In-memory mirrors for speed; files are the source of truth.
+        # In-memory mirrors for speed; the segment logs are the source of truth.
         self._pending: Dict[str, deque] = {}
         self._committed_ids: Dict[str, set] = {}
         self._committed_order: Dict[str, List[CloudEvent]] = {}
         self._dlq: Dict[str, deque] = {}
         self._offsets: Dict[str, int] = {}  # log bytes already mirrored
+        self._segs: Dict[str, tuple] = {}   # wf -> (log, committed, dlq)
+        self._flocks: Dict[str, object] = {}
         for fn in os.listdir(root):
             if fn.endswith(".log"):
                 self._load(fn[: -len(".log")])
+
+    @contextmanager
+    def _wf_flock(self, workflow: str):
+        """Cross-process writer lock per workflow (``<wf>.lock``): appends
+        and the torn-tail repair in ``publish_batch`` hold it, so any bytes
+        past the parseable prefix under the lock belong to a *dead* writer
+        (a live one would be holding the lock) and are safe to truncate."""
+        if fcntl is None:  # pragma: no cover - non-POSIX
+            yield
+            return
+        f = self._flocks.get(workflow)
+        if f is None:
+            safe = workflow.replace("/", "_")
+            f = open(os.path.join(self.root, safe + ".lock"), "a")
+            self._flocks[workflow] = f
+        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(f.fileno(), fcntl.LOCK_UN)
 
     def refresh(self, workflow: str) -> int:
         """Pick up events appended by *other* store instances sharing the log
         (e.g. a crashed worker's still-running tasks publishing terminations).
         Returns the number of new events mirrored."""
-        log_p, _, _ = self._paths(workflow)
-        if not os.path.exists(log_p):
-            return 0
         with self._lock:
-            off = self._offsets.get(workflow, 0)
-            size = os.path.getsize(log_p)
-            if size <= off:
+            log, _, _ = self._seglogs(workflow)
+            new, off = log.scan(CloudEvent.from_json,
+                                self._offsets.get(workflow, 0))
+            self._offsets[workflow] = off
+            if not new:
                 return 0
-            with open(log_p) as f:
-                f.seek(off)
-                chunk = f.read()
-            # only consume whole lines (a concurrent writer may be mid-append)
-            last_nl = chunk.rfind("\n")
-            if last_nl < 0:
-                return 0
-            self._offsets[workflow] = off + last_nl + 1
             committed = self._committed_ids.get(workflow, set())
             known = {e.id for e in self._pending.get(workflow, ())}
             known |= {e.id for e in self._dlq.get(workflow, ())}
             n = 0
-            for line in chunk[:last_nl].splitlines():
-                line = line.strip()
-                if not line:
-                    continue
-                ev = CloudEvent.from_json(line)
+            for ev in new:
                 if ev.id in committed or ev.id in known:
                     continue
                 self._pending.setdefault(workflow, deque()).append(ev)
@@ -404,41 +549,34 @@ class FileEventStore(EventStore):
             os.path.join(self.root, f"{safe}.dlq"),
         )
 
+    def _seglogs(self, wf: str):
+        segs = self._segs.get(wf)
+        if segs is None:
+            log_p, com_p, dlq_p = self._paths(wf)
+            segs = (SegmentLog(log_p), SegmentLog(com_p), SegmentLog(dlq_p))
+            self._segs[wf] = segs
+        return segs
+
     def _load(self, wf: str) -> None:
-        log_p, com_p, dlq_p = self._paths(wf)
-        events: List[CloudEvent] = []
-        if os.path.exists(log_p):
-            with open(log_p) as f:
-                for line in f:
-                    line = line.strip()
-                    if line:
-                        events.append(CloudEvent.from_json(line))
-        committed: set = set()
-        if os.path.exists(com_p):
-            with open(com_p) as f:
-                committed = {line.strip() for line in f if line.strip()}
+        log, com, dlq_seg = self._seglogs(wf)
+        # A torn tail (crash mid-append) was never acknowledged: repair drops
+        # it so this instance's appends land on a clean record boundary.
+        # Under the writer flock — a tail that merely *looks* torn could be
+        # a live writer's in-flight append, and truncating that would
+        # destroy an fsync-acknowledged publish.
+        with self._wf_flock(wf):
+            events, log_size = log.repair(CloudEvent.from_json)
+            committed = set(com.repair(str)[0])
+            dlq: deque = deque(dlq_seg.repair(CloudEvent.from_json)[0])
         by_id = {e.id: e for e in events}
         self._committed_ids[wf] = committed
         self._committed_order[wf] = [by_id[i] for i in committed if i in by_id]
-        dlq: deque = deque()
-        if os.path.exists(dlq_p):
-            with open(dlq_p) as f:
-                for line in f:
-                    line = line.strip()
-                    if line:
-                        dlq.append(CloudEvent.from_json(line))
         self._dlq[wf] = dlq
         dlq_ids = {e.id for e in dlq}
         self._pending[wf] = deque(
             e for e in events if e.id not in committed and e.id not in dlq_ids
         )
-        self._offsets[wf] = os.path.getsize(log_p) if os.path.exists(log_p) else 0
-
-    def _append(self, path: str, lines: List[str]) -> None:
-        with open(path, "a") as f:
-            f.write("\n".join(lines) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
+        self._offsets[wf] = log_size
 
     # -- EventStore ----------------------------------------------------------
     def create_stream(self, workflow: str) -> None:
@@ -460,10 +598,17 @@ class FileEventStore(EventStore):
             return
         with self._lock:
             self.create_stream(workflow)
-            self.refresh(workflow)  # mirror foreign appends before ours
-            log_p, _, _ = self._paths(workflow)
-            self._append(log_p, [e.to_json() for e in events])
-            self._offsets[workflow] = os.path.getsize(log_p)
+            log, _, _ = self._seglogs(workflow)
+            with self._wf_flock(workflow):
+                self.refresh(workflow)  # mirror foreign appends before ours
+                off = self._offsets.get(workflow, 0)
+                # Under the writer flock the parseable prefix is exact: any
+                # tail past it is a dead writer's torn fragment (never
+                # acknowledged — fsync cannot have returned) and must go, or
+                # our append would fuse with it into an unparseable line.
+                log.truncate(off)
+                self._offsets[workflow] = off + \
+                    log.append(e.to_json() for e in events)
             # A re-published copy of a committed id must not re-enter the
             # pending mirror (UNCOMMITTED_ONLY contract); the log append above
             # is harmless — _load filters committed ids on recovery.
@@ -486,8 +631,9 @@ class FileEventStore(EventStore):
         if not ids:
             return
         with self._lock:
-            _, com_p, _ = self._paths(workflow)
-            self._append(com_p, sorted(ids))
+            _, com, _ = self._seglogs(workflow)
+            with self._wf_flock(workflow):
+                com.append(sorted(ids))
             self._committed_ids.setdefault(workflow, set()).update(ids)
             keep = deque()
             for e in self._pending.get(workflow, deque()):
@@ -509,8 +655,9 @@ class FileEventStore(EventStore):
 
     def to_dlq(self, workflow: str, event: CloudEvent) -> None:
         with self._lock:
-            _, _, dlq_p = self._paths(workflow)
-            self._append(dlq_p, [event.to_json()])
+            _, _, dlq_seg = self._seglogs(workflow)
+            with self._wf_flock(workflow):
+                dlq_seg.append([event.to_json()])
             self._dlq.setdefault(workflow, deque()).append(event)
             q = self._pending.get(workflow)
             if q:
@@ -524,9 +671,8 @@ class FileEventStore(EventStore):
             n = len(dlq)
             self._pending.setdefault(workflow, deque()).extend(dlq)
             dlq.clear()
-            _, _, dlq_p = self._paths(workflow)
-            if os.path.exists(dlq_p):
-                os.remove(dlq_p)
+            _, _, dlq_seg = self._seglogs(workflow)
+            dlq_seg.remove()
             return n
 
     def dlq_size(self, workflow: str) -> int:

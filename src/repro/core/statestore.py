@@ -19,9 +19,16 @@ from __future__ import annotations
 import json
 import os
 import threading
+from contextlib import contextmanager
 from typing import Any, Dict, List, Optional
 
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: single-process only
+    fcntl = None  # type: ignore[assignment]
+
 from .context import apply_context_delta
+from .eventstore import SegmentLog
 
 
 class StateStore:
@@ -135,33 +142,70 @@ class FileStateStore(StateStore):
 
     * ``meta.json`` / ``triggers.json`` — atomic full-file writes.
     * ``contexts.json`` — the compacted context base map.
-    * ``contexts.delta.jsonl`` — append-only checkpoint log; each line is one
-      ``put_contexts_delta`` batch (``{tid: delta, ...}``).  Readers replay
-      base + log; the log is folded back into ``contexts.json`` every
-      ``compact_every`` checkpoints, or as soon as it exceeds
-      ``compact_bytes`` bytes (whichever hits first; a full ``put_contexts``
-      also compacts).  The byte trigger bounds recovery-replay time for
-      long-lived workflows with *large* per-checkpoint deltas — a fixed
-      line count alone lets the log grow with delta size.
-      A torn final line from a mid-append crash is ignored on replay —
-      its checkpoint was never acknowledged, so the §3.4 contract holds and
-      the broker redelivers the corresponding events.
+    * ``contexts.delta[.<scope>].jsonl`` — append-only checkpoint log(s);
+      each line is one ``put_contexts_delta`` batch (``{tid: delta, ...}``).
+      Readers replay base + every log; a writer's own log is folded back into
+      ``contexts.json`` every ``compact_every`` checkpoints, or as soon as it
+      exceeds ``compact_bytes`` bytes (whichever hits first; a full
+      ``put_contexts`` also compacts).  The byte trigger bounds
+      recovery-replay time for long-lived workflows with *large*
+      per-checkpoint deltas — a fixed line count alone lets the log grow with
+      delta size.  A torn final line from a mid-append crash is ignored on
+      replay — its checkpoint was never acknowledged, so the §3.4 contract
+      holds and the broker redelivers the corresponding events.
+
+    Multi-process checkpointing (the process shard runtime): each writer
+    process constructs its store with a distinct ``scope`` and appends to its
+    *own* delta log, so concurrent shard checkpoints never contend on one
+    JSONL file (and never interleave mid-line).  Correctness relies on the
+    runtime's ownership discipline: between two ``compact()`` points, a given
+    trigger id is checkpointed by at most one scope (trigger contexts live
+    with their subject-partition owner), so the replay order *across* scope
+    logs is immaterial.  The pool folds all logs into the base
+    (``compact()``) at every ownership change — rebalance, crash, restart —
+    before new owners write.  Cross-process safety uses a per-workflow file
+    lock (``state.lock``): appends and reads take it shared, compaction and
+    trigger/meta read-modify-writes take it exclusive.
     """
 
     def __init__(self, root: str, compact_every: int = 256,
-                 compact_bytes: Optional[int] = None) -> None:
+                 compact_bytes: Optional[int] = None,
+                 scope: Optional[str] = None) -> None:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._lock = threading.RLock()
         self.compact_every = compact_every
         self.compact_bytes = compact_bytes
+        self.scope = scope
         self._delta_lines: Dict[str, int] = {}
         self._delta_bytes: Dict[str, int] = {}
+        self._flocks: Dict[str, Any] = {}
+        self._own_logs: Dict[str, SegmentLog] = {}
 
     def _dir(self, wf: str) -> str:
         d = os.path.join(self.root, wf.replace("/", "_"))
         os.makedirs(d, exist_ok=True)
         return d
+
+    @contextmanager
+    def _flock(self, workflow: str, exclusive: bool):
+        """Cross-process lock on the workflow's state directory.  Shared for
+        delta appends / merged reads (they touch disjoint files or read
+        atomically-replaced ones), exclusive for compaction and
+        read-modify-write of the shared JSON files."""
+        if fcntl is None:  # non-POSIX: in-process RLock is all we have
+            yield
+            return
+        f = self._flocks.get(workflow)
+        if f is None:
+            f = open(os.path.join(self._dir(workflow), "state.lock"), "a")
+            self._flocks[workflow] = f
+        fcntl.flock(f.fileno(),
+                    fcntl.LOCK_EX if exclusive else fcntl.LOCK_SH)
+        try:
+            yield
+        finally:
+            fcntl.flock(f.fileno(), fcntl.LOCK_UN)
 
     def _write(self, path: str, obj: Any) -> None:
         tmp = path + ".tmp"
@@ -188,6 +232,12 @@ class FileStateStore(StateStore):
 
     def delete_workflow(self, workflow: str) -> None:
         with self._lock:
+            f = self._flocks.pop(workflow, None)
+            if f is not None:
+                f.close()
+            own = self._own_logs.pop(workflow, None)
+            if own is not None:
+                own.reset()
             d = os.path.join(self.root, workflow.replace("/", "_"))
             if os.path.isdir(d):
                 for fn in os.listdir(d):
@@ -205,8 +255,10 @@ class FileStateStore(StateStore):
 
     def put_triggers(self, workflow: str, specs: Dict[str, Dict[str, Any]]) -> None:
         """One read + one atomic write for the whole batch (the worker's
-        dirty-trigger checkpoint), instead of a rewrite+fsync per trigger."""
-        with self._lock:
+        dirty-trigger checkpoint), instead of a rewrite+fsync per trigger.
+        Exclusive-locked: concurrent shard processes each persisting their
+        dirty triggers must not lose each other's read-modify-write."""
+        with self._lock, self._flock(workflow, exclusive=True):
             p = os.path.join(self._dir(workflow), "triggers.json")
             triggers = self._read(p, {})
             triggers.update(specs)
@@ -217,106 +269,114 @@ class FileStateStore(StateStore):
             p = os.path.join(self.root, workflow.replace("/", "_"), "triggers.json")
             return self._read(p, {})
 
-    # -- contexts: compacted base + append-only delta log ---------------------
-    def _ctx_paths(self, wf_dir: str):
-        return (os.path.join(wf_dir, "contexts.json"),
-                os.path.join(wf_dir, "contexts.delta.jsonl"))
+    # -- contexts: compacted base + append-only delta log(s) -------------------
+    def _base_path(self, wf_dir: str) -> str:
+        return os.path.join(wf_dir, "contexts.json")
 
-    def _read_delta_log(self, log_p: str):
-        """Replay the delta log.  Returns ``(batches, valid_bytes)`` where
-        ``valid_bytes`` is the length of the parseable prefix — a torn line
-        from a crash mid-append (never acknowledged) ends it."""
-        if not os.path.exists(log_p):
-            return [], 0
-        batches: List[Dict[str, Any]] = []
-        valid = 0
-        with open(log_p) as f:  # json.dumps writes ASCII: chars == bytes
-            for line in f:
-                if not line.endswith("\n"):
-                    # the final append never completed (fsync cannot have
-                    # returned), even if the fragment happens to parse —
-                    # the checkpoint was not acknowledged.
-                    break
-                stripped = line.strip()
-                if stripped:
-                    try:
-                        batches.append(json.loads(stripped))
-                    except ValueError:
-                        break
-                valid += len(line)
-        return batches, valid
+    def _own_log_name(self) -> str:
+        return ("contexts.delta.%s.jsonl" % self.scope.replace("/", "_")
+                if self.scope else "contexts.delta.jsonl")
 
-    def _repair_delta_log(self, workflow: str, log_p: str) -> int:
-        """Drop a torn tail *before* new checkpoints are appended after it
-        (they would otherwise be acknowledged but skipped on every replay).
-        Returns the number of valid batches in the log."""
-        batches, valid = self._read_delta_log(log_p)
-        if os.path.exists(log_p) and valid < os.path.getsize(log_p):
-            with open(log_p, "r+") as f:
-                f.truncate(valid)
-                f.flush()
-                os.fsync(f.fileno())
-        return len(batches)
+    def _own_log(self, workflow: str, wf_dir: str) -> SegmentLog:
+        log = self._own_logs.get(workflow)
+        if log is None:
+            log = SegmentLog(os.path.join(wf_dir, self._own_log_name()))
+            self._own_logs[workflow] = log
+        return log
+
+    def _all_logs(self, wf_dir: str) -> List[SegmentLog]:
+        if not os.path.isdir(wf_dir):
+            return []
+        names = sorted(
+            fn for fn in os.listdir(wf_dir)
+            if fn.startswith("contexts.delta") and fn.endswith(".jsonl"))
+        return [SegmentLog(os.path.join(wf_dir, fn)) for fn in names]
 
     def _merged_contexts(self, wf_dir: str) -> Dict[str, Dict[str, Any]]:
-        base_p, log_p = self._ctx_paths(wf_dir)
-        contexts = self._read(base_p, {})
-        for batch in self._read_delta_log(log_p)[0]:
-            for tid, delta in batch.items():
-                contexts[tid] = apply_context_delta(contexts.get(tid, {}), delta)
+        """Base + every delta log.  Between compaction points a trigger id is
+        written by at most one scope (the runtime's ownership discipline), so
+        cross-log replay order is immaterial; within a log, append order is
+        preserved.  Torn tails (unacknowledged checkpoints) are skipped."""
+        contexts = self._read(self._base_path(wf_dir), {})
+        for log in self._all_logs(wf_dir):
+            for batch in log.scan(json.loads)[0]:
+                for tid, delta in batch.items():
+                    contexts[tid] = apply_context_delta(
+                        contexts.get(tid, {}), delta)
         return contexts
 
-    def _compact(self, workflow: str, wf_dir: str,
-                 contexts: Dict[str, Dict[str, Any]]) -> None:
-        base_p, log_p = self._ctx_paths(wf_dir)
-        self._write(base_p, contexts)
-        if os.path.exists(log_p):
-            os.remove(log_p)
+    def _compact_locked(self, workflow: str, wf_dir: str,
+                        extra: Optional[Dict[str, Dict[str, Any]]] = None) -> None:
+        """Fold base + all delta logs (+ ``extra``) into the base and drop the
+        logs.  Caller holds the exclusive flock.  Idempotent on crash between
+        the base write and a log removal: deltas are full-value records, so
+        replaying an already-folded log is harmless."""
+        contexts = self._merged_contexts(wf_dir)
+        if extra:
+            contexts.update(extra)
+        self._write(self._base_path(wf_dir), contexts)
+        own = self._own_logs.get(workflow)
+        for log in self._all_logs(wf_dir):
+            if own is not None and log.path == own.path:
+                own.remove()  # drop cached handles with the inode
+            else:
+                log.remove()
         self._delta_lines[workflow] = 0
         self._delta_bytes[workflow] = 0
 
+    def compact(self, workflow: str) -> None:
+        """Fold every scope's delta log into the compacted base.  The process
+        shard runtime calls this at each ownership boundary (rebalance, crash
+        recovery, restart) so that afterwards any scope may checkpoint any
+        trigger without cross-log ordering ambiguity."""
+        with self._lock, self._flock(workflow, exclusive=True):
+            self._compact_locked(workflow, self._dir(workflow))
+
     def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
-        with self._lock:
-            wf_dir = self._dir(workflow)
-            stored = self._merged_contexts(wf_dir)
-            stored.update(contexts)
-            self._compact(workflow, wf_dir, stored)
+        with self._lock, self._flock(workflow, exclusive=True):
+            self._compact_locked(workflow, self._dir(workflow), extra=contexts)
 
     def put_contexts_delta(self, workflow: str, deltas: Dict[str, Dict[str, Any]]) -> None:
         with self._lock:
             wf_dir = self._dir(workflow)
-            _, log_p = self._ctx_paths(wf_dir)
-            n = self._delta_lines.get(workflow)
-            if n is None:
-                # first touch after a restart (or after a failed append):
-                # truncate any torn tail before appending, or later
-                # checkpoints would land beyond it and be silently skipped
-                # by every replay.
-                n = self._repair_delta_log(workflow, log_p)
-                self._delta_bytes[workflow] = (
-                    os.path.getsize(log_p) if os.path.exists(log_p) else 0)
-            line = json.dumps(deltas, separators=(",", ":")) + "\n"
-            try:
-                with open(log_p, "a") as f:
-                    f.write(line)
-                    f.flush()
-                    os.fsync(f.fileno())
-            except Exception:
-                # the append may have landed partially: force a repair pass
-                # before the next append so the torn fragment is truncated
-                self._delta_lines.pop(workflow, None)
-                raise
-            self._delta_lines[workflow] = n + 1
-            nbytes = self._delta_bytes.get(workflow, 0) + len(line)
-            self._delta_bytes[workflow] = nbytes
+            log = self._own_log(workflow, wf_dir)
+            record = json.dumps(deltas, separators=(",", ":"))
+            with self._flock(workflow, exclusive=False):
+                n = self._delta_lines.get(workflow)
+                if n is None or log.size() != self._delta_bytes.get(workflow):
+                    # First touch after a restart, a failed append, OR a
+                    # concurrent compaction (another process folded + removed
+                    # our log — detected by the size mismatch, and impossible
+                    # to race: their EX flock excludes our SH).  Reopen the
+                    # current inode and truncate any torn tail of OUR log
+                    # before appending, or later checkpoints would land
+                    # beyond it and be silently skipped by every replay.
+                    log.reset()
+                    n = len(log.repair(json.loads)[0])
+                    self._delta_bytes[workflow] = log.size()
+                try:
+                    written = log.append([record])
+                except Exception:
+                    # the append may have landed partially: force a repair
+                    # pass before the next append truncates the torn fragment
+                    self._delta_lines.pop(workflow, None)
+                    raise
+                self._delta_lines[workflow] = n + 1
+                nbytes = self._delta_bytes.get(workflow, 0) + written
+                self._delta_bytes[workflow] = nbytes
             if self._delta_lines[workflow] >= self.compact_every or (
                     self.compact_bytes is not None
                     and nbytes >= self.compact_bytes):
-                self._compact(workflow, wf_dir, self._merged_contexts(wf_dir))
+                # lock upgrade is release-then-acquire; _compact_locked
+                # re-reads everything under the exclusive lock, so a
+                # concurrent compaction in the gap is benign.
+                with self._flock(workflow, exclusive=True):
+                    self._compact_locked(workflow, wf_dir)
 
     def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
         with self._lock:
             wf_dir = os.path.join(self.root, workflow.replace("/", "_"))
             if not os.path.isdir(wf_dir):
                 return {}
-            return self._merged_contexts(wf_dir)
+            with self._flock(workflow, exclusive=False):
+                return self._merged_contexts(wf_dir)

@@ -156,6 +156,14 @@ class TFWorker:
         self.finished = False
         self.result: Any = None
         self._stop = threading.Event()
+        # Crash simulation (pool.crash_shard): a killed worker discards its
+        # in-flight checkpoint/commit instead of completing it — the store
+        # keeps its batch pending for redelivery to the next partition owner.
+        self._killed = False
+        # Why this worker left its runner ("stopped" | "finished" | "idle" |
+        # "error"); None while scheduled.  The pool's reap() accounting reads
+        # it — an idle-timeout departure is not a crash, whatever the lag is.
+        self.exit_reason: Optional[str] = None
         self._dirty_triggers: set = set()
         # bumped on any trigger-structure change (add/intercept/enable):
         # the batch plane uses it to re-offer the rest of an in-flight slice
@@ -763,7 +771,11 @@ class TFWorker:
             batch = self._consume(max_events or self.batch_size)
             if not batch and not self._sink:
                 return 0
-            check_committed = self.partitions is None or not getattr(
+            # Same predicate as the batch plane: on an UNCOMMITTED_ONLY store
+            # the per-event is_committed round-trip can never return True —
+            # for partitioned *and* whole-stream consumers alike — so dedup
+            # against the in-flight set alone suffices.
+            check_committed = not getattr(
                 self.event_store, "UNCOMMITTED_ONLY", False)
             processed_ids: List[str] = []
             fired_any = False
@@ -802,6 +814,11 @@ class TFWorker:
     def _checkpoint(self, processed_ids: List[str]) -> None:
         """Persist what changed — context deltas and dirty trigger ids only —
         then commit the batch (§3.4 ordering)."""
+        if self._killed:
+            # Crashed mid-batch (crash_shard): discard — nothing is persisted
+            # and nothing commits, so the whole batch stays pending in the
+            # store and is redelivered to the partitions' next owner.
+            return
         deltas = {}
         dirty_ctxs = []
         for tid, ctx in self._contexts.items():
@@ -853,4 +870,14 @@ class TFWorker:
                 time.sleep(poll)
 
     def stop(self) -> None:
+        self._stop.set()
+
+    def kill(self) -> None:
+        """Simulate a crash: stop consuming AND discard any in-flight
+        checkpoint/commit (``_checkpoint`` becomes a no-op).  In-memory
+        context mutations die with the worker object; events it processed
+        but never committed stay pending in the store — exactly the state a
+        SIGKILLed process leaves behind (§3.4 recovery replays them over the
+        last durable checkpoint)."""
+        self._killed = True
         self._stop.set()
