@@ -12,6 +12,12 @@ Three gated ratios, all measured through the real runtimes within one job:
           (a broken sync/commit path or serialization blow-up collapses the
           ratio).
 
+Plus one *deterministic* check (no committed baseline, no host-speed
+dependence): an idle autoscaler lag poll on the file bus must cost O(1) stat
+calls — the publish-notify gate — not O(partitions) disk probes.  Measured
+by counting ``os.path.getsize`` calls across idle ``lag()`` polls at 8 and
+64 partitions; any growth with partition width fails the job.
+
 Each measured speedup is compared against the one committed in
 ``results/benchmarks.json``.  The gate is on the *ratio*, not raw events/s:
 CI runners differ by far more than 30% in absolute speed, but before and
@@ -112,13 +118,27 @@ def main() -> int:
         with open(step_summary, "a") as f:
             f.write(summary)
 
-    if not any_ref:
-        print("no committed baseline rows; gate skipped")
-        return 0
+    # deterministic idle-tick check: syscall counts, not wall time, so it
+    # gates even when no committed baseline exists
+    from benchmarks.autoscale import bench_idle_tick_stats
+    try:
+        idle = bench_idle_tick_stats(polls=100)
+        idle_line = f"idle lag poll: {idle['derived']}\n"
+    except AssertionError as exc:
+        failures.append(f"idle lag poll: {exc}")
+        idle_line = f"idle lag poll: FAILED ({exc})\n"
+    print(idle_line, end="")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write("\n" + idle_line)
+
     if failures:
         for f_msg in failures:
             print("FAIL:", f_msg)
         return 1
+    if not any_ref:
+        print("no committed baseline rows; ratio gates skipped")
+        return 0
     print("OK: all gated ratios within tolerance")
     return 0
 

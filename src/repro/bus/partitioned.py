@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import threading
 import time
 import zlib
@@ -85,10 +86,22 @@ class PartitionedStoreBase(EventStore):
             raise ValueError("num_partitions must be >= 1")
         self.num_partitions = num_partitions
         self.partitioner: Partitioner = partitioner or subject_partitioner
+        # Per-workflow partition-count overrides (``create_stream(wf, n)``).
+        # ``num_partitions`` stays the store default; routing and every
+        # whole-stream loop resolve the count per workflow, so a small
+        # control workflow can ride the same bus as a wide data workflow
+        # without inheriting its partition fan-out.
+        self._np: Dict[str, int] = {}
 
     # -- routing ---------------------------------------------------------------
-    def partition_for(self, subject: str) -> int:
-        return self.partitioner(subject, self.num_partitions)
+    def num_partitions_for(self, workflow: str) -> int:
+        """The workflow's partition count (the autoscaler's shard cap)."""
+        return self._np.get(workflow, self.num_partitions)
+
+    def partition_for(self, subject: str, workflow: Optional[str] = None) -> int:
+        n = self.num_partitions if workflow is None \
+            else self.num_partitions_for(workflow)
+        return self.partitioner(subject, n)
 
     # -- per-partition primitives (subclass responsibility) --------------------
     def _have(self, workflow: str) -> bool:
@@ -126,40 +139,47 @@ class PartitionedStoreBase(EventStore):
 
     # -- EventStore contract (whole-stream view) -------------------------------
     def publish(self, workflow: str, event: CloudEvent) -> None:
-        self._publish_p(workflow, self.partition_for(event.subject), [event])
+        self._publish_p(
+            workflow, self.partition_for(event.subject, workflow), [event])
 
     def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
         by_part: Dict[int, List[CloudEvent]] = {}
         for e in events:
-            by_part.setdefault(self.partition_for(e.subject), []).append(e)
+            by_part.setdefault(
+                self.partition_for(e.subject, workflow), []).append(e)
         # one append per touched partition, under that partition's lock only
         for p, evs in by_part.items():
             self._publish_p(workflow, p, evs)
 
     def consume(self, workflow: str, max_events: int = 512) -> List[CloudEvent]:
         return self.consume_partitions(
-            workflow, range(self.num_partitions), max_events)
+            workflow, range(self.num_partitions_for(workflow)), max_events)
 
     def commit(self, workflow: str, event_ids: Iterable[str]) -> None:
-        self.commit_partitions(workflow, range(self.num_partitions), event_ids)
+        self.commit_partitions(
+            workflow, range(self.num_partitions_for(workflow)), event_ids)
 
     def is_committed(self, workflow: str, event_id: str) -> bool:
         if not self._have(workflow):
             return False
         return any(self._is_committed_p(workflow, p, event_id)
-                   for p in range(self.num_partitions))
+                   for p in range(self.num_partitions_for(workflow)))
 
     def lag(self, workflow: str) -> int:
-        return self.lag_partitions(workflow, range(self.num_partitions))
+        return self.lag_partitions(
+            workflow, range(self.num_partitions_for(workflow)))
 
     def to_dlq(self, workflow: str, event: CloudEvent) -> None:
-        self._to_dlq_p(workflow, self.partition_for(event.subject), event)
+        self._to_dlq_p(
+            workflow, self.partition_for(event.subject, workflow), event)
 
     def redrive(self, workflow: str) -> int:
-        return self.redrive_partitions(workflow, range(self.num_partitions))
+        return self.redrive_partitions(
+            workflow, range(self.num_partitions_for(workflow)))
 
     def dlq_size(self, workflow: str) -> int:
-        return self.dlq_size_partitions(workflow, range(self.num_partitions))
+        return self.dlq_size_partitions(
+            workflow, range(self.num_partitions_for(workflow)))
 
     def committed_events(self, workflow: str) -> List[CloudEvent]:
         """Committed events, per-partition commit order, concatenated by
@@ -167,7 +187,7 @@ class PartitionedStoreBase(EventStore):
         out: List[CloudEvent] = []
         if not self._have(workflow):
             return out
-        for p in range(self.num_partitions):
+        for p in range(self.num_partitions_for(workflow)):
             out.extend(self._committed_events_p(workflow, p))
         return out
 
@@ -216,9 +236,10 @@ class PartitionedStoreBase(EventStore):
 
     def partition_lags(self, workflow: str) -> List[int]:
         """Per-partition lag vector — the autoscaler's scaling signal."""
+        n = self.num_partitions_for(workflow)
         if not self._have(workflow):
-            return [0] * self.num_partitions
-        return [self._lag_p(workflow, p) for p in range(self.num_partitions)]
+            return [0] * n
+        return [self._lag_p(workflow, p) for p in range(n)]
 
     def lag_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
         if not self._have(workflow):
@@ -227,10 +248,10 @@ class PartitionedStoreBase(EventStore):
 
     def commit_offsets(self, workflow: str) -> List[int]:
         """Per-partition committed-event counts (isolated commit offsets)."""
+        n = self.num_partitions_for(workflow)
         if not self._have(workflow):
-            return [0] * self.num_partitions
-        return [self._commit_offset_p(workflow, p)
-                for p in range(self.num_partitions)]
+            return [0] * n
+        return [self._commit_offset_p(workflow, p) for p in range(n)]
 
     def dlq_size_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
         if not self._have(workflow):
@@ -267,7 +288,8 @@ class PartitionedEventStore(PartitionedStoreBase):
             with self._lock:
                 parts = self._parts.get(workflow)
                 if parts is None:
-                    parts = [StreamShard() for _ in range(self.num_partitions)]
+                    n = self.num_partitions_for(workflow)
+                    parts = [StreamShard() for _ in range(n)]
                     if not self.striped:
                         # coarse mode: all partitions share one lock — the
                         # pre-striping global-serialization baseline
@@ -277,7 +299,21 @@ class PartitionedEventStore(PartitionedStoreBase):
                     self._parts[workflow] = parts
         return parts
 
-    def create_stream(self, workflow: str) -> None:
+    def create_stream(self, workflow: str,
+                      num_partitions: Optional[int] = None) -> None:
+        if num_partitions is not None:
+            if num_partitions < 1:
+                raise ValueError("num_partitions must be >= 1")
+            with self._lock:
+                current = self._np.get(workflow)
+                if workflow in self._parts and \
+                        num_partitions != (current or self.num_partitions):
+                    raise ValueError(
+                        "stream %r exists with %s partitions, create_stream "
+                        "asked for %s" % (workflow,
+                                          current or self.num_partitions,
+                                          num_partitions))
+                self._np[workflow] = num_partitions
         self._shards(workflow)
 
     def workflows(self) -> List[str]:
@@ -513,6 +549,11 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         self._notify_fd: Dict[str, Any] = {}
         self._notify_seen: Dict[str, int] = {}
         self._notify_bumps: Dict[str, int] = {}
+        # last whole-stream lag computed by ``lag()``.  A drained (0) entry
+        # lets an idle poll answer with ONE notify stat — lag can only grow
+        # through publish/redrive, and both bump the notify counter.
+        self._lag_cache: Dict[str, int] = {}
+        self._lag_verified: Dict[str, float] = {}  # last full lag() sweep
 
     # -- plumbing ---------------------------------------------------------------
     def _wf_dir(self, workflow: str) -> str:
@@ -546,6 +587,9 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             size = 0
         if size != self._notify_seen.get(workflow):
             self._notify_seen[workflow] = size
+            # whoever consumes the signal must re-probe; a cached drained
+            # lag is stale the moment anything was published
+            self._lag_cache.pop(workflow, None)
             return True
         return False
 
@@ -555,14 +599,40 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             with self._lock:
                 fps = self._fps.get(workflow)
                 if fps is None:
+                    n = self.num_partitions_for(workflow)
                     d = self._wf_dir(workflow)
                     os.makedirs(d, exist_ok=True)
                     fps = [
                         _FilePartition(os.path.join(d, "p%04d" % p), self.fsync)
-                        for p in range(self.num_partitions)
+                        for p in range(n)
                     ]
                     self._fps[workflow] = fps
         return fps
+
+    def _stream_meta_path(self, workflow: str) -> str:
+        return os.path.join(self._wf_dir(workflow), "stream.json")
+
+    def num_partitions_for(self, workflow: str) -> int:
+        """The workflow's pinned partition count.  ``stream.json`` (written by
+        ``create_stream``) overrides the bus default, so every process that
+        opens the root routes this workflow's subjects identically.  The
+        answer is cached once known: create a stream (and its partition
+        count) before other processes publish to it — the same ordering
+        ``bus.json`` already requires for the bus default.  A workflow whose
+        directory does not exist yet is NOT negative-cached: it may be
+        mid-creation by another process, and poisoning the cache with the
+        default would misroute its subjects forever once the pin lands."""
+        n = self._np.get(workflow)
+        if n is None:
+            try:
+                with open(self._stream_meta_path(workflow)) as f:
+                    n = int(json.load(f)["num_partitions"])
+            except (OSError, ValueError, KeyError, TypeError):
+                n = self.num_partitions
+                if not os.path.isdir(self._wf_dir(workflow)):
+                    return n  # stream not created yet: don't cache the miss
+            self._np[workflow] = n
+        return n
 
     @contextmanager
     def _plock(self, fp: _FilePartition):
@@ -584,7 +654,41 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         seg.truncate(off)
         return off + seg.append(lines)
 
-    def create_stream(self, workflow: str) -> None:
+    def create_stream(self, workflow: str,
+                      num_partitions: Optional[int] = None) -> None:
+        if num_partitions is not None:
+            if num_partitions < 1:
+                raise ValueError("num_partitions must be >= 1")
+            with self._lock:
+                fps = self._fps.get(workflow)
+                if fps is not None and len(fps) != num_partitions:
+                    raise ValueError(
+                        "stream %r already open with %d partitions, "
+                        "create_stream asked for %s"
+                        % (workflow, len(fps), num_partitions))
+                d = self._wf_dir(workflow)
+                if not os.path.isdir(d):
+                    # the pin must be visible the instant the directory is:
+                    # stage the dir WITH stream.json inside and rename it
+                    # into place, so no observer (this process's autoscaler
+                    # tick included) can ever see a pinned stream's dir
+                    # without its pin and cache the bus default instead
+                    tmp_d = d + ".%d.tmp" % os.getpid()
+                    os.makedirs(tmp_d, exist_ok=True)
+                    with open(os.path.join(tmp_d, "stream.json"), "w") as f:
+                        json.dump({"num_partitions": num_partitions}, f)
+                    try:
+                        os.rename(tmp_d, d)
+                    except OSError:  # lost the creation race: verify below
+                        shutil.rmtree(tmp_d, ignore_errors=True)
+                # re-read the effective pin from disk (ours, or a racing
+                # creator's) and refuse a silent mismatch
+                self._np.pop(workflow, None)
+                pinned = self.num_partitions_for(workflow)
+                if pinned != num_partitions:
+                    raise ValueError(
+                        "stream %r is pinned to %s partitions, create_stream "
+                        "asked for %s" % (workflow, pinned, num_partitions))
         self._parts(workflow)
 
     def workflows(self) -> List[str]:
@@ -667,34 +771,64 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             fp.sync()
             return fp.shard.lag()
 
+    def _probe_lag(self, fp: _FilePartition, probe: bool) -> int:
+        """One partition's lag after a gated sync: the event log is only
+        re-scanned when the notify counter said something was published (or
+        on the partition's very first look); commits (which don't bump the
+        counter) surface through the periodic full sync, so a drain-watcher
+        polling lag converges within FULL_SYNC_INTERVAL."""
+        with fp.shard.lock:
+            fp.sync(scan_log=probe or fp.last_full == 0.0)
+            return fp.shard.lag()
+
     def lag_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
         """Like the consume path, syscall-gated: one notify stat decides
-        whether any partition log needs probing; commits (which don't bump
-        the notify counter) surface through the periodic full sync, so a
-        drain-watcher polling lag converges within FULL_SYNC_INTERVAL."""
+        whether any partition log needs probing (see ``_probe_lag``)."""
         if not self._have(workflow):
             return 0
         probe = self._notify_changed(workflow)
         parts = self._parts(workflow)
-        total = 0
-        for p in partitions:
-            fp = parts[p]
-            with fp.shard.lock:
-                fp.sync(scan_log=probe or fp.last_full == 0.0)
-                total += fp.shard.lag()
+        return sum(self._probe_lag(parts[p], probe) for p in partitions)
+
+    #: Even a cached-drained ``lag()`` re-sweeps at least this often: the
+    #: append and its notify bump are not atomic across processes (a writer
+    #: can die between them, and the counter's periodic truncation can alias
+    #: a regrown size), so the cached 0 is only *almost* exact.  The backstop
+    #: bounds how long such an orphan publish can hide; amortized, an idle
+    #: tick still costs ~1 stat.
+    LAG_BACKSTOP_INTERVAL = 1.0
+
+    def lag(self, workflow: str) -> int:
+        """Whole-stream lag, publish-notify-gated end to end: once a stream
+        is observed drained, an idle poll answers with ONE stat on the notify
+        counter — no per-partition syncs or ledger probes.  Lag only grows
+        via publish/redrive, and both bump the counter *after* their flocked
+        append, so an unchanged counter plus a cached 0 means drained — up
+        to the non-atomicity of append+bump, which the periodic
+        ``LAG_BACKSTOP_INTERVAL`` full sweep covers.  Any other state
+        re-scans (commits by shard processes only ever shrink lag, and the
+        scan keeps running until the drained 0 is observed and re-cached).
+        This is what keeps an idle autoscaler tick O(1) instead of
+        O(partitions)."""
+        if not self._have(workflow):
+            return 0
+        probe = self._notify_changed(workflow)
+        now = time.monotonic()
+        if not probe and self._lag_cache.get(workflow) == 0 and \
+                now - self._lag_verified.get(workflow, 0.0) < \
+                self.LAG_BACKSTOP_INTERVAL:
+            return 0
+        total = sum(self._probe_lag(fp, probe)
+                    for fp in self._parts(workflow))
+        self._lag_cache[workflow] = total
+        self._lag_verified[workflow] = now
         return total
 
     def partition_lags(self, workflow: str) -> List[int]:
         if not self._have(workflow):
-            return [0] * self.num_partitions
+            return [0] * self.num_partitions_for(workflow)
         probe = self._notify_changed(workflow)
-        parts = self._parts(workflow)
-        out: List[int] = []
-        for fp in parts:
-            with fp.shard.lock:
-                fp.sync(scan_log=probe or fp.last_full == 0.0)
-                out.append(fp.shard.lag())
-        return out
+        return [self._probe_lag(fp, probe) for fp in self._parts(workflow)]
 
     def _dlq_size_p(self, workflow: str, p: int) -> int:
         fp = self._parts(workflow)[p]

@@ -187,12 +187,49 @@ class ShardedWorkerPool:
         self._wfs: Dict[str, _WorkflowShards] = {}
 
     # -- membership ------------------------------------------------------------
+    def _np_for(self, workflow: str) -> int:
+        npf = getattr(self.event_store, "num_partitions_for", None)
+        return npf(workflow) if npf is not None \
+            else self.event_store.num_partitions
+
     def _wf(self, workflow: str) -> _WorkflowShards:
         wp = self._wfs.get(workflow)
+        n = self._np_for(workflow)
         if wp is None:
-            wp = self._wfs.setdefault(
-                workflow, _WorkflowShards(self.event_store.num_partitions))
+            wp = self._wfs.setdefault(workflow, _WorkflowShards(n))
+        elif wp.group.num_partitions != n:
+            # a per-workflow partition pin landed after this group was sized
+            # (e.g. the workflow was touched before create_stream pinned it):
+            # resize while empty; with live members the widths have diverged
+            # for good and silently continuing would strand partitions
+            if wp.group.members():
+                raise ValueError(
+                    "workflow %r is sharded over %d partitions but the store "
+                    "now pins %d" % (workflow, wp.group.num_partitions, n))
+            wp.group = ConsumerGroup(n)
         return wp
+
+    # -- ScalablePool surface (see repro.core.autoscaler) -----------------------
+    def lag(self, workflow: str) -> int:
+        return self.event_store.lag(workflow)
+
+    def num_partitions(self, workflow: str) -> int:
+        """The workflow's partition count — the hard shard cap (a shard
+        without a partition has nothing to consume)."""
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is not None:
+                return wp.group.num_partitions
+        return self._np_for(workflow)
+
+    def local_worker(self, workflow: str) -> Optional[ShardWorker]:
+        """First in-process shard worker, if any (the service facade's
+        classic-API bridge; process pools have no in-process workers)."""
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            if wp is None or not wp.shards:
+                return None
+            return next(iter(wp.shards.values()))
 
     def shard_ids(self, workflow: str) -> List[str]:
         with self._lock:
@@ -384,26 +421,31 @@ class ShardedWorkerPool:
                     r.start()
             return list(wp.shards.keys())
 
-    def reap(self, workflow: str) -> Dict[str, int]:
+    def reap(self, workflow: str) -> Dict[str, Any]:
         """Remove shards that left their runner (idle scale-down, workflow
-        end, crash, or runner death).  Returns {"reaped": n, "crashed": m}
-        for the autoscaler's accounting.
+        end, crash, or runner death).  Returns
+        ``{"reaped": n, "crashed": m, "reasons": {reason: count}}`` for the
+        autoscaler's accounting (the ``ScalablePool`` contract).
 
-        "Crashed" is decided by the *recorded departure reason*, not by
-        circumstantial evidence: an idle-timeout departure is a clean
-        scale-down even if new events arrived after the shard went idle
-        (``_stop`` unset + lag > 0 is not a crash), while a failed batch or a
-        runner thread that died without recording any reason is."""
+        "Crashed" is decided by the *recorded departure reason*
+        (``TFWorker.crashed``), not by circumstantial evidence: an
+        idle-timeout departure is a clean scale-down even if new events
+        arrived after the shard went idle (``stopped`` unset + lag > 0 is not
+        a crash), while a failed batch or a runner thread that died without
+        recording any reason is."""
         reaped = crashed = 0
+        reasons: Dict[str, int] = {}
         with self._lock:
             wp = self._wfs.get(workflow)
             if wp is None:
-                return {"reaped": 0, "crashed": 0}
+                return {"reaped": 0, "crashed": 0, "reasons": {}}
             # failed-batch exits were retired immediately by _shard_exited;
             # fold them into this report exactly once
-            reaped += wp.failed_unreaped
-            crashed += wp.failed_unreaped
-            wp.failed_unreaped = 0
+            if wp.failed_unreaped:
+                reaped += wp.failed_unreaped
+                crashed += wp.failed_unreaped
+                reasons["error"] = wp.failed_unreaped
+                wp.failed_unreaped = 0
             for member, runner in list(wp.runner_of.items()):
                 if runner.is_alive() and member in runner.workers:
                     continue
@@ -411,16 +453,15 @@ class ShardedWorkerPool:
                 worker = wp.shards.pop(member, None)
                 wp.group.leave(member)
                 reaped += 1
-                if worker is not None and not worker.finished:
-                    reason = worker.exit_reason
-                    if reason == "error" or (
-                            reason is None and not worker._stop.is_set()):
-                        # a failed batch reaped before its callback ran, or a
-                        # runner thread that died mid-flight
-                        crashed += 1
+                reason = "lost" if worker is None else (
+                    worker.exit_reason
+                    or ("finished" if worker.finished else "lost"))
+                reasons[reason] = reasons.get(reason, 0) + 1
+                if worker is not None and worker.crashed:
+                    crashed += 1
             if reaped:
                 self._rebalance(wp)
-        return {"reaped": reaped, "crashed": crashed}
+        return {"reaped": reaped, "crashed": crashed, "reasons": reasons}
 
     def stop(self, workflow: str) -> None:
         with self._lock:
@@ -494,7 +535,8 @@ class ShardedWorkerPool:
                     worker.set_trigger_enabled(trigger_id, enabled)
                     subjects = trg.activation_events
             if enabled and subjects:
-                parts = {self.event_store.partition_for(s) for s in subjects}
+                parts = {self.event_store.partition_for(s, workflow)
+                         for s in subjects}
                 self.event_store.redrive_partitions(workflow, parts)
 
     def trigger_context(self, workflow: str, trigger_id: str) -> Dict[str, Any]:
@@ -507,7 +549,8 @@ class ShardedWorkerPool:
                 trg = worker.triggers.get(trigger_id)
                 if trg is None or not trg.activation_events:
                     continue
-                p = self.event_store.partition_for(trg.activation_events[0])
+                p = self.event_store.partition_for(
+                    trg.activation_events[0], workflow)
                 if worker.partitions and p in worker.partitions:
                     return dict(worker.context_of(trigger_id))
             return {}

@@ -64,7 +64,14 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
     """Shard process entry point: build the stores/worker from disk, then
     loop — drain commands, run one batch, idle-wait on the pipe.  The final
     text of every reply carries ``member`` so the parent can assert it is
-    talking to whom it thinks."""
+    talking to whom it thinks.
+
+    KEDA-style scale-down (``idle_timeout``): a shard that processes nothing
+    for the grace period announces ``("idle", ...)`` and exits cleanly
+    (code 0) — the container-per-worker analogue of the threaded runner's
+    idle drop.  Its partitions stay with the (dead) member until the parent's
+    next ``reap()`` hands them to survivors — or, at scale-to-zero, until a
+    later burst makes the autoscaler start fresh shards."""
     store = FilePartitionedEventStore(
         bus_root, num_partitions, fsync=cfg["fsync"])
     state = FileStateStore(state_root, scope=member)
@@ -80,6 +87,8 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
     )
     conn.send(("ready", member))
     poll = cfg["poll"]
+    idle_timeout = cfg.get("idle_timeout")
+    last_active = time.monotonic()
     notified_finish = False
     try:
         while True:
@@ -92,6 +101,10 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
                         if worker.partitions != parts:
                             worker.partitions = parts
                             worker.rebalance_reset()
+                    # fresh ownership restarts the idle clock: the grace
+                    # period measures inactivity *while serving*, not time
+                    # spent waiting out a rebalance
+                    last_active = time.monotonic()
                     conn.send(("assigned", member, gen))
                 elif op == "add_trigger":
                     worker.add_trigger(Trigger.from_dict(msg[1]), persist=False)
@@ -124,7 +137,18 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
             if worker.finished and not notified_finish:
                 notified_finish = True
                 conn.send(("finished", member, worker.result))
-            if n == 0:
+            if n:
+                last_active = time.monotonic()
+            else:
+                if idle_timeout is not None and \
+                        time.monotonic() - last_active > idle_timeout:
+                    # scale-to-zero: announce the clean exit (best effort —
+                    # the parent classifies by exit code 0 regardless) and go
+                    try:
+                        conn.send(("idle", member, _stats_dict(worker)))
+                    except (BrokenPipeError, OSError):  # pragma: no cover
+                        pass
+                    return
                 conn.poll(poll)  # idle sleep; a command wakes us early
     except (EOFError, BrokenPipeError):  # parent is gone: nothing to serve
         return
@@ -132,7 +156,7 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
 
 class _ProcShard:
     __slots__ = ("member", "proc", "conn", "alive", "partitions",
-                 "final_stats", "finished", "result")
+                 "final_stats", "finished", "result", "exit_reason")
 
     def __init__(self, member: str, proc, conn) -> None:
         self.member = member
@@ -143,11 +167,15 @@ class _ProcShard:
         self.final_stats: Optional[Dict[str, int]] = None
         self.finished = False
         self.result: Any = None
+        # why the process left ("idle" | "stopped" | "error" | None while
+        # running) — from its last pipe message or, failing that, its exit
+        # code; ``reap()`` folds these into the autoscaler's accounting
+        self.exit_reason: Optional[str] = None
 
 
 class _ProcWorkflow:
     __slots__ = ("group", "shards", "next_id", "crashes", "triggers",
-                 "finished", "result")
+                 "finished", "result", "unreaped", "retired_stats")
 
     def __init__(self, num_partitions: int) -> None:
         self.group = ConsumerGroup(num_partitions)
@@ -157,6 +185,19 @@ class _ProcWorkflow:
         self.triggers: Dict[str, Dict[str, Any]] = {}  # parent spec cache
         self.finished = False
         self.result: Any = None
+        # departures retired outside reap() (_observe_death during a
+        # broadcast/rebalance), by exit reason — folded into the next reap()
+        # report exactly once so the autoscaler's accounting sees them
+        self.unreaped: List[str] = []
+        # summed final_stats of departed-and-dropped shards: scale-to-zero
+        # cycles must not grow wf.shards without bound, but the workflow's
+        # lifetime totals (events_processed, fires, …) must survive the drop
+        self.retired_stats: Dict[str, int] = {}
+
+    def fold_retired(self, shard: _ProcShard) -> None:
+        if shard.final_stats:
+            for k, v in shard.final_stats.items():
+                self.retired_stats[k] = self.retired_stats.get(k, 0) + v
 
 
 class ProcessShardPool:
@@ -195,7 +236,7 @@ class ProcessShardPool:
         self.root = root
         self.bus_root = os.path.join(root, "bus")
         self.state_root = os.path.join(root, "state")
-        self.num_partitions = num_partitions
+        self._num_partitions = num_partitions  # bus default; see num_partitions()
         self.event_store = FilePartitionedEventStore(
             self.bus_root, num_partitions, fsync=fsync)
         self.state_store = FileStateStore(self.state_root)
@@ -203,6 +244,7 @@ class ProcessShardPool:
             "batch_size": batch_size, "commit_policy": commit_policy,
             "poll": poll, "fsync": fsync, "batch_plane": batch_plane,
             "action_plane": action_plane, "child_init": child_init,
+            "idle_timeout": None,
         }
         self.command_timeout = command_timeout
         if start_method is None:
@@ -216,13 +258,37 @@ class ProcessShardPool:
     # -- workflow / trigger management (the Fig. 1 control plane) --------------
     def _wf(self, workflow: str) -> _ProcWorkflow:
         wf = self._wfs.get(workflow)
+        n = self.event_store.num_partitions_for(workflow)
         if wf is None:
-            wf = self._wfs.setdefault(workflow, _ProcWorkflow(self.num_partitions))
+            wf = self._wfs.setdefault(workflow, _ProcWorkflow(n))
+        elif wf.group.num_partitions != n:
+            # a per-workflow partition pin landed after this group was sized
+            # (e.g. add_trigger before create_workflow(num_partitions=...)):
+            # resize while empty; live members mean the widths diverged
+            if wf.group.members():
+                raise ValueError(
+                    "workflow %r is sharded over %d partitions but the store "
+                    "now pins %d" % (workflow, wf.group.num_partitions, n))
+            wf.group = ConsumerGroup(n)
         return wf
 
+    def num_partitions(self, workflow: str) -> int:
+        """The workflow's pinned partition count (``ScalablePool``) — the
+        hard shard cap the autoscaler must respect per workflow."""
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is not None:
+                return wf.group.num_partitions
+        return self.event_store.num_partitions_for(workflow)
+
     def create_workflow(self, workflow: str,
-                        meta: Optional[Dict[str, Any]] = None) -> None:
-        self.event_store.create_stream(workflow)
+                        meta: Optional[Dict[str, Any]] = None,
+                        num_partitions: Optional[int] = None) -> None:
+        """``num_partitions`` pins a per-workflow partition count (written to
+        the stream's ``stream.json``); create the workflow before starting
+        shards or publishing from other processes, so every store instance
+        routes its subjects identically."""
+        self.event_store.create_stream(workflow, num_partitions=num_partitions)
         m = {"status": "created"}
         m.update(meta or {})
         self.state_store.put_workflow(workflow, m)
@@ -260,7 +326,8 @@ class ProcessShardPool:
                     self.state_store.get_triggers(workflow).get(trigger_id, {})
                 subjects = spec.get("activation_events", ())
                 if subjects:
-                    parts = {self.event_store.partition_for(s) for s in subjects}
+                    parts = {self.event_store.partition_for(s, workflow)
+                             for s in subjects}
                     self.event_store.redrive_partitions(workflow, parts)
 
     def publish(self, workflow: str, event: CloudEvent) -> None:
@@ -281,11 +348,31 @@ class ProcessShardPool:
     def shard_count(self, workflow: str) -> int:
         return len(self.shard_ids(workflow))
 
+    def live_shard_count(self, workflow: str) -> int:
+        """Shard processes that are actually running right now (an idle-exited
+        or crashed child stops counting the moment it dies, even before
+        ``reap()`` retires its membership) — the autoscaler's Fig-8 signal."""
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is None:
+                return 0
+            return sum(1 for s in wf.shards.values()
+                       if s.alive and s.proc.is_alive())
+
     def start_shards(self, workflow: str, count: int,
+                     idle_timeout: Optional[float] = None,
                      ready_timeout: float = 30.0) -> List[str]:
-        """Ensure ``count`` live shard processes serve ``workflow``."""
+        """Ensure ``count`` live shard processes serve ``workflow``.
+
+        ``idle_timeout`` arms KEDA-style scale-down in every shard started by
+        this call: a child that processes nothing for that grace period exits
+        cleanly (code 0) and is reaped as a scale-down, not a crash."""
         with self._lock:
             wf = self._wf(workflow)
+            cfg = self._cfg
+            if idle_timeout is not None:
+                cfg = dict(cfg)
+                cfg["idle_timeout"] = idle_timeout
             fresh: List[_ProcShard] = []
             while len(self._live(wf)) + len(fresh) < count:
                 member = "proc-%d" % wf.next_id
@@ -294,7 +381,7 @@ class ProcessShardPool:
                 proc = self._mp.Process(
                     target=_shard_main,
                     args=(member, workflow, self.bus_root, self.state_root,
-                          self.num_partitions, child_conn, self._cfg),
+                          self._num_partitions, child_conn, cfg),
                     name="tf-%s-%s" % (workflow, member), daemon=True)
                 proc.start()
                 child_conn.close()
@@ -338,32 +425,59 @@ class ProcessShardPool:
                 os.kill(shard.proc.pid, signal.SIGKILL)
             shard.proc.join(timeout=10.0)
             shard.alive = False
+            shard.exit_reason = "error"
             shard.conn.close()
             wf.crashes += 1
             wf.group.leave(member)
             self._rebalance(workflow, wf)
 
-    def reap(self, workflow: str) -> Dict[str, int]:
-        """Fold in shards whose process died on its own (OOM-kill, bug, …).
-        Mirrors the thread pool's accounting: {"reaped": n, "crashed": m}."""
+    def reap(self, workflow: str) -> Dict[str, Any]:
+        """Fold in shards whose process died on its own — idle scale-down,
+        workflow end, or a genuine crash (SIGKILL, OOM, failed batch).
+        Mirrors the thread pool's ``ScalablePool`` accounting:
+        ``{"reaped": n, "crashed": m, "reasons": {reason: count}}``.
+
+        Classification is by the child's *recorded exit reason* (its last
+        pipe message — ``idle``/``stopped``/``failed``), falling back to the
+        exit code: 0 is a clean departure, anything else (including a signal
+        death's negative code) is a crash."""
         reaped = crashed = 0
+        reasons: Dict[str, int] = {}
         with self._lock:
             wf = self._wfs.get(workflow)
             if wf is None:
-                return {"reaped": 0, "crashed": 0}
+                return {"reaped": 0, "crashed": 0, "reasons": {}}
+            # departures _observe_death already retired (their wf.crashes
+            # were counted there; only the report entries are pending)
+            for reason in wf.unreaped:
+                reaped += 1
+                reasons[reason] = reasons.get(reason, 0) + 1
+                if reason == "error":
+                    crashed += 1
+            wf.unreaped = []
             dead = [s for s in wf.shards.values()
                     if s.alive and not s.proc.is_alive()]
             for shard in dead:
+                self._drain_final(wf, shard)
                 shard.alive = False
                 shard.conn.close()
                 wf.group.leave(shard.member)
                 reaped += 1
-                if shard.proc.exitcode != 0:
+                reason = shard.exit_reason
+                if reason is None:
+                    reason = "stopped" if shard.proc.exitcode == 0 else "error"
+                    shard.exit_reason = reason
+                reasons[reason] = reasons.get(reason, 0) + 1
+                if reason == "error":
                     crashed += 1
                     wf.crashes += 1
+                # drop the corpse (scale-to-zero cycles are unbounded;
+                # wf.shards must not be) but keep its lifetime totals
+                wf.fold_retired(shard)
+                wf.shards.pop(shard.member, None)
             if dead:
                 self._rebalance(workflow, wf)
-        return {"reaped": reaped, "crashed": crashed}
+        return {"reaped": reaped, "crashed": crashed, "reasons": reasons}
 
     def stop(self, workflow: str) -> None:
         with self._lock:
@@ -386,22 +500,33 @@ class ProcessShardPool:
         reply = self._request(wf, shard, ("stop",), "stopped", timeout=10.0)
         if reply is not None:
             shard.final_stats = reply[2]
+            shard.exit_reason = "stopped"
         shard.proc.join(timeout=10.0)
         if shard.proc.is_alive():  # refused to die: escalate
             os.kill(shard.proc.pid, signal.SIGKILL)
             shard.proc.join(timeout=10.0)
+            shard.exit_reason = "error"
         shard.alive = False
         shard.conn.close()
 
     def _observe_death(self, workflow: str, wf: _ProcWorkflow,
                        shard: _ProcShard, rebalance: bool = True) -> None:
-        """A shard stopped answering: confirm it is gone and rebalance."""
+        """A shard stopped answering: confirm it is gone and rebalance.
+        A child that managed a clean last word (``idle``/``stopped``) before
+        the pipe broke — e.g. an idle-exit racing a broadcast — is a clean
+        departure, not a crash."""
+        self._drain_final(wf, shard)
         if shard.proc.is_alive():
             os.kill(shard.proc.pid, signal.SIGKILL)
         shard.proc.join(timeout=10.0)
         shard.alive = False
         shard.conn.close()
-        wf.crashes += 1
+        if shard.exit_reason not in ("idle", "stopped"):
+            shard.exit_reason = "error"
+            wf.crashes += 1
+        wf.unreaped.append(shard.exit_reason)
+        wf.fold_retired(shard)
+        wf.shards.pop(shard.member, None)
         wf.group.leave(shard.member)
         if rebalance:
             self._rebalance(workflow, wf)
@@ -457,6 +582,21 @@ class ProcessShardPool:
             wf.result = msg[2]
         elif msg[0] == "stats":
             shard.final_stats = msg[2]
+        elif msg[0] == "idle":
+            # the child's goodbye before a clean scale-to-zero exit
+            shard.exit_reason = "idle"
+            shard.final_stats = msg[2]
+        elif msg[0] == "failed":
+            shard.exit_reason = "error"
+
+    def _drain_final(self, wf: _ProcWorkflow, shard: _ProcShard) -> None:
+        """Absorb a dead (or dying) shard's last words so its departure is
+        classified by what it *said*, not only by its exit code."""
+        try:
+            while shard.conn.poll(0):
+                self._absorb(wf, shard, shard.conn.recv())
+        except (EOFError, BrokenPipeError, OSError):
+            pass
 
     def _await(self, wf: _ProcWorkflow, shard: _ProcShard, op: str,
                timeout: Optional[float] = None):
@@ -505,12 +645,19 @@ class ProcessShardPool:
                     out[member] = shard.final_stats
         return out
 
+    def _retired_stat(self, workflow: str, key: str) -> int:
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            return wf.retired_stats.get(key, 0) if wf is not None else 0
+
     def total_events_processed(self, workflow: str) -> int:
-        return sum(s.get("events_processed", 0)
-                   for s in self._stats(workflow).values())
+        return self._retired_stat(workflow, "events_processed") + sum(
+            s.get("events_processed", 0)
+            for s in self._stats(workflow).values())
 
     def total_fires(self, workflow: str) -> int:
-        return sum(s.get("fires", 0) for s in self._stats(workflow).values())
+        return self._retired_stat(workflow, "fires") + sum(
+            s.get("fires", 0) for s in self._stats(workflow).values())
 
     def trigger_context(self, workflow: str, trigger_id: str) -> Dict[str, Any]:
         """The trigger's last *acknowledged checkpoint* (base + all scope

@@ -28,7 +28,15 @@ class Triggerflow:
         commit_policy: str = "on_fire",
         num_partitions: Optional[int] = None,
         num_shards: int = 1,
+        pool=None,
     ) -> None:
+        # A deployment-owned pool (e.g. repro.bus.ProcessShardPool) brings
+        # its own stores: the facade and the autoscaler then drive *it*
+        # instead of building a threaded pool — the ScalablePool protocol
+        # (core.autoscaler) is the only contract between them.
+        if pool is not None:
+            event_store = event_store or pool.event_store
+            state_store = state_store or pool.state_store
         if event_store is None and (num_partitions is not None or num_shards > 1):
             from ..bus import PartitionedEventStore
 
@@ -43,8 +51,8 @@ class Triggerflow:
         self._threads: Dict[str, threading.Thread] = {}
         self._lock = threading.RLock()
         # Sharded runtime rides on any partition-capable store (repro.bus).
-        self.pool = None
-        if hasattr(self.event_store, "consume_partitions"):
+        self.pool = pool
+        if pool is None and hasattr(self.event_store, "consume_partitions"):
             from ..bus import ShardedWorkerPool
 
             self.pool = ShardedWorkerPool(
@@ -133,11 +141,17 @@ class Triggerflow:
 
     def worker(self, workflow: str) -> TFWorker:
         # Pool-backed mode: the workflow is served by shards; hand back the
-        # first one (they share trigger defs; contexts live with the shard
-        # owning the subject's partition — see get_trigger_context).
+        # first *in-process* one (they share trigger defs; contexts live with
+        # the shard owning the subject's partition — see get_trigger_context).
+        # Process pools have no in-process workers, so they fall through to a
+        # classic facade worker (which must then only be used for read-side
+        # APIs, never driven against live shard processes).
         if self.pool is not None and self.pool.shard_count(workflow) > 0:
-            wp = self.pool._wf(workflow)
-            return next(iter(wp.shards.values()))
+            local = getattr(self.pool, "local_worker", None)
+            if local is not None:
+                w = local(workflow)
+                if w is not None:
+                    return w
         with self._lock:
             w = self._workers.get(workflow)
             if w is None:
@@ -176,8 +190,17 @@ class Triggerflow:
         return th is not None and th.is_alive()
 
     def run_until_complete(self, workflow: str, timeout: float = 60.0) -> Any:
-        if self.pool is not None and self.pool.shard_count(workflow) > 0:
-            return self.pool.drive(workflow, timeout=timeout)
+        if self.pool is not None:
+            if hasattr(self.pool, "drive"):
+                if self.pool.shard_count(workflow) > 0:
+                    return self.pool.drive(workflow, timeout=timeout)
+            else:
+                # A pool without drive (process pool) owns the stream even at
+                # zero shards — an autoscaler (or a later start_shards) forks
+                # the consumers.  Never drive a facade worker against it: a
+                # second consumer on the shared bus double-fires (§3.4).
+                self.pool.wait_drained(workflow, timeout=timeout)
+                return self.pool.result(workflow)
         return self.worker(workflow).run_until_complete(timeout=timeout)
 
     def shutdown(self) -> None:

@@ -137,8 +137,13 @@ class TFWorker:
         self.partitions: Optional[tuple] = (
             tuple(partitions) if partitions is not None else None
         )
-        # Hoisted once: partition routing for inline sink-event ownership.
-        self._partition_for = getattr(event_store, "partition_for", None)
+        # Hoisted once: partition routing for inline sink-event ownership,
+        # bound to this workflow (partitioned stores may pin a per-workflow
+        # partition count, so subject→partition depends on the workflow).
+        _pf = getattr(event_store, "partition_for", None)
+        self._partition_for = (
+            None if _pf is None
+            else lambda subject, _pf=_pf, _wf=workflow: _pf(subject, _wf))
 
         self.lock = threading.RLock()
         self.triggers: Dict[str, Trigger] = {}
@@ -861,16 +866,44 @@ class TFWorker:
 
     def run_forever(self, poll: float = 0.002, idle_timeout: Optional[float] = None) -> None:
         """Threaded mode; exits on stop(), workflow end, or idle_timeout
-        (the latter is how KEDA-style scale-to-zero reclaims the worker)."""
-        while not self._stop.is_set() and not self.finished:
-            n = self.run_once()
-            if n == 0:
-                if idle_timeout is not None and time.monotonic() - self.last_active > idle_timeout:
-                    return
-                time.sleep(poll)
+        (the latter is how KEDA-style scale-to-zero reclaims the worker).
+        Every exit path records ``exit_reason`` ("stopped" | "finished" |
+        "idle" | "error"), so a reaper can classify the departure without
+        peeking at private state — see ``stopped`` / ``crashed``."""
+        self.exit_reason = None
+        try:
+            while not self._stop.is_set() and not self.finished:
+                n = self.run_once()
+                if n == 0:
+                    if idle_timeout is not None and time.monotonic() - self.last_active > idle_timeout:
+                        self.exit_reason = "idle"
+                        return
+                    time.sleep(poll)
+            self.exit_reason = "finished" if self.finished else "stopped"
+        except BaseException:
+            self.exit_reason = "error"
+            raise
 
     def stop(self) -> None:
         self._stop.set()
+
+    @property
+    def stopped(self) -> bool:
+        """True once a stop (or kill) was requested — the public face of the
+        stop flag, for reapers deciding whether a dead loop was asked to
+        die."""
+        return self._stop.is_set()
+
+    @property
+    def crashed(self) -> bool:
+        """Did this worker's loop die *unexpectedly*?  Only meaningful after
+        the loop exited: a recorded ``error``, or no recorded reason at all
+        on a worker that finished nothing and was never told to stop (a
+        thread that died mid-flight).  Idle/stop/finish departures — whatever
+        the lag at reap time — are clean scale-downs, not crashes."""
+        return not self.finished and (
+            self.exit_reason == "error"
+            or (self.exit_reason is None and not self._stop.is_set()))
 
     def kill(self) -> None:
         """Simulate a crash: stop consuming AND discard any in-flight

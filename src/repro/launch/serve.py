@@ -28,14 +28,20 @@ def main() -> None:
     eng.deploy()
     scaler = KedaAutoscaler(tf, poll_interval=0.05, grace_period=0.5).start()
     t0 = time.time()
-    for i in range(args.requests):
-        eng.submit(f"req-{i}", [1 + i, 2 + i, 3 + i])
-    while eng.served < args.requests and time.time() - t0 < 300:
-        time.sleep(0.05)
-    print(f"served {eng.served} requests in {eng.batches} batches, "
-          f"{time.time() - t0:.1f}s")
-    scaler.stop()
-    tf.shutdown()
+    try:
+        for i in range(args.requests):
+            eng.submit(f"req-{i}", [1 + i, 2 + i, 3 + i])
+        while eng.served < args.requests and time.time() - t0 < 300:
+            time.sleep(0.05)
+        print(f"served {eng.served} requests in {eng.batches} batches, "
+              f"{time.time() - t0:.1f}s")
+    finally:
+        # order matters: stop() drains any in-flight autoscaler tick (one
+        # caught mid-start_shards would otherwise provision workers *after*
+        # shutdown began, leaving them unreaped), then shutdown reclaims
+        # everything the drained tick started.
+        scaler.stop()
+        tf.shutdown()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,444 @@
+"""Pool-agnostic autoscaling (paper §4.2, Fig. 8).
+
+The ``ScalablePool`` protocol lets one ``KedaAutoscaler`` drive both shard
+runtimes — threads over the in-memory bus and OS processes over the durable
+file bus.  Covered here:
+
+* the Fig-8 lifecycle on BOTH pools: burst → lag-proportional scale-up →
+  drain → idle scale-to-zero → a second burst re-scales from zero,
+* SIGKILL-crash restart accounting on the process pool (exit-code-classified
+  ``reap``, exactly-once commits across the kill point),
+* the accounting bugfixes: ``scale_ups`` counts the pool's actual delta (not
+  the request), classic-mode crashes are restarts (not scale-downs) decided
+  by the worker's public predicate, ``target_shards`` caps by the workflow's
+  own partition count, and ``stop()`` drains an in-flight tick,
+* per-workflow partition pins on the file bus (``stream.json``), and the
+  publish-notify-gated ``lag`` that keeps an idle poll at O(1) stat calls.
+"""
+import os
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.bus import (FilePartitionedEventStore, PartitionedEventStore,
+                       ProcessShardPool)
+from repro.core import KedaAutoscaler, Triggerflow, make_trigger, termination_event
+
+
+def _noop_triggers(n):
+    return [make_trigger(f"s{i}", condition={"name": "true"},
+                         action={"name": "noop"}, trigger_id=f"t{i}",
+                         transient=False) for i in range(n)]
+
+
+def _wait(cond, timeout, msg, poll=0.01):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        assert time.monotonic() < deadline, msg
+        time.sleep(poll)
+
+
+def _thread_deployment():
+    store = PartitionedEventStore(8)
+    tf = Triggerflow(event_store=store, inline_functions=True,
+                     commit_policy="every_batch")
+    tf.create_workflow("w")
+    for trg in _noop_triggers(16):
+        tf.add_trigger("w", trg)
+    return tf
+
+
+def _process_deployment(tmp_path, partitions=4, batch_size=128):
+    pool = ProcessShardPool(str(tmp_path / "pool"), num_partitions=partitions,
+                            batch_size=batch_size, fsync=False)
+    pool.create_workflow("w")
+    for trg in _noop_triggers(8):
+        pool.add_trigger("w", trg)
+    return Triggerflow(pool=pool)
+
+
+def _burst(tf, n, subjects=8, base=0):
+    tf.event_store.publish_batch(
+        "w", [termination_event(f"s{i % subjects}", base + i) for i in range(n)])
+
+
+# -- the Fig-8 lifecycle, parametrized over the shard substrate ------------------
+
+@pytest.mark.parametrize("mode", ["thread", "process"])
+def test_fig8_burst_scale_up_drain_to_zero_and_back(mode, tmp_path):
+    if mode == "thread":
+        tf = _thread_deployment()
+        scaler = KedaAutoscaler(tf, poll_interval=0.02, grace_period=0.15,
+                                events_per_shard=500,
+                                max_shards_per_workflow=4)
+        first, second = 10_000, 4_000
+    else:
+        tf = _process_deployment(tmp_path)
+        scaler = KedaAutoscaler(tf, poll_interval=0.05, grace_period=0.4,
+                                events_per_shard=400,
+                                max_shards_per_workflow=2)
+        first, second = 1_600, 800
+    store = tf.event_store
+    scaler.start()
+    try:
+        # idle deployment: nothing to do, nothing running
+        time.sleep(4 * scaler.poll_interval)
+        assert scaler.active_workers == 0
+        assert scaler.scale_ups == 0
+
+        _burst(tf, first)
+        _wait(lambda: store.lag("w") == 0, 60,
+              "first burst did not drain")
+        # lag-proportional scale-up: the burst wanted >1 shard (the counter
+        # is written by the tick thread, so wait for it rather than racing
+        # its post-start_shards arithmetic)
+        _wait(lambda: scaler.scale_ups >= 2, 10,
+              "lag-proportional scale-up never counted >= 2 shards")
+        assert max(w for _, w, _ in scaler.timeline) >= 2, scaler.timeline
+        ups_first = scaler.scale_ups
+
+        # idle decay: every shard exits within the grace period and is reaped
+        _wait(lambda: scaler.active_workers == 0, 30,
+              "shards did not scale to zero after drain")
+        _wait(lambda: scaler.scale_downs >= 1, 10,
+              "idle exits were never reaped as scale-downs")
+        zero_at = len(scaler.timeline)
+
+        # a second burst re-scales from zero
+        _burst(tf, second, base=first)
+        _wait(lambda: store.lag("w") == 0, 60,
+              "second burst did not drain")
+        _wait(lambda: scaler.scale_ups > ups_first, 10,
+              "second burst never re-scaled from zero")
+        assert max(w for _, w, _ in scaler.timeline[zero_at:]) >= 1
+        _wait(lambda: scaler.active_workers == 0, 30,
+              "no scale-to-zero after the second burst")
+        assert scaler.restarts == 0  # every departure here was clean
+        # exactly-once: nothing lost or double-committed across the cycles
+        ids = [e.id for e in store.committed_events("w")]
+        assert len(ids) == len(set(ids)) == first + second
+        if mode == "process":
+            # scale-to-zero cycles must not accumulate corpses in the pool,
+            # yet lifetime totals must survive the drop
+            _wait(lambda: len(tf.pool._wfs["w"].shards) == 0, 10,
+                  "reaped shard processes were never dropped from the pool")
+            assert tf.pool.total_events_processed("w") >= first + second
+    finally:
+        scaler.stop()
+        tf.shutdown()
+
+
+def test_process_pool_sigkill_is_a_restart_not_a_scale_down(tmp_path):
+    """Fig-8 fault leg: a SIGKILLed shard process is reaped as a *crash*
+    (restart accounting), a replacement drains what it left uncommitted, and
+    the workflow still decays to zero afterwards."""
+    tf = _process_deployment(tmp_path, batch_size=32)
+    pool = tf.pool
+    scaler = KedaAutoscaler(tf, poll_interval=0.05, grace_period=0.5,
+                            events_per_shard=500, max_shards_per_workflow=2)
+    scaler.start()
+    try:
+        total = 4_000
+        _burst(tf, total)
+        _wait(lambda: pool.live_shard_count("w") >= 1, 30,
+              "autoscaler never started a shard process")
+        shard = next(s for s in pool._wfs["w"].shards.values()
+                     if s.alive and s.proc.is_alive())
+        os.kill(shard.proc.pid, signal.SIGKILL)
+        _wait(lambda: scaler.restarts >= 1, 30,
+              "SIGKILL was not accounted as a crash/restart")
+        _wait(lambda: pool.lag("w") == 0, 60, "stream did not drain")
+        ids = [e.id for e in pool.event_store.committed_events("w")]
+        assert len(ids) == len(set(ids)) == total  # §3.4 exactly-once
+        _wait(lambda: scaler.active_workers == 0, 30,
+              "no scale-to-zero after crash recovery")
+        down_reasons = pool.reap("w")["reasons"]
+        assert down_reasons.get("error", 0) == 0  # crash was already folded
+    finally:
+        scaler.stop()
+        tf.shutdown()
+
+
+# -- accounting bugfix regressions ----------------------------------------------
+
+class _CappedPool:
+    """A ScalablePool whose start_shards grants at most one shard per call —
+    the partition/budget-cap shape the scale_ups fix must account for."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.requested = []
+
+    def live_shard_count(self, wf):
+        return self.inner.live_shard_count(wf)
+
+    def start_shards(self, wf, count, idle_timeout=None):
+        self.requested.append(count)
+        live = self.inner.live_shard_count(wf)
+        return self.inner.start_shards(wf, min(count, live + 1),
+                                       idle_timeout=idle_timeout)
+
+    def reap(self, wf):
+        return self.inner.reap(wf)
+
+    def lag(self, wf):
+        return self.inner.lag(wf)
+
+    def num_partitions(self, wf):
+        return self.inner.num_partitions(wf)
+
+    def __getattr__(self, name):  # the rest of the pool API, for shutdown
+        return getattr(self.inner, name)
+
+
+def test_scale_ups_counts_actual_pool_delta():
+    """When the pool grants fewer shards than requested, scale_ups must count
+    the actual delta (the old code added want - live regardless)."""
+    tf = _thread_deployment()
+    tf.pool = _CappedPool(tf.pool)
+    tf.event_store.publish_batch(
+        "w", [termination_event(f"s{i % 16}", i) for i in range(50_000)])
+    scaler = KedaAutoscaler(tf, poll_interval=0.02, grace_period=5.0,
+                            events_per_shard=1_000, max_shards_per_workflow=8)
+    scaler._tick()
+    assert tf.pool.requested == [8]       # the autoscaler wanted 8...
+    assert tf.pool.live_shard_count("w") == 1  # ...the pool granted 1
+    assert scaler.scale_ups == 1          # counted what actually started
+    tf.shutdown()
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_classic_crash_counts_as_restart_not_scale_down():
+    tf = Triggerflow(inline_functions=True, commit_policy="every_batch")
+    tf.create_workflow("w")
+    tf.add_trigger("w", _noop_triggers(1)[0])
+    worker = tf.worker("w")
+    worker.run_once = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("dead worker"))
+    tf.publish("w", termination_event("s0", 1))
+    scaler = KedaAutoscaler(tf, poll_interval=0.02, grace_period=0.1)
+    scaler._tick()                        # provisions the (doomed) worker
+    assert scaler.scale_ups == 1
+    _wait(lambda: not tf.worker_alive("w"), 10, "worker thread never died")
+    scaler._tick()                        # reaps the corpse
+    assert worker.crashed                 # the public predicate, not _stop
+    assert scaler.restarts == 1
+    assert scaler.scale_downs == 0        # a crash is not a scale-down
+    tf.shutdown()
+
+
+def test_classic_idle_exit_counts_as_scale_down():
+    tf = Triggerflow(inline_functions=True, commit_policy="every_batch")
+    tf.create_workflow("w")
+    tf.add_trigger("w", _noop_triggers(1)[0])
+    tf.publish("w", termination_event("s0", 1))
+    scaler = KedaAutoscaler(tf, poll_interval=0.02, grace_period=0.05)
+    scaler._tick()
+    _wait(lambda: not tf.worker_alive("w"), 10,
+          "worker never idle-exited")     # drains 1 event, then idles out
+    scaler._tick()
+    worker = tf.worker("w")
+    assert worker.exit_reason == "idle" and not worker.crashed
+    assert scaler.scale_downs == 1
+    assert scaler.restarts == 0
+    tf.shutdown()
+
+
+def test_target_shards_caps_by_workflow_partition_count(tmp_path):
+    pool = ProcessShardPool(str(tmp_path / "pool"), num_partitions=8)
+    pool.create_workflow("narrow", num_partitions=2)
+    pool.create_workflow("wide")
+    tf = Triggerflow(pool=pool)
+    scaler = KedaAutoscaler(tf, events_per_shard=1, max_shards_per_workflow=8)
+    assert scaler.target_shards(10_000, "narrow") == 2   # per-workflow pin
+    assert scaler.target_shards(10_000, "wide") == 8     # bus default
+    assert scaler.target_shards(10_000) == 8             # store-global fallback
+    assert scaler.target_shards(0, "narrow") == 0
+    assert scaler.target_shards(3, "wide") == 3
+    pool.stop_all()
+
+
+def test_stop_drains_inflight_tick():
+    """stop() must not return while a tick is mid-start_shards: the old
+    2-second join timeout abandoned slow ticks, whose freshly started shards
+    then outlived the autoscaler unreaped."""
+    tf = _thread_deployment()
+    tf.event_store.publish_batch(
+        "w", [termination_event(f"s{i % 16}", i) for i in range(5_000)])
+    real_start = tf.pool.start_shards
+    entered = threading.Event()
+    finished = threading.Event()
+
+    def slow_start(wf, count, idle_timeout=None, **kw):
+        entered.set()
+        time.sleep(2.6)  # longer than the old stop() join timeout
+        try:
+            return real_start(wf, count, idle_timeout=idle_timeout, **kw)
+        finally:
+            finished.set()
+
+    tf.pool.start_shards = slow_start
+    scaler = KedaAutoscaler(tf, poll_interval=0.01, grace_period=0.2,
+                            events_per_shard=1_000)
+    scaler.start()
+    assert entered.wait(10), "autoscaler never ticked into start_shards"
+    scaler.stop()
+    assert finished.is_set(), \
+        "stop() returned while a tick was still starting shards"
+    tf.shutdown()
+
+
+# -- per-workflow partitions + O(1) idle lag on the file bus ---------------------
+
+def test_file_bus_per_workflow_partition_pin(tmp_path):
+    root = str(tmp_path / "bus")
+    store = FilePartitionedEventStore(root, 8)
+    store.create_stream("narrow", num_partitions=2)
+    evs = [termination_event(f"s{i}", i) for i in range(20)]
+    store.publish_batch("narrow", evs)
+    assert store.num_partitions_for("narrow") == 2
+    assert len(store.partition_lags("narrow")) == 2
+    assert sum(store.partition_lags("narrow")) == 20
+    # another process opening the root routes identically off stream.json
+    other = FilePartitionedEventStore(root, 8)
+    assert other.num_partitions_for("narrow") == 2
+    assert {e.id for e in other.consume("narrow", 100)} == {e.id for e in evs}
+    # and the pin is immutable
+    with pytest.raises(ValueError):
+        other.create_stream("narrow", num_partitions=4)
+    # unpinned workflows keep the bus default
+    store.create_stream("wide")
+    assert store.num_partitions_for("wide") == 8
+    # a nonsense pin is rejected before it can poison the root
+    with pytest.raises(ValueError):
+        store.create_stream("broken", num_partitions=0)
+    with pytest.raises(ValueError):
+        PartitionedEventStore(4).create_stream("broken", num_partitions=-1)
+    # the pin and its directory appear atomically: no observer window where
+    # the dir exists without stream.json (a racer would cache the default)
+    assert not os.path.isdir(os.path.join(root, "broken"))
+
+
+@pytest.mark.parametrize("partitions", [8, 64])
+def test_idle_lag_poll_costs_one_stat(tmp_path, monkeypatch, partitions):
+    """The autoscaler's idle tick rides the publish-notify counter: once a
+    stream is observed drained, each lag() poll costs exactly ONE stat —
+    independent of the partition count."""
+    store = FilePartitionedEventStore(
+        str(tmp_path / ("bus%d" % partitions)), partitions, fsync=False)
+    store.create_stream("w")
+    evs = [termination_event(f"s{i}", i) for i in range(64)]
+    store.publish_batch("w", evs)
+    store.commit("w", [e.id for e in evs])
+    assert store.lag("w") == 0  # observes + caches the drained state
+    calls = {"n": 0}
+    real_getsize = os.path.getsize
+
+    def counting_getsize(path):
+        calls["n"] += 1
+        return real_getsize(path)
+
+    monkeypatch.setattr(os.path, "getsize", counting_getsize)
+    polls = 50
+    for _ in range(polls):
+        assert store.lag("w") == 0
+    assert calls["n"] == polls  # one notify stat per poll, zero per-partition
+    # a publish invalidates the cached drained view on the next poll
+    monkeypatch.setattr(os.path, "getsize", real_getsize)
+    store.publish("w", termination_event("s0", 999))
+    assert store.lag("w") == 1
+
+
+def test_observe_death_departure_reaches_reap_accounting(tmp_path):
+    """A shard that dies and is discovered during a *broadcast* (not a reap)
+    is retired by _observe_death — its departure must still appear in the
+    next reap() report, or the autoscaler's restart accounting undercounts."""
+    tf = _process_deployment(tmp_path)
+    pool = tf.pool
+    pool.start_shards("w", 1)
+    shard = next(iter(pool._wfs["w"].shards.values()))
+    os.kill(shard.proc.pid, signal.SIGKILL)
+    shard.proc.join(timeout=10)
+    # the broadcast discovers the corpse and retires it via _observe_death
+    pool.add_trigger("w", make_trigger(
+        "late", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="t-late", transient=False))
+    assert pool.live_shard_count("w") == 0
+    r = pool.reap("w")
+    assert r["reaped"] == 1 and r["crashed"] == 1
+    assert r["reasons"] == {"error": 1}
+    again = pool.reap("w")                 # folded exactly once
+    assert again["reaped"] == 0 and again["crashed"] == 0
+    tf.shutdown()
+
+
+def test_run_until_complete_never_drives_facade_worker_on_process_pool(tmp_path):
+    """run_until_complete over a process deployment must block on the pool's
+    drain (even at momentary zero shards) — driving an in-process facade
+    worker would put a second consumer on the shared bus and double-fire."""
+    tf = _process_deployment(tmp_path)
+    pool = tf.pool
+    _burst(tf, 50)
+    pool.start_shards("w", 1)
+    tf.run_until_complete("w", timeout=60)
+    assert pool.lag("w") == 0
+    assert tf._workers == {}  # no facade worker was ever created, let alone run
+    tf.shutdown()
+
+
+def test_lag_backstop_catches_unnotified_publish(tmp_path):
+    """Append and notify-bump are not atomic across processes: a writer that
+    dies between them must not hide its events behind the cached-drained
+    lag() fast path forever — the periodic backstop re-sweeps."""
+    root = str(tmp_path / "bus")
+    store = FilePartitionedEventStore(root, 4, fsync=False)
+    store.create_stream("w")
+    evs = [termination_event(f"s{i}", i) for i in range(8)]
+    store.publish_batch("w", evs)
+    store.commit("w", [e.id for e in evs])
+    assert store.lag("w") == 0          # cached drained view
+    # a second writer appends but dies before its notify bump
+    writer = FilePartitionedEventStore(root, 4, fsync=False)
+    writer._bump_notify = lambda wf: None
+    writer.publish("w", termination_event("s0", 99))
+    store.LAG_BACKSTOP_INTERVAL = 0.05  # speed the backstop up for the test
+    assert store.lag("w") == 0          # fast path still within the window
+    time.sleep(0.08)
+    assert store.lag("w") == 1          # backstop sweep finds the orphan
+
+
+def test_group_resizes_when_pin_lands_after_first_touch(tmp_path):
+    """Touching a workflow (add_trigger) before create_workflow pins its
+    partition count must not freeze the consumer group at the bus default —
+    shards would then never cover the pinned tail partitions."""
+    pool = ProcessShardPool(str(tmp_path / "pool"), num_partitions=4,
+                            batch_size=64, fsync=False)
+    pool.add_trigger("w", make_trigger(
+        "s0", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="t0", transient=False))      # caches a 4-wide group
+    pool.create_workflow("w", num_partitions=8)  # the pin lands late
+    assert pool.num_partitions("w") == 8
+    assert pool._wfs["w"].group.num_partitions == 8
+    pool.publish_batch("w", [termination_event("s0", i) for i in range(20)])
+    pool.start_shards("w", 1)
+    pool.wait_drained("w", timeout=30)           # routing and group agree
+    pool.stop_all()
+
+
+def test_scalable_pool_protocol_surface(tmp_path):
+    """Both pools expose the full ScalablePool surface with compatible
+    call shapes (the autoscaler drives them blindly)."""
+    thread_pool = _thread_deployment().pool
+    proc_pool = ProcessShardPool(str(tmp_path / "pool"), num_partitions=4)
+    proc_pool.create_workflow("w")
+    for pool in (thread_pool, proc_pool):
+        assert pool.live_shard_count("w") == 0
+        assert pool.lag("w") == 0
+        assert pool.num_partitions("w") >= 1
+        r = pool.reap("w")
+        assert r["reaped"] == 0 and r["crashed"] == 0 and r["reasons"] == {}
+        assert callable(pool.start_shards)
+    proc_pool.stop_all()

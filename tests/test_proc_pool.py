@@ -415,7 +415,8 @@ def test_reap_idle_departure_is_not_a_crash():
     # events arrive after the shard went idle: lag > 0 at reap time
     store.publish_batch("w", [termination_event("s0", 100 + i) for i in range(5)])
     reaped = tf.pool.reap("w")
-    assert reaped == {"reaped": 1, "crashed": 0}
+    assert reaped["reaped"] == 1 and reaped["crashed"] == 0
+    assert reaped["reasons"] == {"idle": 1}  # classified, not inferred
     tf.shutdown()
 
 
@@ -490,5 +491,6 @@ def test_failed_batch_shard_releases_partitions():
     assert victim not in m["assignment"]
     # the failure is folded into the next reap() report exactly once
     assert tf.pool.reap("w")["crashed"] >= 1
-    assert tf.pool.reap("w") == {"reaped": 0, "crashed": 0}
+    again = tf.pool.reap("w")
+    assert again["reaped"] == 0 and again["crashed"] == 0
     tf.shutdown()
