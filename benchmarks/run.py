@@ -25,6 +25,7 @@ SUITES = [
     ("montage", "Fig 14-16 — nested state machine, scale-to-zero"),
     ("fedlearn_bench", "Fig 17 — federated learning rounds"),
     ("roofline", "§Roofline — per (arch × shape) dry-run terms"),
+    ("obs", "Observability — metrics/trace plane overhead on the noop action plane"),
 ]
 
 
@@ -61,6 +62,13 @@ def main() -> None:
     out = os.path.join(os.path.dirname(__file__), "..", "results",
                        "benchmarks.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
+    if args.only and os.path.exists(out):
+        # partial rerun: replace only the rerun suites' rows, keep every
+        # other committed row (a bare --only must not clobber the file)
+        with open(out) as f:
+            kept = [r for r in json.load(f)
+                    if r.get("name", "").split(".", 1)[0] not in chosen]
+        all_rows = kept + all_rows
     with open(out, "w") as f:
         json.dump(all_rows, f, indent=1)
     if failures:

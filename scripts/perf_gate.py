@@ -118,6 +118,32 @@ def main() -> int:
         with open(step_summary, "a") as f:
             f.write(summary)
 
+    # observability overhead gate: the metrics plane on the noop action
+    # plane must keep >= 90% of the metrics-off throughput.  An *absolute*
+    # ratio floor (the two variants share the host within one job, so host
+    # speed cancels) — no committed baseline needed.
+    from benchmarks.obs import bench_obs_noop
+    obs_off = obs_on = 0.0
+    for _ in range(args.reps):
+        obs_off = max(obs_off,
+                      bench_obs_noop(n_events=50_000,
+                                     metrics=False)["events_per_s"])
+        obs_on = max(obs_on,
+                     bench_obs_noop(n_events=50_000,
+                                    metrics=True)["events_per_s"])
+    obs_ratio = obs_on / obs_off
+    obs_line = (f"observability overhead: metrics-on {obs_on:,.0f} ev/s vs "
+                f"metrics-off {obs_off:,.0f} ev/s = {obs_ratio:.2f}x "
+                f"(floor 0.90x)\n")
+    if obs_ratio < 0.9:
+        failures.append(
+            f"observability: metrics-on ratio {obs_ratio:.2f}x is below the "
+            f"0.90x floor -> metrics plane costs >10% on the noop action plane")
+    print(obs_line, end="")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write("\n" + obs_line)
+
     # deterministic idle-tick check: syscall counts, not wall time, so it
     # gates even when no committed baseline exists
     from benchmarks.autoscale import bench_idle_tick_stats

@@ -1,0 +1,57 @@
+"""Reconstruct trigger span trees from span segment files.
+
+Reads JSONL span records (per-shard ``spans.<member>.jsonl`` segments under
+a process pool's ``<root>/spans`` dir, or files exported with
+``SpanCollector.export_jsonl``), stitches them — deduplicating by span id,
+completed records winning over their open pre-crash twins — and prints one
+ASCII tree per trace.
+
+    PYTHONPATH=src python scripts/trace_report.py <paths...> [--assert-connected]
+
+``--assert-connected`` exits non-zero if any trace has more than one
+attachment point (a broken causal chain) — the CI smoke uses this to prove
+end-to-end propagation across shards, processes and crash/replay.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs.trace import load_spans, render_tree, span_trees, stitch_spans
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+",
+                    help="span JSONL files, or directories of *.jsonl")
+    ap.add_argument("--assert-connected", action="store_true",
+                    help="exit 1 if any trace is not a single connected tree")
+    ap.add_argument("--quiet", action="store_true",
+                    help="summary only, no per-trace trees")
+    args = ap.parse_args(argv)
+
+    spans = stitch_spans(load_spans(args.paths))
+    if not spans:
+        print("no spans found")
+        return 1 if args.assert_connected else 0
+    trees = span_trees(spans)
+    disconnected = []
+    for trace_id in sorted(trees):
+        tree = trees[trace_id]
+        status = "connected" if tree["connected"] else \
+            "DISCONNECTED (%d attachment points)" % len(tree["attachments"])
+        print(f"trace {trace_id}: {tree['spans']} spans, {status}")
+        if not tree["connected"]:
+            disconnected.append(trace_id)
+        if not args.quiet:
+            trace = [s for s in spans if s["trace"] == trace_id]
+            print(render_tree(tree, trace))
+    print(f"{len(trees)} trace(s), {len(spans)} span(s), "
+          f"{len(disconnected)} disconnected")
+    if args.assert_connected and disconnected:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

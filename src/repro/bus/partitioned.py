@@ -54,7 +54,7 @@ try:
 except ImportError:  # pragma: no cover - non-POSIX: in-process locks only
     fcntl = None  # type: ignore[assignment]
 
-from ..core.events import CloudEvent
+from ..core.events import CloudEvent, stamp_publish_time
 from ..core.eventstore import EventStore, SegmentLog, StreamShard
 
 # subject -> partition. Stable across processes/restarts (crc32, not hash()).
@@ -139,10 +139,13 @@ class PartitionedStoreBase(EventStore):
 
     # -- EventStore contract (whole-stream view) -------------------------------
     def publish(self, workflow: str, event: CloudEvent) -> None:
+        stamp_publish_time((event,))
         self._publish_p(
             workflow, self.partition_for(event.subject, workflow), [event])
 
     def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
+        events = list(events)
+        stamp_publish_time(events)
         by_part: Dict[int, List[CloudEvent]] = {}
         for e in events:
             by_part.setdefault(
@@ -608,6 +611,20 @@ class FilePartitionedEventStore(PartitionedStoreBase):
                     ]
                     self._fps[workflow] = fps
         return fps
+
+    def append_stats(self, workflow: Optional[str] = None) -> Dict[str, float]:
+        """Durable-append accounting for the metrics plane: counts/seconds
+        summed over every segment log (event/committed/DLQ) this process has
+        open — the store's fsync time, as seen by the shard that paid it."""
+        count = 0
+        seconds = 0.0
+        wfs = [workflow] if workflow is not None else list(self._fps.keys())
+        for wf in wfs:
+            for fp in self._fps.get(wf, ()):
+                for seg in (fp.log, fp.com, fp.dlq):
+                    count += seg.append_count
+                    seconds += seg.append_seconds
+        return {"appends": count, "append_seconds": seconds}
 
     def _stream_meta_path(self, workflow: str) -> str:
         return os.path.join(self._wf_dir(workflow), "stream.json")

@@ -33,7 +33,8 @@ from ..core.eventstore import EventStore
 from ..core.functions import FunctionBackend
 from ..core.statestore import StateStore
 from ..core.triggers import Trigger
-from ..core.worker import TFWorker
+from ..core.worker import TFWorker, WorkerStats
+from ..obs.metrics import empty_snapshot, fold_counters, merge_snapshot
 from .group import ConsumerGroup
 
 
@@ -144,7 +145,7 @@ class _Runner(threading.Thread):
 
 class _WorkflowShards:
     __slots__ = ("group", "shards", "runner_of", "next_id",
-                 "failures", "failed_unreaped")
+                 "failures", "failed_unreaped", "rebalances", "retired")
 
     def __init__(self, num_partitions: int) -> None:
         self.group = ConsumerGroup(num_partitions)
@@ -153,6 +154,10 @@ class _WorkflowShards:
         self.next_id = 0
         self.failures = 0        # shards whose batch raised (lifetime total)
         self.failed_unreaped = 0  # …not yet folded into a reap() report
+        self.rebalances = 0      # partition-assignment changes (lifetime)
+        # lifetime stats of departed shards, folded via WorkerStats so they
+        # aggregate identically to the process pool's retired_stats
+        self.retired = WorkerStats()
 
 
 class ShardedWorkerPool:
@@ -169,6 +174,8 @@ class ShardedWorkerPool:
         keep_event_log: bool = True,
         batch_plane: bool = True,
         action_plane: bool = True,
+        metrics: bool = True,
+        tracer=None,
     ) -> None:
         if not hasattr(event_store, "consume_partitions"):
             raise TypeError(
@@ -183,6 +190,11 @@ class ShardedWorkerPool:
         self.keep_event_log = keep_event_log
         self.batch_plane = batch_plane
         self.action_plane = action_plane
+        # Observability (repro.obs): per-shard metric registries, merged on
+        # scrape (obs_snapshot); one shared tracer (its collector's ring
+        # buffer is append-atomic, so shard threads share it lock-free).
+        self.metrics_enabled = metrics
+        self.tracer = tracer
         self._lock = threading.RLock()
         self._wfs: Dict[str, _WorkflowShards] = {}
 
@@ -270,6 +282,8 @@ class ShardedWorkerPool:
                 partitions=(),
                 batch_plane=self.batch_plane,
                 action_plane=self.action_plane,
+                metrics=self.metrics_enabled,
+                tracer=self.tracer,
             )
             wp.shards[member] = worker
             wp.group.join(member)
@@ -289,6 +303,10 @@ class ShardedWorkerPool:
         with worker.lock:  # fence: wait out any in-flight batch
             pass
         wp.group.leave(member)
+        # a graceful leave keeps its lifetime counters (WorkerStats.merge —
+        # the same fold the process pool applies to a clean child's exit
+        # stats, so the two runtimes' lifetime totals mean the same thing)
+        wp.retired.merge(worker.stats)
         self._rebalance(wp)
 
     def remove_shard(self, workflow: str, member: str) -> None:
@@ -346,6 +364,7 @@ class ShardedWorkerPool:
               % (member, workflow, self.shard_count(workflow)))
 
     def _rebalance(self, wp: _WorkflowShards) -> None:
+        wp.rebalances += 1
         assignment = wp.group.assignment()
         for member, worker in wp.shards.items():
             parts = tuple(assignment.get(member, ()))
@@ -459,6 +478,12 @@ class ShardedWorkerPool:
                 reasons[reason] = reasons.get(reason, 0) + 1
                 if worker is not None and worker.crashed:
                     crashed += 1
+                elif worker is not None:
+                    # clean departures keep their lifetime counters; a crash
+                    # does not (its uncommitted work is replayed and counted
+                    # again by the next owner — same as a SIGKILLed process
+                    # shard, whose counters die with it)
+                    wp.retired.merge(worker.stats)
             if reaped:
                 self._rebalance(wp)
         return {"reaped": reaped, "crashed": crashed, "reasons": reasons}
@@ -556,19 +581,46 @@ class ShardedWorkerPool:
             return {}
 
     # -- metrics (the autoscaler's and benchmark's observability surface) -------
-    def total_events_processed(self, workflow: str) -> int:
+    def folded_stats(self, workflow: str) -> WorkerStats:
+        """Lifetime ``WorkerStats`` for the workflow: live shards plus
+        cleanly-retired ones, all through ``WorkerStats.merge`` — the same
+        folding helper ``ProcessShardPool`` uses, so the two runtimes cannot
+        drift on what a lifetime total means."""
+        total = WorkerStats()
         with self._lock:
             wp = self._wfs.get(workflow)
             if wp is None:
-                return 0
-            return sum(w.stats.events_processed for w in wp.shards.values())
+                return total
+            total.merge(wp.retired)
+            for w in wp.shards.values():
+                total.merge(w.stats)
+        return total
+
+    def total_events_processed(self, workflow: str) -> int:
+        return self.folded_stats(workflow).events_processed
 
     def total_fires(self, workflow: str) -> int:
+        return self.folded_stats(workflow).fires
+
+    def obs_snapshot(self, workflow: str) -> Dict[str, Any]:
+        """The thread runtime's obs scrape: every live shard's registry
+        snapshot merged (lock-free on the recording side — registries are
+        per-shard), retired shards' counters folded back in, pool-level
+        counters on top."""
         with self._lock:
             wp = self._wfs.get(workflow)
-            if wp is None:
-                return 0
-            return sum(w.stats.fires for w in wp.shards.values())
+            workers = list(wp.shards.values()) if wp else []
+            retired = wp.retired.snapshot() if wp else {}
+            pool_counters = {
+                "tf_rebalance_total": wp.rebalances if wp else 0,
+                "tf_shard_failures_total": wp.failures if wp else 0,
+            }
+        snap = empty_snapshot()
+        for w in workers:
+            merge_snapshot(snap, w.metrics_snapshot())
+        fold_counters(snap, {f"tf_{k}_total": v for k, v in retired.items()})
+        fold_counters(snap, pool_counters)
+        return snap
 
     def metrics(self, workflow: str) -> Dict[str, Any]:
         with self._lock:
@@ -578,6 +630,7 @@ class ShardedWorkerPool:
                 "shards": len(shards),
                 "live_shards": self.live_shard_count(workflow),
                 "shard_failures": wp.failures if wp else 0,
+                "rebalances": wp.rebalances if wp else 0,
                 "generation": wp.group.generation if wp else 0,
                 "assignment": {m: list(w.partitions or ()) for m, w in shards.items()},
                 "partition_lags": self.event_store.partition_lags(workflow),
@@ -585,4 +638,5 @@ class ShardedWorkerPool:
                 "events_processed": {
                     m: w.stats.events_processed for m, w in shards.items()},
                 "total_lag": self.event_store.lag(workflow),
+                "obs": self.obs_snapshot(workflow),
             }

@@ -46,17 +46,31 @@ from ..core.events import CloudEvent  # noqa: F401  (re-exported for callers)
 from ..core.functions import FunctionBackend
 from ..core.statestore import FileStateStore
 from ..core.triggers import Trigger
+from ..core.worker import WorkerStats
+from ..obs.metrics import empty_snapshot, fold_counters, merge_snapshot
 from .group import ConsumerGroup
 from .partitioned import FilePartitionedEventStore
 from .pool import ShardWorker
 
 
 def _stats_dict(worker) -> Dict[str, int]:
-    s = worker.stats
-    return {"events_processed": s.events_processed, "fires": s.fires,
-            "activations": s.activations, "batches": s.batches,
-            "dlq_events": s.dlq_events,
-            "cpu_seconds": time.process_time()}
+    d = worker.stats.snapshot()
+    d["cpu_seconds"] = time.process_time()
+    return d
+
+
+def _metrics_dict(worker, store) -> Dict[str, Any]:
+    """The shard's full observability snapshot, shipped over the command
+    pipe: histogram registry + stats counters (``metrics_snapshot``) plus
+    the shard's own segment-append accounting and a CPU gauge."""
+    snap = worker.metrics_snapshot()
+    ap = store.append_stats(worker.workflow)
+    fold_counters(snap, {"tf_log_appends_total": ap["appends"]})
+    snap["counters"]["tf_log_append_seconds_total"] = (
+        snap["counters"].get("tf_log_append_seconds_total", 0)
+        + ap["append_seconds"])
+    snap["gauges"]["tf_cpu_seconds"] = time.process_time()
+    return snap
 
 
 def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
@@ -79,11 +93,25 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
     child_init = cfg.get("child_init")
     if child_init is not None:
         child_init(backend)
+    tracer = None
+    if cfg.get("trace"):
+        # span segment: SIGKILL-durable sink under <root>/spans; spans flush
+        # with the worker's checkpoint, open records immediately
+        from ..core.eventstore import SegmentLog
+        from ..obs.trace import SpanCollector, Tracer
+        os.makedirs(cfg["trace_dir"], exist_ok=True)
+        seg = SegmentLog(
+            os.path.join(cfg["trace_dir"], "spans.%s.jsonl" % member),
+            fsync=cfg["fsync"])
+        sample = 1.0 if cfg["trace"] == "full" else cfg.get("trace_sample", 0.1)
+        tracer = Tracer(sample=sample, collector=SpanCollector(segment=seg),
+                        tag=member)
     worker = ShardWorker(
         member, workflow, store, state, backend,
         batch_size=cfg["batch_size"], commit_policy=cfg["commit_policy"],
         keep_event_log=False, timers=None, partitions=(),
         batch_plane=cfg["batch_plane"], action_plane=cfg["action_plane"],
+        metrics=cfg.get("metrics", True), tracer=tracer,
     )
     conn.send(("ready", member))
     poll = cfg["poll"]
@@ -115,9 +143,13 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
                     conn.send(("ok", member))
                 elif op == "stats":
                     conn.send(("stats", member, _stats_dict(worker)))
+                elif op == "metrics":
+                    conn.send(("metrics", member, _metrics_dict(worker, store)))
                 elif op == "ping":
                     conn.send(("pong", member))
                 elif op == "stop":
+                    if tracer is not None:
+                        tracer.flush()
                     conn.send(("stopped", member, _stats_dict(worker)))
                     return
             try:
@@ -144,6 +176,8 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
                         time.monotonic() - last_active > idle_timeout:
                     # scale-to-zero: announce the clean exit (best effort —
                     # the parent classifies by exit code 0 regardless) and go
+                    if tracer is not None:
+                        tracer.flush()
                     try:
                         conn.send(("idle", member, _stats_dict(worker)))
                     except (BrokenPipeError, OSError):  # pragma: no cover
@@ -174,14 +208,15 @@ class _ProcShard:
 
 
 class _ProcWorkflow:
-    __slots__ = ("group", "shards", "next_id", "crashes", "triggers",
-                 "finished", "result", "unreaped", "retired_stats")
+    __slots__ = ("group", "shards", "next_id", "crashes", "rebalances",
+                 "triggers", "finished", "result", "unreaped", "retired_stats")
 
     def __init__(self, num_partitions: int) -> None:
         self.group = ConsumerGroup(num_partitions)
         self.shards: Dict[str, _ProcShard] = {}
         self.next_id = 0
         self.crashes = 0
+        self.rebalances = 0
         self.triggers: Dict[str, Dict[str, Any]] = {}  # parent spec cache
         self.finished = False
         self.result: Any = None
@@ -196,8 +231,7 @@ class _ProcWorkflow:
 
     def fold_retired(self, shard: _ProcShard) -> None:
         if shard.final_stats:
-            for k, v in shard.final_stats.items():
-                self.retired_stats[k] = self.retired_stats.get(k, 0) + v
+            WorkerStats.fold(self.retired_stats, shard.final_stats)
 
 
 class ProcessShardPool:
@@ -227,6 +261,9 @@ class ProcessShardPool:
         start_method: Optional[str] = None,
         child_init: Optional[Callable] = None,
         command_timeout: float = 30.0,
+        metrics: bool = True,
+        trace: Optional[str] = None,
+        trace_sample: float = 0.1,
     ) -> None:
         # ``command_timeout`` bounds every command-pipe round-trip.  Shard
         # processes service the pipe between batches, so it must exceed the
@@ -240,12 +277,22 @@ class ProcessShardPool:
         self.event_store = FilePartitionedEventStore(
             self.bus_root, num_partitions, fsync=fsync)
         self.state_store = FileStateStore(self.state_root)
+        # trace: None (off) | "sampled" (trace_sample of new roots) |
+        # "full" (every fire).  Span segments land under <root>/spans,
+        # one SIGKILL-durable file per shard process, stitched by
+        # trace_spans()/scripts/trace_report.py.
+        self.trace_dir = os.path.join(root, "spans")
+        if trace:
+            os.makedirs(self.trace_dir, exist_ok=True)
         self._cfg: Dict[str, Any] = {
             "batch_size": batch_size, "commit_policy": commit_policy,
             "poll": poll, "fsync": fsync, "batch_plane": batch_plane,
             "action_plane": action_plane, "child_init": child_init,
             "idle_timeout": None,
+            "metrics": metrics, "trace": trace, "trace_sample": trace_sample,
+            "trace_dir": self.trace_dir,
         }
+        self.metrics_enabled = metrics
         self.command_timeout = command_timeout
         if start_method is None:
             start_method = ("fork" if "fork" in mp.get_all_start_methods()
@@ -547,6 +594,8 @@ class ProcessShardPool:
         A shard found dead mid-rebalance leaves the group and the whole
         pass re-runs against the shrunken membership, so its partitions are
         granted to survivors instead of dangling until the next change."""
+        if _depth == 0:
+            wf.rebalances += 1
         assignment = wf.group.assignment()
         lost = False
         for shard in self._live(wf):
@@ -582,6 +631,8 @@ class ProcessShardPool:
             wf.result = msg[2]
         elif msg[0] == "stats":
             shard.final_stats = msg[2]
+        elif msg[0] == "metrics":
+            pass  # stale scrape reply — nothing to keep
         elif msg[0] == "idle":
             # the child's goodbye before a clean scale-to-zero exit
             shard.exit_reason = "idle"
@@ -664,19 +715,61 @@ class ProcessShardPool:
         logs) — the durable truth a replacement owner would recover."""
         return self.state_store.get_contexts(workflow).get(trigger_id, {})
 
+    def obs_snapshot(self, workflow: str) -> Dict[str, Any]:
+        """Aggregate metrics snapshot across shard *processes*: each live
+        shard is scraped over the command pipe (a shard that misses the
+        deadline is simply skipped — scrapes never kill shards), retired
+        shards contribute their folded exit stats, and the parent adds its
+        own membership counters.  Same shape as the thread pool's
+        ``obs_snapshot``, so ``merge_snapshot`` composes the two runtimes."""
+        snap = empty_snapshot()
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            if wf is None:
+                return snap
+            for shard in wf.shards.values():
+                if shard.alive:
+                    reply = self._request(wf, shard, ("metrics",), "metrics",
+                                          timeout=5.0)
+                    if reply is not None:
+                        merge_snapshot(snap, reply[2])
+                elif shard.final_stats:
+                    # stopped but not yet reaped/dropped: its exit stats are
+                    # the counters' last word (same rule as ``_stats``)
+                    fold_counters(snap, {
+                        "tf_%s_total" % k: v
+                        for k, v in shard.final_stats.items()
+                        if k in WorkerStats.FIELDS})
+            fold_counters(snap, {
+                "tf_%s_total" % k: v for k, v in wf.retired_stats.items()
+                if k in WorkerStats.FIELDS})
+            fold_counters(snap, {"tf_rebalance_total": wf.rebalances,
+                                 "tf_shard_failures_total": wf.crashes})
+        return snap
+
+    def trace_spans(self, workflow: Optional[str] = None) -> List[dict]:
+        """Stitched span records from every shard's span segment (one file
+        per shard process under ``<root>/spans``), deduplicated by span id —
+        completed records win over their open (pre-crash) twins."""
+        from ..obs.trace import load_spans, stitch_spans
+        return stitch_spans(load_spans([self.trace_dir]))
+
     def metrics(self, workflow: str) -> Dict[str, Any]:
         with self._lock:
             wf = self._wfs.get(workflow)
             shards = self._live(wf) if wf else []
-            return {
+            out = {
                 "shards": len(shards),
                 "crashes": wf.crashes if wf else 0,
+                "rebalances": wf.rebalances if wf else 0,
                 "generation": wf.group.generation if wf else 0,
                 "assignment": {s.member: list(s.partitions) for s in shards},
                 "partition_lags": self.event_store.partition_lags(workflow),
                 "commit_offsets": self.event_store.commit_offsets(workflow),
                 "total_lag": self.event_store.lag(workflow),
             }
+        out["obs"] = self.obs_snapshot(workflow)
+        return out
 
     def result(self, workflow: str) -> Any:
         with self._lock:

@@ -230,3 +230,17 @@ class KedaAutoscaler:
             for wf in self.tf.event_store.workflows():
                 n += self.tf.pool.live_shard_count(wf)
         return n
+
+    def metrics_snapshot(self) -> Dict:
+        """The autoscaler's counters as a named-metric snapshot — the same
+        shape the shard pools scrape, so ``merge_snapshot`` composes the
+        Fig-8 control loop into one export (``launch/serve.py``)."""
+        from ..obs.metrics import empty_snapshot, fold_counters
+        snap = empty_snapshot()
+        fold_counters(snap, {
+            "tf_scale_ups_total": self.scale_ups,
+            "tf_scale_downs_total": self.scale_downs,
+            "tf_restarts_total": self.restarts,
+        })
+        snap["gauges"]["tf_active_workers"] = self.active_workers
+        return snap

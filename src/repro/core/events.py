@@ -57,9 +57,14 @@ class CloudEvent:
     id: str = field(default_factory=_new_id)
     time: Optional[float] = None
     specversion: str = SPECVERSION
+    # CloudEvents extension attributes (the trace plane's ``tftrace``
+    # context lives here — repro.obs.trace).  None for the common untraced
+    # event: ``to_dict`` then emits nothing, keeping the bus codec's line
+    # format (and its cost) unchanged.
+    ext: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "specversion": self.specversion,
             "id": self.id,
             "source": self.source,
@@ -68,6 +73,9 @@ class CloudEvent:
             "time": self.time,
             "data": self.data,
         }
+        if self.ext is not None:
+            d["ext"] = self.ext
+        return d
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), separators=(",", ":"))
@@ -86,12 +94,26 @@ class CloudEvent:
             "id": d["id"],
             "time": d.get("time"),
             "specversion": d.get("specversion", SPECVERSION),
+            "ext": d.get("ext"),
         })
         return ev
 
     @staticmethod
     def from_json(s: str) -> "CloudEvent":
         return CloudEvent.from_dict(json.loads(s))
+
+
+def stamp_publish_time(events, now: Optional[float] = None) -> None:
+    """Set ``time`` (publish wall clock) on events that lack one — the
+    metrics plane's publish→consume lag reads it on the consumer side.
+    One ``time()`` call per batch; writes go through ``__dict__`` (frozen
+    dataclass, same trick as ``from_dict``)."""
+    import time as _time
+
+    t = now if now is not None else _time.time()
+    for e in events:
+        if e.time is None:
+            e.__dict__["time"] = t
 
 
 def termination_event(subject: str, result: Any = None, **extra: Any) -> CloudEvent:

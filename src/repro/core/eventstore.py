@@ -19,6 +19,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from collections import deque
 from contextlib import contextmanager
 from typing import Dict, Iterable, List, Optional
@@ -28,7 +29,7 @@ try:
 except ImportError:  # pragma: no cover - non-POSIX: single-process only
     fcntl = None  # type: ignore[assignment]
 
-from .events import CloudEvent
+from .events import CloudEvent, stamp_publish_time
 
 
 class StreamShard:
@@ -241,13 +242,19 @@ class SegmentLog:
     that *removes* the file must go through ``remove`` so both are dropped.
     """
 
-    __slots__ = ("path", "fsync", "_rf", "_af")
+    __slots__ = ("path", "fsync", "_rf", "_af", "append_count", "append_seconds")
 
     def __init__(self, path: str, fsync: bool = True) -> None:
         self.path = path
         self.fsync = fsync
         self._rf = None
         self._af = None
+        # Append accounting for the metrics plane (appends are the store's
+        # fsync boundary — tf_log_appends_total / tf_log_append_seconds_total
+        # in the shard scrape).  Two perf_counter reads per append, which is
+        # already a flush(+fsync) syscall — noise-level overhead.
+        self.append_count = 0
+        self.append_seconds = 0.0
 
     def size(self) -> int:
         try:
@@ -281,6 +288,7 @@ class SegmentLog:
     def append(self, lines: Iterable[str]) -> int:
         """Append one line per record (flush + optional fsync).  Returns the
         number of bytes written."""
+        t0 = time.perf_counter()
         data = "\n".join(lines) + "\n"
         f = self._af
         if f is None:
@@ -289,6 +297,8 @@ class SegmentLog:
         f.flush()
         if self.fsync:
             os.fsync(f.fileno())
+        self.append_count += 1
+        self.append_seconds += time.perf_counter() - t0
         return len(data)
 
     def scan(self, parse, offset: int = 0):
@@ -414,10 +424,13 @@ class MemoryEventStore(EventStore):
             self._shard(workflow)
 
     def publish(self, workflow: str, event: CloudEvent) -> None:
+        stamp_publish_time((event,))
         with self._lock:
             self._shard(workflow).publish((event,))
 
     def publish_batch(self, workflow: str, events: Iterable[CloudEvent]) -> None:
+        events = list(events)
+        stamp_publish_time(events)
         with self._lock:
             self._shard(workflow).publish(events)
 
@@ -596,6 +609,7 @@ class FileEventStore(EventStore):
         events = list(events)
         if not events:
             return
+        stamp_publish_time(events)
         with self._lock:
             self.create_stream(workflow)
             log, _, _ = self._seglogs(workflow)

@@ -203,6 +203,25 @@ class Triggerflow:
                 return self.pool.result(workflow)
         return self.worker(workflow).run_until_complete(timeout=timeout)
 
+    def metrics_snapshot(self, workflow: Optional[str] = None) -> Dict[str, Any]:
+        """One aggregated metrics snapshot for the whole deployment: every
+        classic facade worker plus, when a shard pool serves the workflows,
+        the pool's per-shard registries (thread pool merges in-process;
+        process pool scrapes over the command pipe)."""
+        from ..obs.metrics import empty_snapshot, merge_snapshot
+        snap = empty_snapshot()
+        with self._lock:
+            workers = list(self._workers.values())
+        for w in workers:
+            if workflow is None or w.workflow == workflow:
+                merge_snapshot(snap, w.metrics_snapshot())
+        if self.pool is not None and hasattr(self.pool, "obs_snapshot"):
+            wfs = [workflow] if workflow is not None \
+                else self.event_store.workflows()
+            for wf in wfs:
+                merge_snapshot(snap, self.pool.obs_snapshot(wf))
+        return snap
+
     def shutdown(self) -> None:
         if self.pool is not None:
             self.pool.stop_all()

@@ -58,6 +58,7 @@ from .batch import CLAIMABLE_CONDITIONS
 from .conditions import BATCHED_CONDITIONS, CONDITIONS, FIRE_RUN_CONDITIONS
 from .context import TriggerContext
 from .events import CloudEvent
+from ..obs.trace import inject as _trace_inject
 from .eventstore import EventStore
 from .functions import FunctionBackend
 from .statestore import StateStore
@@ -65,7 +66,13 @@ from .triggers import Trigger
 
 
 class WorkerStats:
-    __slots__ = ("events_processed", "activations", "fires", "batches", "dlq_events")
+    """Hot-loop counters.  ``snapshot``/``merge``/``fold`` are THE folding
+    helpers — both shard pools (thread and process) aggregate lifetime
+    totals through them, so the two runtimes can't drift on what a stat
+    means or which keys exist."""
+
+    FIELDS = ("events_processed", "activations", "fires", "batches", "dlq_events")
+    __slots__ = FIELDS
 
     def __init__(self) -> None:
         self.events_processed = 0
@@ -73,6 +80,28 @@ class WorkerStats:
         self.fires = 0
         self.batches = 0
         self.dlq_events = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return {f: getattr(self, f) for f in self.FIELDS}
+
+    def merge(self, other) -> "WorkerStats":
+        """Add another ``WorkerStats`` (or a snapshot dict) into this one."""
+        if isinstance(other, WorkerStats):
+            other = other.snapshot()
+        for f in self.FIELDS:
+            setattr(self, f, getattr(self, f) + other.get(f, 0))
+        return self
+
+    @staticmethod
+    def fold(into: Dict[str, float], frm) -> Dict[str, float]:
+        """Accumulate a stats mapping (snapshot or ``WorkerStats``) into a
+        plain dict, preserving rider keys (e.g. the process runtime's
+        ``cpu_seconds``) that travel alongside the core fields."""
+        if isinstance(frm, WorkerStats):
+            frm = frm.snapshot()
+        for k, v in frm.items():
+            into[k] = into.get(k, 0) + v
+        return into
 
 
 class _Entry:
@@ -120,6 +149,8 @@ class TFWorker:
         batch_plane: bool = True,
         action_plane: bool = True,
         vector_join: Optional[str] = None,
+        metrics: bool = True,
+        tracer=None,
     ) -> None:
         self.workflow = workflow
         self.event_store = event_store
@@ -158,6 +189,20 @@ class TFWorker:
         self._sink: List[CloudEvent] = []  # internal event buffer (§5.2)
         self.event_log: List[CloudEvent] = []  # native event-sourcing log (§5.3)
         self.stats = WorkerStats()
+        # The metrics plane (repro.obs): stage-boundary histograms recorded
+        # at batch/slice granularity — see docs/ARCHITECTURE.md §7.  Default
+        # on; ``metrics=False`` removes every recording from the hot loop.
+        self._metrics = None
+        if metrics:
+            from ..obs.metrics import WorkerMetrics
+
+            self._metrics = WorkerMetrics()
+        # The trace plane: a Tracer makes fires open causal spans and stamps
+        # produced events with (trace_id, span_id) extension attributes.
+        self._tracer = tracer
+        # (trace_id, span_id, span) of the fire currently running its
+        # action — sink()/sink_batch() stamp it onto produced events.
+        self._trace_ctx: Optional[tuple] = None
         self.finished = False
         self.result: Any = None
         self._stop = threading.Event()
@@ -293,16 +338,51 @@ class TFWorker:
 
     def sink(self, event: CloudEvent) -> None:
         """Internal event production from condition/action code (§5.2)."""
+        tc = self._trace_ctx
+        if tc is not None:
+            _trace_inject((event,), tc[0], tc[1])
+            self._tracer.persist_open(tc[2])
         self._sink.append(event)
-        self.event_store.publish(self.workflow, event)
+        m = self._metrics
+        if m is None:
+            self.event_store.publish(self.workflow, event)
+        else:
+            t0 = time.perf_counter()
+            self.event_store.publish(self.workflow, event)
+            m.publish.observe(time.perf_counter() - t0)
 
     def sink_batch(self, events: List[CloudEvent]) -> None:
         """Bulk ``sink``: one ``publish_batch`` (one append per partition,
         one commit-log write on durable stores) for a whole fire run."""
         if not events:
             return
+        tc = self._trace_ctx
+        if tc is not None:
+            # downstream events link to the fire producing them; the open
+            # span record is made durable *before* the children exist, so a
+            # SIGKILL here can't orphan them (obs.trace module docs)
+            _trace_inject(events, tc[0], tc[1])
+            self._tracer.persist_open(tc[2])
         self._sink.extend(events)
-        self.event_store.publish_batch(self.workflow, events)
+        m = self._metrics
+        if m is None:
+            self.event_store.publish_batch(self.workflow, events)
+        else:
+            t0 = time.perf_counter()
+            self.event_store.publish_batch(self.workflow, events)
+            m.publish.observe_batch(len(events), time.perf_counter() - t0)
+
+    def metrics_snapshot(self) -> Dict:
+        """The worker's observability scrape: the registry snapshot with the
+        ``WorkerStats`` counters folded in under their metric names — one
+        export surface whether metrics recording is on or off."""
+        from ..obs.metrics import empty_snapshot, fold_counters
+
+        snap = (self._metrics.registry.snapshot()
+                if self._metrics is not None else empty_snapshot())
+        fold_counters(snap, {f"tf_{k}_total": v
+                             for k, v in self.stats.snapshot().items()})
+        return snap
 
     def set_result(self, value: Any) -> None:
         self.finished = True
@@ -455,10 +535,21 @@ class TFWorker:
                 stats.activations += idx + 1
                 event = sl[idx]
                 self._slice_pos = pos_base + pos + idx
+                tracer = self._tracer
+                span = None
+                if tracer is not None:
+                    span = tracer.fire_span(event, trg.trigger_id,
+                                            self.workflow, 1)
+                    if span is not None:
+                        self._trace_ctx = (span["trace"], span["span"], span)
                 try:
                     entry.afn(ctx, event, entry.aspec)
                 except Exception:  # noqa: BLE001
                     traceback.print_exc()
+                finally:
+                    if span is not None:
+                        tracer.end(span)
+                        self._trace_ctx = None
                 if self._struct_version != ver:
                     ver = self._struct_version
                     if changed_at is None:
@@ -513,10 +604,25 @@ class TFWorker:
                 return n - 1, False, changed_at
             fired = events if len(fires) == n else [events[i] for i in fires]
             self._slice_pos = pos_base + fires[0]
+            tracer = self._tracer
+            span = None
+            if tracer is not None:
+                span = tracer.fire_span(fired[0], trg.trigger_id,
+                                        self.workflow, len(fires))
+                if span is not None:
+                    self._trace_ctx = (span["trace"], span["span"], span)
+            m = self._metrics
+            t_fire = time.perf_counter() if m is not None else 0.0
             try:
                 entry.bafn(ctx, fired, entry.aspec)
             except Exception:  # noqa: BLE001
                 traceback.print_exc()
+            finally:
+                if m is not None:
+                    m.fire.observe_batch(len(fires), time.perf_counter() - t_fire)
+                if span is not None:
+                    tracer.end(span)
+                    self._trace_ctx = None
             if self._struct_version != ver and changed_at is None:
                 changed_at = fires[0]
             stats.fires += len(fires)
@@ -538,7 +644,15 @@ class TFWorker:
             if not entries:
                 # Unknown subject: drop (but count).  Nothing to wait for, so
                 # the events are committed, exactly like the scalar path.
-                stats.dlq_events += n - pos
+                # Counting goes through ``_dlq_counted`` like the quarantine
+                # branch below: one increment per dropped event, however many
+                # deliveries it takes to commit (at-least-once redelivery
+                # under on_fire must not re-count).
+                counted = self._dlq_counted
+                for e in events[pos:]:
+                    if e.id not in counted:
+                        counted.add(e.id)
+                        stats.dlq_events += 1
                 processed_ids.extend(e.id for e in events[pos:])
                 return fired_any
             sl = events[pos:] if pos else events
@@ -637,6 +751,14 @@ class TFWorker:
             batch = self._consume(max_events or self.batch_size)
             if not batch and not self._sink:
                 return 0
+            m = self._metrics
+            if m is not None and batch:
+                # publish→consume lag at batch granularity: the oldest
+                # event's publish stamp bounds every event in the batch
+                t_pub = batch[0].time
+                if t_pub is not None:
+                    m.consume_lag.observe_batch(
+                        len(batch), max(0.0, time.time() - t_pub) * len(batch))
             # Stores that only ever hand out uncommitted events
             # (``UNCOMMITTED_ONLY``) make the per-event committed round-trip a
             # provable no-op; in-flight dedup against ``_seen`` suffices.
@@ -660,6 +782,7 @@ class TFWorker:
             if (vector_plane is not None and not seen and is_committed is None
                     and event_log is None and not self._sink and len(batch) > 1
                     and self._has_join_triggers()):
+                t_join = time.perf_counter() if m is not None else 0.0
                 try:
                     res = vector_plane.triage(batch, self._entries_for, stats)
                 except Exception:  # noqa: BLE001
@@ -671,6 +794,9 @@ class TFWorker:
                     res = None
                 if res is not None:
                     handled_ids, batch = res
+                    if m is not None and handled_ids:
+                        m.join_kernel.observe_batch(
+                            len(handled_ids), time.perf_counter() - t_join)
                     n_new += len(handled_ids)
                     processed_ids.extend(handled_ids)
                     # protect the uncommitted window: even under every_batch
@@ -680,6 +806,7 @@ class TFWorker:
                     seen.update(handled_ids)
             queue = batch
             qi = 0
+            t_eval = time.perf_counter() if m is not None else 0.0
             while qi < len(queue):
                 # Group the segment into type-uniform *runs* per subject:
                 # consecutive same-type events of one subject share a slice,
@@ -717,11 +844,18 @@ class TFWorker:
                         self._sink.clear()
             stats.events_processed += n_new
             stats.batches += 1
+            if m is not None and n_new:
+                m.batch_eval.observe_batch(n_new, time.perf_counter() - t_eval)
             if processed_ids:
                 self.last_active = time.monotonic()
             # Checkpoint: contexts first, then commit (§3.4 ordering).
             if fired_any or (self.commit_policy == "every_batch" and processed_ids):
-                self._checkpoint(processed_ids)
+                if m is None:
+                    self._checkpoint(processed_ids)
+                else:
+                    t_ck = time.perf_counter()
+                    self._checkpoint(processed_ids)
+                    m.checkpoint.observe(time.perf_counter() - t_ck)
                 if fired_any and self._dlq_size():
                     self._redrive()
             return len(processed_ids)
@@ -733,8 +867,13 @@ class TFWorker:
         matches = self._by_subject.get(event.subject)
         if not matches:
             # Unknown subject: drop (but count). Sequenced-but-disabled triggers
-            # are handled below; a totally unknown event has nothing to wait for.
-            self.stats.dlq_events += 1
+            # are handled below; a totally unknown event has nothing to wait
+            # for.  Guarded by ``_dlq_counted`` exactly like the batch plane's
+            # unknown-subject branch and the quarantine path: one increment
+            # per dropped event across redeliveries, never one per delivery.
+            if event.id not in self._dlq_counted:
+                self._dlq_counted.add(event.id)
+                self.stats.dlq_events += 1
             return False
         any_enabled = False
         for trg in matches:
@@ -751,10 +890,21 @@ class TFWorker:
                 traceback.print_exc()
                 ok = False
             if ok:
+                tracer = self._tracer
+                span = None
+                if tracer is not None:
+                    span = tracer.fire_span(event, trg.trigger_id,
+                                            self.workflow, 1)
+                    if span is not None:
+                        self._trace_ctx = (span["trace"], span["span"], span)
                 try:
                     run_action(trg.action, ctx, event)
                 except Exception:  # noqa: BLE001
                     traceback.print_exc()
+                finally:
+                    if span is not None:
+                        tracer.end(span)
+                        self._trace_ctx = None
                 self.stats.fires += 1
                 fired = True
                 if trg.transient:
@@ -776,6 +926,13 @@ class TFWorker:
             batch = self._consume(max_events or self.batch_size)
             if not batch and not self._sink:
                 return 0
+            m = self._metrics
+            if m is not None and batch:
+                t_pub = batch[0].time
+                if t_pub is not None:
+                    m.consume_lag.observe_batch(
+                        len(batch), max(0.0, time.time() - t_pub) * len(batch))
+            t_eval = time.perf_counter() if m is not None else 0.0
             # Same predicate as the batch plane: on an UNCOMMITTED_ONLY store
             # the per-event is_committed round-trip can never return True —
             # for partitioned *and* whole-stream consumers alike — so dedup
@@ -807,11 +964,19 @@ class TFWorker:
                     queue.extend(self._own_sink_events())
                     self._sink.clear()
             self.stats.batches += 1
+            if m is not None and processed_ids:
+                m.batch_eval.observe_batch(
+                    len(processed_ids), time.perf_counter() - t_eval)
             if processed_ids:
                 self.last_active = time.monotonic()
             # Checkpoint: contexts first, then commit (§3.4 ordering).
             if fired_any or (self.commit_policy == "every_batch" and processed_ids):
-                self._checkpoint(processed_ids)
+                if m is None:
+                    self._checkpoint(processed_ids)
+                else:
+                    t_ck = time.perf_counter()
+                    self._checkpoint(processed_ids)
+                    m.checkpoint.observe(time.perf_counter() - t_ck)
                 if fired_any and self._dlq_size():
                     self._redrive()
             return len(processed_ids)
@@ -846,6 +1011,10 @@ class TFWorker:
                 self.state_store.put_triggers(self.workflow, specs)
             self._dirty_triggers.clear()
         self._commit(processed_ids)
+        if self._tracer is not None:
+            # span durability rides the checkpoint: a batch's fire spans hit
+            # the segment sink with the same cadence as its effects
+            self._tracer.flush()
         self._seen.difference_update(processed_ids)
         if self._dlq_counted:
             # a once-quarantined event that finally committed leaves the DLQ

@@ -19,6 +19,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--metrics-dump", metavar="PREFIX", default=None,
+                    help="on exit, write the aggregated metrics snapshot to "
+                         "PREFIX.prom (Prometheus text) and PREFIX.json")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -41,6 +44,14 @@ def main() -> None:
         # shutdown began, leaving them unreaped), then shutdown reclaims
         # everything the drained tick started.
         scaler.stop()
+        if args.metrics_dump:
+            # scrape before shutdown tears the workers down: the snapshot
+            # folds every worker/shard registry + the autoscaler's counters
+            from repro.obs.metrics import dump_metrics, merge_snapshot
+            snap = tf.metrics_snapshot()
+            merge_snapshot(snap, scaler.metrics_snapshot())
+            for path in dump_metrics(snap, args.metrics_dump):
+                print(f"metrics dumped to {path}")
         tf.shutdown()
 
 
