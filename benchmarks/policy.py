@@ -1,0 +1,69 @@
+"""Failure-policy plane overhead: the Table-1 noop action-plane workload with
+a retry policy attached but never triggered.
+
+Two rows through the real TF-Worker on the action plane (the fastest
+committed path, so any per-batch cost the policy plane adds is maximally
+visible):
+
+* policy_off — no retry policy (the committed baseline configuration).
+* policy_idle — every trigger carries ``RetryPolicy(max_attempts=3)`` but no
+  action ever fails: the policy plane's fixed costs (per-entry compile, the
+  per-event success hook, the defer-filter's empty-map check) are all that
+  can show.  Gated in CI at >= 0.90x of policy_off (``scripts/perf_gate.py``).
+
+Note the idle policy deliberately leaves ``action_timeout`` unset: a timeout
+moves every attempt onto a watchdog thread, which is a real (documented)
+cost, not plane overhead.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.core import Triggerflow, make_trigger, termination_event
+
+
+def bench_policy_noop(n_events: int = 100_000,
+                      retry: Optional[dict] = None) -> Dict:
+    """``obs.bench_obs_noop`` with a retry policy toggled instead of the
+    metrics plane (metrics stay at their default — identical in both rows)."""
+    tf = Triggerflow(inline_functions=True, commit_policy="every_batch")
+    tf.create_workflow("load")
+    tf.add_trigger("load", make_trigger(
+        "e", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="noop", transient=False, retry=retry))
+    events = [termination_event("e", i) for i in range(n_events)]
+    tf.event_store.publish_batch("load", events)
+    w = tf.worker("load")
+    w.keep_event_log = False
+    w.action_plane = True
+    t0 = time.perf_counter()
+    done = 0
+    while done < n_events:
+        done += w.run_once(4096)
+    dt = time.perf_counter() - t0
+    return {"events": n_events, "seconds": dt, "events_per_s": n_events / dt}
+
+
+IDLE_POLICY = {"max_attempts": 3, "backoff_base": 0.05}
+
+
+def run(reps: int = 3) -> List[Dict]:
+    # Interleaved best-of (same rationale as load_test.run / obs.run).
+    best = {"off": 0.0, "idle": 0.0}
+    for _ in range(reps):
+        best["off"] = max(best["off"],
+                          bench_policy_noop()["events_per_s"])
+        best["idle"] = max(best["idle"],
+                           bench_policy_noop(retry=IDLE_POLICY)["events_per_s"])
+    return [
+        {"name": "policy.noop_policy_off", "us_per_call": 1e6 / best["off"],
+         "events_per_s": best["off"],
+         "derived": f"{best['off']:.0f} events/s "
+                    f"(no retry policy, best of {reps})"},
+        {"name": "policy.noop_policy_idle", "us_per_call": 1e6 / best["idle"],
+         "events_per_s": best["idle"],
+         "derived": f"{best['idle']:.0f} events/s (idle retry policy, "
+                    f"{best['idle'] / best['off']:.2f}x of policy-off, "
+                    f"best of {reps})"},
+    ]

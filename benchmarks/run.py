@@ -26,6 +26,7 @@ SUITES = [
     ("fedlearn_bench", "Fig 17 — federated learning rounds"),
     ("roofline", "§Roofline — per (arch × shape) dry-run terms"),
     ("obs", "Observability — metrics/trace plane overhead on the noop action plane"),
+    ("policy", "Failure policy — idle retry-policy overhead on the noop action plane"),
 ]
 
 

@@ -144,6 +144,30 @@ def main() -> int:
         with open(step_summary, "a") as f:
             f.write("\n" + obs_line)
 
+    # failure-policy plane overhead gate: a retry policy that never fires
+    # must keep >= 90% of the no-policy noop action-plane throughput.  Same
+    # absolute-ratio construction as the observability gate above.
+    from benchmarks.policy import IDLE_POLICY, bench_policy_noop
+    pol_off = pol_idle = 0.0
+    for _ in range(args.reps):
+        pol_off = max(pol_off,
+                      bench_policy_noop(n_events=50_000)["events_per_s"])
+        pol_idle = max(pol_idle,
+                       bench_policy_noop(n_events=50_000,
+                                         retry=IDLE_POLICY)["events_per_s"])
+    pol_ratio = pol_idle / pol_off
+    pol_line = (f"failure-policy overhead: policy-idle {pol_idle:,.0f} ev/s vs "
+                f"policy-off {pol_off:,.0f} ev/s = {pol_ratio:.2f}x "
+                f"(floor 0.90x)\n")
+    if pol_ratio < 0.9:
+        failures.append(
+            f"failure-policy: idle-policy ratio {pol_ratio:.2f}x is below the "
+            f"0.90x floor -> retry plumbing costs >10% when never triggered")
+    print(pol_line, end="")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write("\n" + pol_line)
+
     # deterministic idle-tick check: syscall counts, not wall time, so it
     # gates even when no committed baseline exists
     from benchmarks.autoscale import bench_idle_tick_stats

@@ -122,7 +122,10 @@ class PartitionedStoreBase(EventStore):
     def _dlq_size_p(self, workflow: str, p: int) -> int:
         raise NotImplementedError
 
-    def _redrive_p(self, workflow: str, p: int) -> int:
+    def _redrive_p(self, workflow: str, p: int, reasons=None) -> int:
+        raise NotImplementedError
+
+    def _dlq_by_reason_p(self, workflow: str, p: int) -> Dict[str, int]:
         raise NotImplementedError
 
     def _to_dlq_p(self, workflow: str, p: int, event: CloudEvent) -> None:
@@ -176,13 +179,20 @@ class PartitionedStoreBase(EventStore):
         self._to_dlq_p(
             workflow, self.partition_for(event.subject, workflow), event)
 
-    def redrive(self, workflow: str) -> int:
+    def redrive(self, workflow: str, reasons=None) -> int:
         return self.redrive_partitions(
-            workflow, range(self.num_partitions_for(workflow)))
+            workflow, range(self.num_partitions_for(workflow)), reasons)
 
     def dlq_size(self, workflow: str) -> int:
         return self.dlq_size_partitions(
             workflow, range(self.num_partitions_for(workflow)))
+
+    def dlq_by_reason(self, workflow: str) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for p in range(self.num_partitions_for(workflow)):
+            for r, n in self._dlq_by_reason_p(workflow, p).items():
+                out[r] = out.get(r, 0) + n
+        return out
 
     def committed_events(self, workflow: str) -> List[CloudEvent]:
         """Committed events, per-partition commit order, concatenated by
@@ -261,10 +271,11 @@ class PartitionedStoreBase(EventStore):
             return 0
         return sum(self._dlq_size_p(workflow, p) for p in partitions)
 
-    def redrive_partitions(self, workflow: str, partitions: Iterable[int]) -> int:
+    def redrive_partitions(self, workflow: str, partitions: Iterable[int],
+                           reasons=None) -> int:
         if not self._have(workflow):
             return 0
-        return sum(self._redrive_p(workflow, p) for p in partitions)
+        return sum(self._redrive_p(workflow, p, reasons) for p in partitions)
 
 
 class PartitionedEventStore(PartitionedStoreBase):
@@ -353,10 +364,15 @@ class PartitionedEventStore(PartitionedStoreBase):
         with shard.lock:
             return shard.dlq_size()
 
-    def _redrive_p(self, workflow: str, p: int) -> int:
+    def _redrive_p(self, workflow: str, p: int, reasons=None) -> int:
         shard = self._parts[workflow][p]
         with shard.lock:
-            return shard.redrive()
+            return shard.redrive(reasons)
+
+    def _dlq_by_reason_p(self, workflow: str, p: int) -> Dict[str, int]:
+        shard = self._parts[workflow][p]
+        with shard.lock:
+            return shard.dlq_by_reason()
 
     def _to_dlq_p(self, workflow: str, p: int, event: CloudEvent) -> None:
         shard = self._shards(workflow)[p]
@@ -379,8 +395,10 @@ class PartitionedEventStore(PartitionedStoreBase):
             return shard.committed_events()
 
 
-#: DLQ-ledger record marking "everything quarantined so far went back into
-#: the stream" (``redrive``).  Ordinary ledger records are CloudEvent dicts.
+#: DLQ-ledger record marking "quarantined events went back into the stream"
+#: (``redrive``).  A bare marker redrives everything; an optional ``reasons``
+#: list restricts it to matching quarantine reasons (poison stays put).
+#: Ordinary ledger records are CloudEvent dicts.
 _REDRIVE_MARKER = {"__redrive__": 1}
 
 
@@ -477,8 +495,9 @@ class _FilePartition:
         ops, self.dlq_off = self.dlq.scan(json.loads, self.dlq_off)
         for op in ops:
             if "__redrive__" in op:
-                self.dlq_ids.clear()
-                shard.redrive()
+                reasons = op.get("reasons")
+                shard.redrive(reasons)
+                self.dlq_ids = {e.id for e in shard.dlq}
             else:
                 ev = CloudEvent.from_dict(op)
                 if ev.id in shard.committed_ids or ev.id in self.dlq_ids:
@@ -853,18 +872,32 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             fp.sync(scan_log=False)
             return fp.shard.dlq_size()
 
-    def _redrive_p(self, workflow: str, p: int) -> int:
+    def _redrive_p(self, workflow: str, p: int, reasons=None) -> int:
         fp = self._parts(workflow)[p]
         with fp.shard.lock, self._plock(fp):
             fp.sync(full=True)
             if not fp.shard.dlq_size():
                 return 0
+            marker = dict(_REDRIVE_MARKER)
+            if reasons is not None:
+                marker["reasons"] = list(reasons)
+            n = fp.shard.redrive(reasons)
+            if not n:
+                return 0
+            # Ledger marker goes in regardless of how many matched on *this*
+            # mirror — other mirrors replay the same selection against their
+            # own state.
             fp.dlq_off = self._append_clean(
-                fp.dlq, fp.dlq_off, [json.dumps(_REDRIVE_MARKER)])
-            fp.dlq_ids.clear()
-            n = fp.shard.redrive()
+                fp.dlq, fp.dlq_off, [json.dumps(marker)])
+            fp.dlq_ids = {e.id for e in fp.shard.dlq}
         self._bump_notify(workflow)
         return n
+
+    def _dlq_by_reason_p(self, workflow: str, p: int) -> Dict[str, int]:
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock:
+            fp.sync(scan_log=False)
+            return fp.shard.dlq_by_reason()
 
     def _to_dlq_p(self, workflow: str, p: int, event: CloudEvent) -> None:
         fp = self._parts(workflow)[p]

@@ -31,6 +31,7 @@ from typing import Any, Dict, List, Optional
 
 from ..core.eventstore import EventStore
 from ..core.functions import FunctionBackend
+from ..core.policy import REASON_DISABLED, CircuitBreaker
 from ..core.statestore import StateStore
 from ..core.triggers import Trigger
 from ..core.worker import TFWorker, WorkerStats
@@ -145,9 +146,11 @@ class _Runner(threading.Thread):
 
 class _WorkflowShards:
     __slots__ = ("group", "shards", "runner_of", "next_id",
-                 "failures", "failed_unreaped", "rebalances", "retired")
+                 "failures", "failed_unreaped", "rebalances", "retired",
+                 "breaker")
 
-    def __init__(self, num_partitions: int) -> None:
+    def __init__(self, num_partitions: int,
+                 breaker: Optional[CircuitBreaker] = None) -> None:
         self.group = ConsumerGroup(num_partitions)
         self.shards: Dict[str, ShardWorker] = {}
         self.runner_of: Dict[str, _Runner] = {}
@@ -158,6 +161,8 @@ class _WorkflowShards:
         # lifetime stats of departed shards, folded via WorkerStats so they
         # aggregate identically to the process pool's retired_stats
         self.retired = WorkerStats()
+        # crash-loop breaker: consecutive-crash streak gates start_shards
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
 
 
 class ShardedWorkerPool:
@@ -176,6 +181,7 @@ class ShardedWorkerPool:
         action_plane: bool = True,
         metrics: bool = True,
         tracer=None,
+        breaker: Optional[Dict[str, Any]] = None,
     ) -> None:
         if not hasattr(event_store, "consume_partitions"):
             raise TypeError(
@@ -195,6 +201,9 @@ class ShardedWorkerPool:
         # buffer is append-atomic, so shard threads share it lock-free).
         self.metrics_enabled = metrics
         self.tracer = tracer
+        # CircuitBreaker kwargs applied to every workflow's crash-loop
+        # breaker (threshold / backoff_* / cooldown — see core.policy).
+        self.breaker_conf = dict(breaker) if breaker else {}
         self._lock = threading.RLock()
         self._wfs: Dict[str, _WorkflowShards] = {}
 
@@ -208,7 +217,9 @@ class ShardedWorkerPool:
         wp = self._wfs.get(workflow)
         n = self._np_for(workflow)
         if wp is None:
-            wp = self._wfs.setdefault(workflow, _WorkflowShards(n))
+            wp = self._wfs.setdefault(
+                workflow,
+                _WorkflowShards(n, CircuitBreaker(**self.breaker_conf)))
         elif wp.group.num_partitions != n:
             # a per-workflow partition pin landed after this group was sized
             # (e.g. the workflow was touched before create_stream pinned it):
@@ -233,6 +244,11 @@ class ShardedWorkerPool:
             if wp is not None:
                 return wp.group.num_partitions
         return self._np_for(workflow)
+
+    def breaker_of(self, workflow: str) -> CircuitBreaker:
+        """The workflow's crash-loop breaker (autoscaler gate + tests)."""
+        with self._lock:
+            return self._wf(workflow).breaker
 
     def local_worker(self, workflow: str) -> Optional[ShardWorker]:
         """First in-process shard worker, if any (the service facade's
@@ -307,6 +323,7 @@ class ShardedWorkerPool:
         # the same fold the process pool applies to a clean child's exit
         # stats, so the two runtimes' lifetime totals mean the same thing)
         wp.retired.merge(worker.stats)
+        wp.breaker.record_clean()
         self._rebalance(wp)
 
     def remove_shard(self, workflow: str, member: str) -> None:
@@ -340,6 +357,7 @@ class ShardedWorkerPool:
             with worker.lock:  # fence: wait out the (discarding) batch
                 pass
             wp.group.leave(member)
+            wp.breaker.record_crash()
             self._rebalance(wp)
 
     def _shard_exited(self, workflow: str, member: str, worker) -> None:
@@ -358,6 +376,7 @@ class ShardedWorkerPool:
             wp.failures += 1
             wp.failed_unreaped += 1
             wp.group.leave(member)
+            wp.breaker.record_crash()
             self._rebalance(wp)
         print("[pool] shard %s of workflow %r failed its batch; "
               "partitions rebalanced to %d remaining shard(s)"
@@ -396,10 +415,22 @@ class ShardedWorkerPool:
         threads.  At most ``max_threads`` (default: core count) runners serve
         a workflow — shards are *tasks*, threads are execution slots."""
         with self._lock:
-            if self.shard_count(workflow) < count:
-                for _ in range(count - self.shard_count(workflow)):
-                    self.add_shard(workflow)
             wp = self._wf(workflow)
+            need = count - len(wp.shards)
+            if need > 0:
+                # crash-loop breaker: a streak of shard crashes makes fresh
+                # starts wait out an exponential backoff; past the threshold
+                # the circuit opens (no starts) until a cooldown admits one
+                # half-open probe.  Existing (stopped) shards reschedule
+                # freely — only NEW capacity is gated.
+                granted = wp.breaker.allow_start(need)
+                if granted < need:
+                    print("[pool] circuit breaker for workflow %r (%s, "
+                          "streak=%d): granting %d/%d shard start(s)"
+                          % (workflow, wp.breaker.state, wp.breaker.streak,
+                             granted, need))
+                for _ in range(granted):
+                    self.add_shard(workflow)
             cap = max(1, max_threads or os.cpu_count() or 2)
             unassigned = []
             for member, worker in wp.shards.items():
@@ -478,7 +509,9 @@ class ShardedWorkerPool:
                 reasons[reason] = reasons.get(reason, 0) + 1
                 if worker is not None and worker.crashed:
                     crashed += 1
+                    wp.breaker.record_crash()
                 elif worker is not None:
+                    wp.breaker.record_clean()
                     # clean departures keep their lifetime counters; a crash
                     # does not (its uncommitted work is replayed and counted
                     # again by the next owner — same as a SIGKILLed process
@@ -527,8 +560,32 @@ class ShardedWorkerPool:
                 if self.event_store.lag(workflow) == 0:
                     return None
                 if time.monotonic() > deadline:
-                    raise TimeoutError(f"workflow {workflow} did not drain")
+                    raise TimeoutError(
+                        f"workflow {workflow} did not drain: "
+                        + self.failure_diagnostics(workflow))
                 time.sleep(poll)
+
+    def failure_diagnostics(self, workflow: str) -> str:
+        """One-line triage string for drain timeouts: per-partition lag, DLQ
+        breakdown by reason, live shard count and breaker state."""
+        try:
+            lag_vec = self.event_store.partition_lags(workflow)
+        except Exception:  # noqa: BLE001 - diagnostics must never raise
+            lag_vec = []
+        lags = lag_vec if isinstance(lag_vec, dict) else dict(enumerate(lag_vec))
+        dbr = getattr(self.event_store, "dlq_by_reason", None)
+        try:
+            dlq = dbr(workflow) if dbr is not None else {}
+        except Exception:  # noqa: BLE001
+            dlq = {}
+        with self._lock:
+            wp = self._wfs.get(workflow)
+            breaker = wp.breaker.snapshot() if wp else {}
+        return (f"lag={sum(lags.values())} "
+                f"partition_lags={ {p: n for p, n in lags.items() if n} } "
+                f"dlq_by_reason={dlq} "
+                f"live_shards={self.live_shard_count(workflow)} "
+                f"breaker={breaker}")
 
     # -- trigger management (broadcast to every shard) --------------------------
     def add_trigger(self, workflow: str, trigger: Trigger) -> str:
@@ -562,7 +619,10 @@ class ShardedWorkerPool:
             if enabled and subjects:
                 parts = {self.event_store.partition_for(s, workflow)
                          for s in subjects}
-                self.event_store.redrive_partitions(workflow, parts)
+                # only ``disabled`` quarantines become deliverable again;
+                # poison:* stays put until an operator redrives explicitly
+                self.event_store.redrive_partitions(
+                    workflow, parts, reasons=(REASON_DISABLED,))
 
     def trigger_context(self, workflow: str, trigger_id: str) -> Dict[str, Any]:
         """Context as seen by the shard that owns the trigger's subject."""
@@ -611,15 +671,21 @@ class ShardedWorkerPool:
             wp = self._wfs.get(workflow)
             workers = list(wp.shards.values()) if wp else []
             retired = wp.retired.snapshot() if wp else {}
+            breaker = wp.breaker.snapshot() if wp else None
             pool_counters = {
                 "tf_rebalance_total": wp.rebalances if wp else 0,
                 "tf_shard_failures_total": wp.failures if wp else 0,
+                "tf_circuit_open_total":
+                    breaker["opened_total"] if breaker else 0,
             }
         snap = empty_snapshot()
         for w in workers:
             merge_snapshot(snap, w.metrics_snapshot())
         fold_counters(snap, {f"tf_{k}_total": v for k, v in retired.items()})
         fold_counters(snap, pool_counters)
+        g = snap["gauges"]
+        g["tf_restart_backoff_seconds"] = g.get("tf_restart_backoff_seconds", 0.0) \
+            + (breaker["restart_backoff_seconds"] if breaker else 0.0)
         return snap
 
     def metrics(self, workflow: str) -> Dict[str, Any]:
@@ -631,6 +697,7 @@ class ShardedWorkerPool:
                 "live_shards": self.live_shard_count(workflow),
                 "shard_failures": wp.failures if wp else 0,
                 "rebalances": wp.rebalances if wp else 0,
+                "breaker": wp.breaker.snapshot() if wp else {},
                 "generation": wp.group.generation if wp else 0,
                 "assignment": {m: list(w.partitions or ()) for m, w in shards.items()},
                 "partition_lags": self.event_store.partition_lags(workflow),

@@ -44,6 +44,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from ..core.events import CloudEvent  # noqa: F401  (re-exported for callers)
 from ..core.functions import FunctionBackend
+from ..core.policy import REASON_DISABLED, CircuitBreaker
 from ..core.statestore import FileStateStore
 from ..core.triggers import Trigger
 from ..core.worker import WorkerStats
@@ -209,9 +210,11 @@ class _ProcShard:
 
 class _ProcWorkflow:
     __slots__ = ("group", "shards", "next_id", "crashes", "rebalances",
-                 "triggers", "finished", "result", "unreaped", "retired_stats")
+                 "triggers", "finished", "result", "unreaped", "retired_stats",
+                 "breaker")
 
-    def __init__(self, num_partitions: int) -> None:
+    def __init__(self, num_partitions: int,
+                 breaker: Optional[CircuitBreaker] = None) -> None:
         self.group = ConsumerGroup(num_partitions)
         self.shards: Dict[str, _ProcShard] = {}
         self.next_id = 0
@@ -228,6 +231,8 @@ class _ProcWorkflow:
         # cycles must not grow wf.shards without bound, but the workflow's
         # lifetime totals (events_processed, fires, …) must survive the drop
         self.retired_stats: Dict[str, int] = {}
+        # crash-loop breaker: consecutive-crash streak gates start_shards
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
 
     def fold_retired(self, shard: _ProcShard) -> None:
         if shard.final_stats:
@@ -264,6 +269,7 @@ class ProcessShardPool:
         metrics: bool = True,
         trace: Optional[str] = None,
         trace_sample: float = 0.1,
+        breaker: Optional[Dict[str, Any]] = None,
     ) -> None:
         # ``command_timeout`` bounds every command-pipe round-trip.  Shard
         # processes service the pipe between batches, so it must exceed the
@@ -294,6 +300,9 @@ class ProcessShardPool:
         }
         self.metrics_enabled = metrics
         self.command_timeout = command_timeout
+        # CircuitBreaker kwargs applied to every workflow's crash-loop
+        # breaker (threshold / backoff_* / cooldown — see core.policy).
+        self.breaker_conf = dict(breaker) if breaker else {}
         if start_method is None:
             start_method = ("fork" if "fork" in mp.get_all_start_methods()
                             else "spawn")
@@ -307,7 +316,8 @@ class ProcessShardPool:
         wf = self._wfs.get(workflow)
         n = self.event_store.num_partitions_for(workflow)
         if wf is None:
-            wf = self._wfs.setdefault(workflow, _ProcWorkflow(n))
+            wf = self._wfs.setdefault(
+                workflow, _ProcWorkflow(n, CircuitBreaker(**self.breaker_conf)))
         elif wf.group.num_partitions != n:
             # a per-workflow partition pin landed after this group was sized
             # (e.g. add_trigger before create_workflow(num_partitions=...)):
@@ -375,7 +385,10 @@ class ProcessShardPool:
                 if subjects:
                     parts = {self.event_store.partition_for(s, workflow)
                              for s in subjects}
-                    self.event_store.redrive_partitions(workflow, parts)
+                    # only ``disabled`` quarantines come back; poison:* stays
+                    # put until an operator redrives explicitly
+                    self.event_store.redrive_partitions(
+                        workflow, parts, reasons=(REASON_DISABLED,))
 
     def publish(self, workflow: str, event: CloudEvent) -> None:
         self.event_store.publish(workflow, event)
@@ -394,6 +407,11 @@ class ProcessShardPool:
 
     def shard_count(self, workflow: str) -> int:
         return len(self.shard_ids(workflow))
+
+    def breaker_of(self, workflow: str) -> CircuitBreaker:
+        """The workflow's crash-loop breaker (autoscaler gate + tests)."""
+        with self._lock:
+            return self._wf(workflow).breaker
 
     def live_shard_count(self, workflow: str) -> int:
         """Shard processes that are actually running right now (an idle-exited
@@ -421,7 +439,17 @@ class ProcessShardPool:
                 cfg = dict(cfg)
                 cfg["idle_timeout"] = idle_timeout
             fresh: List[_ProcShard] = []
-            while len(self._live(wf)) + len(fresh) < count:
+            need = count - len(self._live(wf))
+            granted = wf.breaker.allow_start(need) if need > 0 else 0
+            if granted < max(0, need):
+                # crash-loop breaker: a crash streak makes fresh starts wait
+                # out an exponential backoff; past the threshold the circuit
+                # opens until a cooldown admits one half-open probe
+                print("[proc-pool] circuit breaker for workflow %r (%s, "
+                      "streak=%d): granting %d/%d shard start(s)"
+                      % (workflow, wf.breaker.state, wf.breaker.streak,
+                         granted, need))
+            while len(fresh) < granted:
                 member = "proc-%d" % wf.next_id
                 wf.next_id += 1
                 parent_conn, child_conn = self._mp.Pipe()
@@ -456,6 +484,7 @@ class ProcessShardPool:
                 return
             self._stop_shard(wf, shard)
             wf.group.leave(member)
+            wf.breaker.record_clean()
             self._rebalance(workflow, wf)
 
     def crash_shard(self, workflow: str, member: str) -> None:
@@ -475,6 +504,7 @@ class ProcessShardPool:
             shard.exit_reason = "error"
             shard.conn.close()
             wf.crashes += 1
+            wf.breaker.record_crash()
             wf.group.leave(member)
             self._rebalance(workflow, wf)
 
@@ -518,6 +548,9 @@ class ProcessShardPool:
                 if reason == "error":
                     crashed += 1
                     wf.crashes += 1
+                    wf.breaker.record_crash()
+                else:
+                    wf.breaker.record_clean()
                 # drop the corpse (scale-to-zero cycles are unbounded;
                 # wf.shards must not be) but keep its lifetime totals
                 wf.fold_retired(shard)
@@ -571,6 +604,9 @@ class ProcessShardPool:
         if shard.exit_reason not in ("idle", "stopped"):
             shard.exit_reason = "error"
             wf.crashes += 1
+            wf.breaker.record_crash()
+        else:
+            wf.breaker.record_clean()
         wf.unreaped.append(shard.exit_reason)
         wf.fold_retired(shard)
         wf.shards.pop(shard.member, None)
@@ -743,8 +779,15 @@ class ProcessShardPool:
             fold_counters(snap, {
                 "tf_%s_total" % k: v for k, v in wf.retired_stats.items()
                 if k in WorkerStats.FIELDS})
+            breaker = wf.breaker.snapshot()
             fold_counters(snap, {"tf_rebalance_total": wf.rebalances,
-                                 "tf_shard_failures_total": wf.crashes})
+                                 "tf_shard_failures_total": wf.crashes,
+                                 "tf_circuit_open_total":
+                                     breaker["opened_total"]})
+            g = snap["gauges"]
+            g["tf_restart_backoff_seconds"] = (
+                g.get("tf_restart_backoff_seconds", 0.0)
+                + breaker["restart_backoff_seconds"])
         return snap
 
     def trace_spans(self, workflow: Optional[str] = None) -> List[dict]:
@@ -762,6 +805,7 @@ class ProcessShardPool:
                 "shards": len(shards),
                 "crashes": wf.crashes if wf else 0,
                 "rebalances": wf.rebalances if wf else 0,
+                "breaker": wf.breaker.snapshot() if wf else {},
                 "generation": wf.group.generation if wf else 0,
                 "assignment": {s.member: list(s.partitions) for s in shards},
                 "partition_lags": self.event_store.partition_lags(workflow),
@@ -791,7 +835,27 @@ class ProcessShardPool:
             self.reap(workflow)
             if time.monotonic() > deadline:
                 raise TimeoutError(
-                    "workflow %r did not drain: lag=%d, partition_lags=%s"
-                    % (workflow, self.event_store.lag(workflow),
-                       self.event_store.partition_lags(workflow)))
+                    "workflow %r did not drain: " % workflow
+                    + self.failure_diagnostics(workflow))
             time.sleep(poll)
+
+    def failure_diagnostics(self, workflow: str) -> str:
+        """One-line triage string for drain timeouts: per-partition lag, DLQ
+        breakdown by reason, live shard count and breaker state."""
+        try:
+            lag_vec = self.event_store.partition_lags(workflow)
+        except Exception:  # noqa: BLE001 - diagnostics must never raise
+            lag_vec = []
+        lags = lag_vec if isinstance(lag_vec, dict) else dict(enumerate(lag_vec))
+        try:
+            dlq = self.event_store.dlq_by_reason(workflow)
+        except Exception:  # noqa: BLE001
+            dlq = {}
+        with self._lock:
+            wf = self._wfs.get(workflow)
+            breaker = wf.breaker.snapshot() if wf else {}
+        return (f"lag={sum(lags.values())} "
+                f"partition_lags={ {p: n for p, n in lags.items() if n} } "
+                f"dlq_by_reason={dlq} "
+                f"live_shards={self.live_shard_count(workflow)} "
+                f"breaker={breaker}")

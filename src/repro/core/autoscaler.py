@@ -40,6 +40,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Protocol, Tuple
 
+from .policy import CircuitBreaker
 from .service import Triggerflow
 
 
@@ -88,6 +89,7 @@ class KedaAutoscaler:
         max_workers: int = 64,
         events_per_shard: int = 1000,
         max_shards_per_workflow: int = 8,
+        breaker: Optional[Dict] = None,
     ) -> None:
         self.tf = tf
         self.poll_interval = poll_interval
@@ -100,6 +102,12 @@ class KedaAutoscaler:
         self.scale_downs = 0
         self.restarts = 0
         self._live: Dict[str, threading.Thread] = {}
+        # Classic-mode crash-loop breakers, one per workflow: a worker whose
+        # loop keeps dying gets restarted with exponential backoff and is
+        # circuit-broken past the threshold (sharded mode delegates to the
+        # pool's own per-workflow breaker inside start_shards).
+        self.breaker_conf = dict(breaker) if breaker else {}
+        self._breakers: Dict[str, CircuitBreaker] = {}
         self._stop = threading.Event()
         # serializes ticks; stop() drains the in-flight one through it, so a
         # tick caught mid-start_shards can never outlive the autoscaler and
@@ -127,12 +135,16 @@ class KedaAutoscaler:
                 del self._live[wf]
                 if worker is not None and worker.crashed:
                     self.restarts += 1
+                    self._breaker(wf).record_crash()
                 else:
                     self.scale_downs += 1
+                    self._breaker(wf).record_clean()
         # Provision workers for workflows with lag.
         for wf, lag in lags.items():
             if lag <= 0 or wf in self._live or len(self._live) >= self.max_workers:
                 continue
+            if self._breaker(wf).allow_start(1) < 1:
+                continue  # crash-looping workflow: backing off / circuit open
             worker = self.tf.worker(wf)
             if worker.finished:
                 continue
@@ -143,6 +155,20 @@ class KedaAutoscaler:
         self.timeline.append(
             (time.monotonic() - self._t0, len(self._live), sum(lags.values()))
         )
+
+    def _breaker(self, workflow: str) -> CircuitBreaker:
+        br = self._breakers.get(workflow)
+        if br is None:
+            br = self._breakers[workflow] = CircuitBreaker(**self.breaker_conf)
+        return br
+
+    def breaker_of(self, workflow: str) -> CircuitBreaker:
+        """The breaker gating restarts of ``workflow`` — the pool's own in
+        sharded mode, the autoscaler's in classic mode."""
+        pool = self.tf.pool
+        if pool is not None and hasattr(pool, "breaker_of"):
+            return pool.breaker_of(workflow)
+        return self._breaker(workflow)
 
     def target_shards(self, lag: int, workflow: Optional[str] = None) -> int:
         """Lag-proportional shard target (0 when the stream is drained),
@@ -241,6 +267,12 @@ class KedaAutoscaler:
             "tf_scale_ups_total": self.scale_ups,
             "tf_scale_downs_total": self.scale_downs,
             "tf_restarts_total": self.restarts,
+            # classic-mode breakers only; sharded-mode breakers report
+            # through their pool's obs_snapshot (no double counting)
+            "tf_circuit_open_total":
+                sum(b.opened_total for b in self._breakers.values()),
         })
         snap["gauges"]["tf_active_workers"] = self.active_workers
+        snap["gauges"]["tf_restart_backoff_seconds"] = sum(
+            b.restart_backoff() for b in self._breakers.values())
         return snap

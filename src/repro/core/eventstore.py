@@ -203,15 +203,36 @@ class StreamShard:
             self._log = [e for e in self._log[self.head:] if e.id != event.id]
             self.head = 0
 
-    def redrive(self) -> int:
-        n = len(self.dlq)
-        if n:
+    def redrive(self, reasons=None) -> int:
+        """Move DLQ events back into the stream; ``reasons`` (iterable of DLQ
+        reason strings) restricts the move — poison quarantines stay put when
+        the caller redrives only ``disabled`` entries.  Returns moved count."""
+        if not self.dlq:
+            return 0
+        if reasons is None:
+            n = len(self.dlq)
             self.publish(self.dlq)
             self.dlq.clear()
-        return n
+            return n
+        from .policy import reason_matches
+        moved = [e for e in self.dlq if reason_matches(e, reasons)]
+        if moved:
+            kept = [e for e in self.dlq if not reason_matches(e, reasons)]
+            self.dlq.clear()
+            self.dlq.extend(kept)
+            self.publish(moved)
+        return len(moved)
 
     def dlq_size(self) -> int:
         return len(self.dlq)
+
+    def dlq_by_reason(self) -> Dict[str, int]:
+        from .policy import dlq_reason
+        out: Dict[str, int] = {}
+        for e in self.dlq:
+            r = dlq_reason(e)
+            out[r] = out.get(r, 0) + 1
+        return out
 
     def committed_events(self) -> List[CloudEvent]:
         return list(self._committed_log)
@@ -386,11 +407,18 @@ class EventStore:
     def to_dlq(self, workflow: str, event: CloudEvent) -> None:
         raise NotImplementedError
 
-    def redrive(self, workflow: str) -> int:
-        """Move all DLQ events back into the stream.  Returns count."""
+    def redrive(self, workflow: str, reasons: Optional[Iterable[str]] = None) -> int:
+        """Move DLQ events back into the stream.  ``reasons`` restricts the
+        move to entries whose quarantine reason matches (legacy entries
+        without metadata count as ``disabled``); None moves all.  Returns the
+        number moved."""
         raise NotImplementedError
 
     def dlq_size(self, workflow: str) -> int:
+        raise NotImplementedError
+
+    def dlq_by_reason(self, workflow: str) -> Dict[str, int]:
+        """DLQ depth broken down by structured quarantine reason."""
         raise NotImplementedError
 
     def workflows(self) -> List[str]:
@@ -460,15 +488,20 @@ class MemoryEventStore(EventStore):
         with self._lock:
             self._shard(workflow).to_dlq(event)
 
-    def redrive(self, workflow: str) -> int:
+    def redrive(self, workflow: str, reasons: Optional[Iterable[str]] = None) -> int:
         with self._lock:
             s = self._shards.get(workflow)
-            return s.redrive() if s is not None else 0
+            return s.redrive(reasons) if s is not None else 0
 
     def dlq_size(self, workflow: str) -> int:
         with self._lock:
             s = self._shards.get(workflow)
             return s.dlq_size() if s is not None else 0
+
+    def dlq_by_reason(self, workflow: str) -> Dict[str, int]:
+        with self._lock:
+            s = self._shards.get(workflow)
+            return s.dlq_by_reason() if s is not None else {}
 
     def workflows(self) -> List[str]:
         with self._lock:
@@ -677,21 +710,43 @@ class FileEventStore(EventStore):
             if q:
                 self._pending[workflow] = deque(e for e in q if e.id != event.id)
 
-    def redrive(self, workflow: str) -> int:
+    def redrive(self, workflow: str, reasons: Optional[Iterable[str]] = None) -> int:
+        from .policy import reason_matches
+
         with self._lock:
             dlq = self._dlq.get(workflow)
             if not dlq:
                 return 0
-            n = len(dlq)
-            self._pending.setdefault(workflow, deque()).extend(dlq)
+            moved = [e for e in dlq if reason_matches(e, reasons)]
+            if not moved:
+                return 0
+            kept = [e for e in dlq if not reason_matches(e, reasons)]
+            self._pending.setdefault(workflow, deque()).extend(moved)
             dlq.clear()
+            dlq.extend(kept)
             _, _, dlq_seg = self._seglogs(workflow)
-            dlq_seg.remove()
-            return n
+            # The .dlq segment is append-only; a (possibly partial) redrive
+            # rewrites it to the survivors so a restart reconstructs the
+            # same quarantine set.
+            with self._wf_flock(workflow):
+                dlq_seg.remove()
+                if kept:
+                    dlq_seg.append([e.to_json() for e in kept])
+            return len(moved)
 
     def dlq_size(self, workflow: str) -> int:
         with self._lock:
             return len(self._dlq.get(workflow, ()))
+
+    def dlq_by_reason(self, workflow: str) -> Dict[str, int]:
+        from .policy import dlq_reason
+
+        with self._lock:
+            out: Dict[str, int] = {}
+            for e in self._dlq.get(workflow, ()):
+                r = dlq_reason(e)
+                out[r] = out.get(r, 0) + 1
+            return out
 
     def workflows(self) -> List[str]:
         with self._lock:

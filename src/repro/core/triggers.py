@@ -30,9 +30,12 @@ class Trigger:
     enabled: bool = True
     # Optional filter on CloudEvent.type ("" = any).
     event_type: str = ""
+    # Optional RetryPolicy spec (dict form — see core.policy).  None keeps the
+    # pre-policy semantics: failures print and the event commits as consumed.
+    retry_policy: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "trigger_id": self.trigger_id,
             "activation_events": list(self.activation_events),
             "condition": self.condition,
@@ -42,6 +45,9 @@ class Trigger:
             "enabled": self.enabled,
             "event_type": self.event_type,
         }
+        if self.retry_policy is not None:
+            d["retry_policy"] = self.retry_policy
+        return d
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "Trigger":
@@ -54,6 +60,7 @@ class Trigger:
             transient=d.get("transient", True),
             enabled=d.get("enabled", True),
             event_type=d.get("event_type", ""),
+            retry_policy=d.get("retry_policy"),
         )
 
 
@@ -65,7 +72,10 @@ def make_trigger(
     trigger_id: Optional[str] = None,
     transient: bool = True,
     event_type: str = "",
+    retry=None,
 ) -> Trigger:
+    from .policy import coerce_retry_policy
+
     if isinstance(subjects, str):
         subjects = [subjects]
     return Trigger(
@@ -76,4 +86,5 @@ def make_trigger(
         trigger_id=trigger_id or new_trigger_id(),
         transient=transient,
         event_type=event_type,
+        retry_policy=coerce_retry_policy(retry),
     )

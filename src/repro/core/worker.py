@@ -61,6 +61,10 @@ from .events import CloudEvent
 from ..obs.trace import inject as _trace_inject
 from .eventstore import EventStore
 from .functions import FunctionBackend
+from .policy import (ActionTimeout, AUTO_REDRIVE_REASONS, RETRY_STATE_KEY,
+                     REASON_ACTION_ERROR, REASON_CONDITION_ERROR,
+                     REASON_DISABLED, REASON_TIMEOUT, RetryPolicy,
+                     call_with_timeout, quarantined, reason_counter_name)
 from .statestore import StateStore
 from .triggers import Trigger
 
@@ -71,7 +75,9 @@ class WorkerStats:
     totals through them, so the two runtimes can't drift on what a stat
     means or which keys exist."""
 
-    FIELDS = ("events_processed", "activations", "fires", "batches", "dlq_events")
+    FIELDS = ("events_processed", "activations", "fires", "batches",
+              "dlq_events", "action_retries", "poison_events",
+              "action_timeouts")
     __slots__ = FIELDS
 
     def __init__(self) -> None:
@@ -80,6 +86,12 @@ class WorkerStats:
         self.fires = 0
         self.batches = 0
         self.dlq_events = 0
+        # failure-policy plane (core.policy): failed runs rescheduled under a
+        # RetryPolicy, events quarantined on budget exhaustion, and attempts
+        # cut short by the action watchdog
+        self.action_retries = 0
+        self.poison_events = 0
+        self.action_timeouts = 0
 
     def snapshot(self) -> Dict[str, int]:
         return {f: getattr(self, f) for f in self.FIELDS}
@@ -109,7 +121,7 @@ class _Entry:
     context resolved once (invalidated on any trigger-structure change)."""
 
     __slots__ = ("trg", "ctx", "cspec", "cname", "cfn", "bfn", "rfn",
-                 "aspec", "afn", "bafn")
+                 "aspec", "afn", "bafn", "policy")
 
     def __init__(self, trg: Trigger, ctx: TriggerContext) -> None:
         self.trg = trg
@@ -123,10 +135,19 @@ class _Entry:
         self.aspec = trg.action
         self.afn = ACTIONS.get(self.aspec["name"]) or (
             lambda c, e, s: run_action(s, c, e))
+        # the trigger's compiled RetryPolicy (None ⇒ pre-policy semantics:
+        # failures print and the event commits as consumed)
+        self.policy = (RetryPolicy.from_dict(trg.retry_policy)
+                       if trg.retry_policy else None)
         # action-plane eligibility covers the whole action tree: a chain
-        # wrapping a scalar-only sub-action must keep the per-fire path
+        # wrapping a scalar-only sub-action must keep the per-fire path.
+        # A per-attempt watchdog (``action_timeout``) needs per-fire calls,
+        # so it pins the trigger to the scalar fire path at compile time —
+        # zero cost in the hot loop.
         self.bafn = (BATCHED_ACTIONS.get(self.aspec["name"])
-                     if batchable_action(self.aspec) else None)
+                     if batchable_action(self.aspec)
+                     and (self.policy is None
+                          or self.policy.action_timeout is None) else None)
 
     def matches(self, etype: str) -> bool:
         """Live candidacy check: enabled and (no filter or type match)."""
@@ -186,6 +207,19 @@ class TFWorker:
         # that cycles through redrive back into the DLQ is one DLQ'd event,
         # not one per cycle (ids are released once the event finally commits)
         self._dlq_counted: set = set()
+        # failure-policy plane (core.policy).  ``_retry_after`` is the local
+        # backoff timer wheel: event id → monotonic not-before; a deferred
+        # event stays pending in the store and is filtered out of consumed
+        # batches until its deadline (no hot redelivery; deadlines are
+        # volatile, so a restarted worker retries immediately — the durable
+        # attempt counter, not the clock, bounds the budget).  ``_no_commit``
+        # collects ids that must not commit this batch (deferred or
+        # quarantined mid-slice); ``_policy_dirty`` forces a checkpoint when
+        # retry bookkeeping touched a context even though nothing fired.
+        self._retry_after: Dict[str, float] = {}
+        self._no_commit: set = set()
+        self._policy_dirty = False
+        self._policy_cache: Dict[str, Optional[RetryPolicy]] = {}
         self._sink: List[CloudEvent] = []  # internal event buffer (§5.2)
         self.event_log: List[CloudEvent] = []  # native event-sourcing log (§5.3)
         self.stats = WorkerStats()
@@ -423,11 +457,137 @@ class TFWorker:
                 self.workflow, self.partitions)
         return self.event_store.dlq_size(self.workflow)
 
-    def _redrive(self) -> int:
+    def _redrive(self, reasons=None) -> int:
         if self.partitions is not None:
             return self.event_store.redrive_partitions(
-                self.workflow, self.partitions)
-        return self.event_store.redrive(self.workflow)
+                self.workflow, self.partitions, reasons)
+        return self.event_store.redrive(self.workflow, reasons)
+
+    def _dlq_by_reason(self) -> Dict[str, int]:
+        fn = getattr(self.event_store, "dlq_by_reason", None)
+        return fn(self.workflow) if fn is not None else {}
+
+    # -- the failure-policy plane (core.policy) -----------------------------------
+    def _policy_of(self, trg: Trigger) -> Optional[RetryPolicy]:
+        """Compiled RetryPolicy for the scalar-oracle path (the batch plane
+        compiles it into ``_Entry``)."""
+        tid = trg.trigger_id
+        cache = self._policy_cache
+        if tid not in cache:
+            cache[tid] = (RetryPolicy.from_dict(trg.retry_policy)
+                          if trg.retry_policy else None)
+        return cache[tid]
+
+    def _defer_filter(self, batch: List[CloudEvent]) -> List[CloudEvent]:
+        """Drop events still inside their retry backoff window; deadlines
+        that passed are released for this batch.  O(batch) only while
+        retries are actually pending — the empty-map case is one falsy check
+        in the callers."""
+        ra = self._retry_after
+        now = time.monotonic()
+        kept: List[CloudEvent] = []
+        for e in batch:
+            t = ra.get(e.id)
+            if t is None:
+                kept.append(e)
+            elif now >= t:
+                del ra[e.id]
+                kept.append(e)
+        return kept
+
+    def _policy_failure(self, ctx: TriggerContext, pol: RetryPolicy,
+                        event: CloudEvent, kind: str) -> bool:
+        """Record one failed condition/action run under a RetryPolicy.
+
+        Bumps the durable attempt record in the trigger's context (it rides
+        the next checkpoint, so the count survives SIGKILL and never resets
+        on replay), then either schedules a backoff retry or — budget
+        exhausted — quarantines the event with a structured ``poison:*``
+        reason.  Either way the event is withheld from this batch's commit
+        (``_no_commit``) and de-processed (``_seen``).  Returns True:
+        callers must not treat the run as a fire."""
+        stats = self.stats
+        now = time.time()
+        att = dict(ctx.get(RETRY_STATE_KEY) or {})
+        rec = att.get(event.id)
+        attempt = (rec[0] if rec else 0) + 1
+        first = rec[1] if rec else now
+        if kind == "timeout":
+            stats.action_timeouts += 1
+        if attempt >= pol.max_attempts:
+            att.pop(event.id, None)
+            ctx[RETRY_STATE_KEY] = att  # reassign: delta tracking sees it
+            reason = {"timeout": REASON_TIMEOUT,
+                      "condition": REASON_CONDITION_ERROR}.get(
+                          kind, REASON_ACTION_ERROR)
+            self.event_store.to_dlq(
+                self.workflow,
+                quarantined(event, reason, attempts=attempt,
+                            first_failure=first, last_failure=now))
+            stats.poison_events += 1
+            if self._metrics is not None:
+                self._metrics.registry.counter(
+                    reason_counter_name(reason)).inc()
+            if event.id not in self._dlq_counted:
+                self._dlq_counted.add(event.id)
+                stats.dlq_events += 1
+            self._retry_after.pop(event.id, None)
+        else:
+            att[event.id] = [attempt, first, now]
+            ctx[RETRY_STATE_KEY] = att
+            stats.action_retries += 1
+            self._retry_after[event.id] = (
+                time.monotonic() + pol.backoff(attempt, event.id))
+        self._seen.discard(event.id)
+        self._no_commit.add(event.id)
+        self._policy_dirty = True
+        return True
+
+    def _policy_success(self, ctx: TriggerContext, event: CloudEvent) -> None:
+        """A retried event finally succeeded: drop its durable attempt
+        record (bounds context growth) and its backoff timer."""
+        att = ctx.get(RETRY_STATE_KEY)
+        if att and event.id in att:
+            att = dict(att)
+            att.pop(event.id)
+            ctx[RETRY_STATE_KEY] = att
+            self._retry_after.pop(event.id, None)
+            self._policy_dirty = True
+
+    def _run_action_guarded(self, entry: "_Entry", event: CloudEvent) -> bool:
+        """One scalar action attempt under the entry's policy (watchdog +
+        retry/quarantine accounting).  Returns True when the run counts as a
+        fire, False when it was deferred/quarantined by the policy."""
+        pol = entry.policy
+        try:
+            if pol is not None and pol.action_timeout is not None:
+                call_with_timeout(pol.action_timeout, entry.afn,
+                                  entry.ctx, event, entry.aspec)
+            else:
+                entry.afn(entry.ctx, event, entry.aspec)
+        except Exception as exc:  # noqa: BLE001
+            traceback.print_exc()
+            if pol is None:
+                return True  # pre-policy semantics: a failed fire still fired
+            kind = "timeout" if isinstance(exc, ActionTimeout) else "action"
+            return not self._policy_failure(entry.ctx, pol, event, kind)
+        if pol is not None:
+            self._policy_success(entry.ctx, event)
+        return True
+
+    def _isolate_run(self, entry: "_Entry", fired: List[CloudEvent]) -> int:
+        """Poison-slice isolation for the action plane: after a batched
+        action failed under a policy, re-run the fire run per event so each
+        one gets its own verdict (success / backoff / quarantine).  Safe
+        because batched actions are contractually slice-isolating — they
+        build their whole output before any side effect (actions.py docs) —
+        so the failed call left no partial effects to double.  Returns the
+        number of successful fires (the healthy remainder commits)."""
+        ok = 0
+        for event in fired:
+            if self._run_action_guarded(entry, event):
+                ok += 1
+        return ok
 
     # -- the batch-plane hot loop --------------------------------------------------
     def _has_join_triggers(self) -> bool:
@@ -522,6 +682,11 @@ class TFWorker:
                         except Exception:  # noqa: BLE001
                             traceback.print_exc()
                             ok = False
+                            if entry.policy is not None:
+                                # condition error under a policy: retry the
+                                # event later instead of committing it unfired
+                                self._policy_failure(ctx, entry.policy,
+                                                     event, "condition")
                         if self._struct_version != ver:
                             ver = self._struct_version
                             if changed_at is None:
@@ -543,9 +708,7 @@ class TFWorker:
                     if span is not None:
                         self._trace_ctx = (span["trace"], span["span"], span)
                 try:
-                    entry.afn(ctx, event, entry.aspec)
-                except Exception:  # noqa: BLE001
-                    traceback.print_exc()
+                    fired = self._run_action_guarded(entry, event)
                 finally:
                     if span is not None:
                         tracer.end(span)
@@ -554,9 +717,15 @@ class TFWorker:
                     ver = self._struct_version
                     if changed_at is None:
                         changed_at = pos + idx
+                pos += idx + 1
+                if not fired:
+                    # policy deferred/quarantined the attempt: no fire
+                    # happened, so the trigger stays armed (a transient must
+                    # still get its one real fire) and the slice continues —
+                    # the healthy remainder commits, the event retries later
+                    continue
                 stats.fires += 1
                 fired_any = True
-                pos += idx + 1
                 if trg.transient:
                     trg.enabled = False
                     self._mark_trigger_dirty(trg.trigger_id)
@@ -613,10 +782,20 @@ class TFWorker:
                     self._trace_ctx = (span["trace"], span["span"], span)
             m = self._metrics
             t_fire = time.perf_counter() if m is not None else 0.0
+            n_fired = len(fires)
             try:
                 entry.bafn(ctx, fired, entry.aspec)
             except Exception:  # noqa: BLE001
                 traceback.print_exc()
+                if entry.policy is not None:
+                    # poison-slice isolation: re-run per event so the poison
+                    # event alone is deferred/quarantined and the healthy
+                    # remainder of the run commits (PR-3 slice pattern)
+                    n_fired = self._isolate_run(entry, fired)
+            else:
+                if entry.policy is not None and ctx.get(RETRY_STATE_KEY):
+                    for event in fired:
+                        self._policy_success(ctx, event)
             finally:
                 if m is not None:
                     m.fire.observe_batch(len(fires), time.perf_counter() - t_fire)
@@ -625,8 +804,8 @@ class TFWorker:
                     self._trace_ctx = None
             if self._struct_version != ver and changed_at is None:
                 changed_at = fires[0]
-            stats.fires += len(fires)
-            return n - 1, True, changed_at
+            stats.fires += n_fired
+            return n - 1, n_fired > 0, changed_at
         finally:
             self._slice_pos = None
 
@@ -675,12 +854,14 @@ class TFWorker:
                         change_min is None or changed_at < change_min):
                     change_min = changed_at
             if not any_enabled:
-                # All candidate triggers disabled → out-of-order → DLQ (§3.4).
+                # All candidate triggers disabled → out-of-order → DLQ (§3.4),
+                # tagged ``disabled`` so reason-filtered redrives can pick it
+                # back up without touching poison quarantines.
                 to_dlq = self.event_store.to_dlq
                 seen_discard = self._seen.discard
                 counted = self._dlq_counted
                 for e in sl:
-                    to_dlq(self.workflow, e)
+                    to_dlq(self.workflow, quarantined(e, REASON_DISABLED))
                     seen_discard(e.id)
                     if e.id not in counted:
                         counted.add(e.id)
@@ -749,6 +930,10 @@ class TFWorker:
             return self._run_once_scalar(max_events)
         with self.lock:
             batch = self._consume(max_events or self.batch_size)
+            if self._retry_after and batch:
+                # events inside their retry backoff window stay pending in
+                # the store instead of hot-redelivering into the pipeline
+                batch = self._defer_filter(batch)
             if not batch and not self._sink:
                 return 0
             m = self._metrics
@@ -846,18 +1031,31 @@ class TFWorker:
             stats.batches += 1
             if m is not None and n_new:
                 m.batch_eval.observe_batch(n_new, time.perf_counter() - t_eval)
+            if self._no_commit:
+                # deferred/quarantined mid-slice: withheld from this commit
+                # (a quarantined id that committed would poison its redrive)
+                nc = self._no_commit
+                processed_ids = [i for i in processed_ids if i not in nc]
+                nc.clear()
             if processed_ids:
                 self.last_active = time.monotonic()
-            # Checkpoint: contexts first, then commit (§3.4 ordering).
-            if fired_any or (self.commit_policy == "every_batch" and processed_ids):
+            # Checkpoint: contexts first, then commit (§3.4 ordering).  Retry
+            # bookkeeping (durable attempt counters) must reach the
+            # checkpoint even when nothing fired, or a SIGKILL between
+            # attempts would reset the budget.
+            if (fired_any or self._policy_dirty
+                    or (self.commit_policy == "every_batch" and processed_ids)):
                 if m is None:
                     self._checkpoint(processed_ids)
                 else:
                     t_ck = time.perf_counter()
                     self._checkpoint(processed_ids)
                     m.checkpoint.observe(time.perf_counter() - t_ck)
+                self._policy_dirty = False
                 if fired_any and self._dlq_size():
-                    self._redrive()
+                    # fire progress may unblock out-of-order sequences:
+                    # redrive the ``disabled`` class only — poison stays put
+                    self._redrive(AUTO_REDRIVE_REASONS)
             return len(processed_ids)
 
     # -- the legacy per-event interpreter (parity oracle) --------------------------
@@ -883,12 +1081,15 @@ class TFWorker:
                 continue
             any_enabled = True
             ctx = self.context_of(trg.trigger_id)
+            pol = self._policy_of(trg)
             self.stats.activations += 1
             try:
                 ok = run_condition(trg.condition, ctx, event)
             except Exception:  # noqa: BLE001
                 traceback.print_exc()
                 ok = False
+                if pol is not None:
+                    self._policy_failure(ctx, pol, event, "condition")
             if ok:
                 tracer = self._tracer
                 span = None
@@ -897,14 +1098,28 @@ class TFWorker:
                                             self.workflow, 1)
                     if span is not None:
                         self._trace_ctx = (span["trace"], span["span"], span)
+                ran = True
                 try:
-                    run_action(trg.action, ctx, event)
-                except Exception:  # noqa: BLE001
+                    if pol is not None and pol.action_timeout is not None:
+                        call_with_timeout(pol.action_timeout, run_action,
+                                          trg.action, ctx, event)
+                    else:
+                        run_action(trg.action, ctx, event)
+                except Exception as exc:  # noqa: BLE001
                     traceback.print_exc()
+                    if pol is not None:
+                        kind = ("timeout" if isinstance(exc, ActionTimeout)
+                                else "action")
+                        ran = not self._policy_failure(ctx, pol, event, kind)
+                else:
+                    if pol is not None:
+                        self._policy_success(ctx, event)
                 finally:
                     if span is not None:
                         tracer.end(span)
                         self._trace_ctx = None
+                if not ran:
+                    continue  # deferred/quarantined: not a fire, stay armed
                 self.stats.fires += 1
                 fired = True
                 if trg.transient:
@@ -912,7 +1127,8 @@ class TFWorker:
                     self._mark_trigger_dirty(trg.trigger_id)
         if not any_enabled:
             # All candidate triggers disabled → out-of-order event → DLQ (§3.4).
-            self.event_store.to_dlq(self.workflow, event)
+            self.event_store.to_dlq(self.workflow,
+                                    quarantined(event, REASON_DISABLED))
             self._seen.discard(event.id)
             if event.id not in self._dlq_counted:
                 self._dlq_counted.add(event.id)
@@ -924,6 +1140,8 @@ class TFWorker:
         """The pre-batch-plane per-event loop (``batch_plane=False``)."""
         with self.lock:
             batch = self._consume(max_events or self.batch_size)
+            if self._retry_after and batch:
+                batch = self._defer_filter(batch)
             if not batch and not self._sink:
                 return 0
             m = self._metrics
@@ -967,18 +1185,25 @@ class TFWorker:
             if m is not None and processed_ids:
                 m.batch_eval.observe_batch(
                     len(processed_ids), time.perf_counter() - t_eval)
+            if self._no_commit:
+                nc = self._no_commit
+                processed_ids = [i for i in processed_ids if i not in nc]
+                nc.clear()
             if processed_ids:
                 self.last_active = time.monotonic()
-            # Checkpoint: contexts first, then commit (§3.4 ordering).
-            if fired_any or (self.commit_policy == "every_batch" and processed_ids):
+            # Checkpoint: contexts first, then commit (§3.4 ordering); see
+            # run_once — attempt counters checkpoint even without fires.
+            if (fired_any or self._policy_dirty
+                    or (self.commit_policy == "every_batch" and processed_ids)):
                 if m is None:
                     self._checkpoint(processed_ids)
                 else:
                     t_ck = time.perf_counter()
                     self._checkpoint(processed_ids)
                     m.checkpoint.observe(time.perf_counter() - t_ck)
+                self._policy_dirty = False
                 if fired_any and self._dlq_size():
-                    self._redrive()
+                    self._redrive(AUTO_REDRIVE_REASONS)
             return len(processed_ids)
 
     def _checkpoint(self, processed_ids: List[str]) -> None:
@@ -1021,6 +1246,20 @@ class TFWorker:
             # lifecycle: a *future* quarantine is a new one and counts again
             self._dlq_counted.difference_update(processed_ids)
 
+    def failure_diagnostics(self) -> str:
+        """One-line stuck-workflow triage: lag, DLQ depth by reason, pending
+        retry backoffs — so a CI timeout traceback is debuggable alone."""
+        try:
+            lag = self.event_store.lag(self.workflow)
+        except Exception:  # noqa: BLE001 - diagnostics never mask the timeout
+            lag = "?"
+        try:
+            dlq = self._dlq_by_reason() or self._dlq_size()
+        except Exception:  # noqa: BLE001
+            dlq = "?"
+        return (f"lag={lag} dlq={dlq} deferred_retries={len(self._retry_after)} "
+                f"uncommitted_inflight={len(self._seen)}")
+
     # -- loops ------------------------------------------------------------------------
     def run_until_complete(self, timeout: float = 60.0, poll: float = 0.001) -> Any:
         """Drive the worker until the workflow ends (deterministic mode)."""
@@ -1029,7 +1268,9 @@ class TFWorker:
             n = self.run_once()
             if n == 0:
                 if time.monotonic() > deadline:
-                    raise TimeoutError(f"workflow {self.workflow} did not finish")
+                    raise TimeoutError(
+                        f"workflow {self.workflow} did not finish: "
+                        + self.failure_diagnostics())
                 time.sleep(poll)
         return self.result
 

@@ -1,0 +1,409 @@
+"""Failure-policy plane: retries with backoff, poison quarantine, breakers.
+
+Covers:
+* RetryPolicy / CircuitBreaker / call_with_timeout unit contracts
+  (deterministic backoff schedules, open → half-open → closed lifecycle),
+* scalar-plane retry-then-success, poison quarantine with structured DLQ
+  metadata, per-attempt action timeouts, and backoff deferral (no hot
+  redelivery of a backing-off event),
+* batched-action poison-slice isolation: the healthy remainder of a failed
+  batch commits, only the poison events quarantine — identical to the
+  scalar oracle,
+* DLQ reason taxonomy across store families (memory + file): ``redrive``
+  reason filters, ``dlq_by_reason`` breakdowns, metadata riding redrive,
+* the thread pool's crash-loop breaker gating ``start_shards``,
+* retry-count durability across a real SIGKILL on the process runtime: the
+  attempt counter continues from the durable checkpoint instead of
+  restarting from zero.
+"""
+import time
+
+import pytest
+
+from repro.bus import PartitionedEventStore, ProcessShardPool, ShardedWorkerPool
+from repro.chaos.soak import soak_child_init
+from repro.core import (FileEventStore, MemoryEventStore, Triggerflow,
+                        make_trigger, termination_event)
+from repro.core.events import CloudEvent
+from repro.core.functions import FunctionBackend
+from repro.core.actions import ACTIONS, register_action
+from repro.core.policy import (ActionTimeout, CircuitBreaker, RETRY_STATE_KEY,
+                               REASON_ACTION_ERROR, REASON_DISABLED,
+                               REASON_TIMEOUT, RetryPolicy, call_with_timeout,
+                               coerce_retry_policy, dlq_meta, dlq_reason,
+                               quarantined, reason_counter_name)
+from repro.core.statestore import MemoryStateStore
+
+
+# -- unit: RetryPolicy -----------------------------------------------------------
+
+def test_backoff_schedule_deterministic():
+    pol = RetryPolicy(max_attempts=5, backoff_base=0.1, backoff_factor=2.0,
+                      backoff_max=0.5, jitter=0.2)
+    sched = [pol.backoff(n, "ev-1") for n in range(1, 5)]
+    assert sched == [pol.backoff(n, "ev-1") for n in range(1, 5)]  # replayable
+    # exponential, capped, and jitter only stretches (never shortens)
+    assert 0.1 <= sched[0] < 0.1 * 1.2 + 1e-9
+    assert 0.2 <= sched[1] < 0.2 * 1.2 + 1e-9
+    assert sched[3] <= 0.5 * 1.2
+    # jitter is keyed by event id: two events don't sync their retries
+    assert pol.backoff(1, "ev-1") != pol.backoff(1, "ev-2")
+    # no jitter → exact exponential
+    flat = RetryPolicy(backoff_base=0.1, jitter=0.0)
+    assert flat.backoff(2, "x") == 0.2
+
+
+def test_coerce_retry_policy_roundtrip():
+    assert coerce_retry_policy(None) is None
+    d = coerce_retry_policy(RetryPolicy(max_attempts=2, action_timeout=1.5))
+    assert d["max_attempts"] == 2 and d["action_timeout"] == 1.5
+    assert RetryPolicy.from_dict(d).action_timeout == 1.5
+    assert coerce_retry_policy({"max_attempts": 7})["max_attempts"] == 7
+    with pytest.raises(TypeError):
+        coerce_retry_policy("3 tries")
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+def test_quarantined_metadata_helpers():
+    ev = termination_event("s", 1)
+    tagged = quarantined(ev, REASON_TIMEOUT, attempts=3,
+                         first_failure=10.0, last_failure=12.0)
+    assert tagged.id == ev.id and tagged.subject == ev.subject
+    assert ev.ext in (None, {}) or "tfdlq" not in ev.ext  # original untouched
+    meta = dlq_meta(tagged)
+    assert meta == {"reason": REASON_TIMEOUT, "attempts": 3,
+                    "first_failure": 10.0, "last_failure": 12.0}
+    assert dlq_reason(tagged) == REASON_TIMEOUT
+    assert dlq_reason(ev) == REASON_DISABLED  # legacy entries default
+    assert reason_counter_name(REASON_ACTION_ERROR) == "tf_poison_action_error_total"
+    assert reason_counter_name(REASON_DISABLED) == "tf_quarantined_disabled_total"
+
+
+def test_call_with_timeout():
+    assert call_with_timeout(None, lambda: 42) == 42
+    assert call_with_timeout(5.0, lambda: 42) == 42
+    with pytest.raises(KeyError):
+        call_with_timeout(5.0, lambda: {}["missing"])
+    with pytest.raises(ActionTimeout):
+        call_with_timeout(0.05, time.sleep, 5.0)
+
+
+# -- unit: CircuitBreaker --------------------------------------------------------
+
+def test_breaker_lifecycle():
+    t = [0.0]
+    br = CircuitBreaker(threshold=3, backoff_base=1.0, backoff_factor=2.0,
+                        backoff_max=8.0, cooldown=5.0, clock=lambda: t[0])
+    # first crash restarts free; second starts the backoff ladder
+    br.record_crash()
+    assert br.state == "closed" and br.allow_start(4) == 4
+    br.record_crash()
+    assert br.restart_backoff() == 1.0
+    assert br.allow_start(4) == 0           # inside the backoff window
+    t[0] += 1.0
+    assert br.allow_start(4) == 4           # window elapsed
+    br.record_crash()                        # streak 3 → open
+    assert br.state == "open" and br.opened_total == 1
+    assert br.allow_start(4) == 0
+    t[0] += 5.0                              # cooldown → half-open probe
+    assert br.allow_start(4) == 1
+    assert br.state == "half_open"
+    assert br.allow_start(4) == 1            # still only the probe
+    br.record_crash()                        # probe died → re-open
+    assert br.state == "open" and br.opened_total == 2
+    t[0] += 5.0
+    assert br.allow_start(1) == 1            # second probe
+    br.record_clean()                        # probe retired cleanly → closed
+    assert br.state == "closed" and br.streak == 0
+    assert br.allow_start(3) == 3
+    snap = br.snapshot()
+    assert snap["state"] == "closed" and snap["opened_total"] == 2
+
+
+# -- scalar plane: retry / quarantine / timeout ----------------------------------
+
+def _flaky_action(ctx, event, params):
+    if event.data.get("poison"):
+        raise RuntimeError("poison event")
+    fails = event.data.get("fails", 0)
+    seen = dict(ctx.get("seen") or {})
+    n = seen.get(event.id, 0) + 1
+    seen[event.id] = n
+    ctx["seen"] = seen
+    if n <= fails:
+        raise RuntimeError(f"flaky attempt {n}/{fails}")
+    done = dict(ctx.get("done") or {})
+    done[event.id] = n
+    ctx["done"] = done
+
+
+def _flaky_batch(ctx, events, params):
+    # slice-isolating contract: decide about the WHOLE slice before any
+    # side effect, so a raise leaves nothing partially applied
+    if any(e.data.get("poison") or
+           e.data.get("fails", 0) >= (ctx.get("seen") or {}).get(e.id, 0) + 1
+           for e in events):
+        raise RuntimeError("slice contains a failing event")
+    for e in events:
+        _flaky_action(ctx, e, params)
+
+
+register_action("fp_flaky", _flaky_action, batched=_flaky_batch)
+
+
+def _drain(w, rounds=60):
+    for _ in range(rounds):
+        w.run_once(64)
+
+
+def _policy_tf(retry, store=None, **worker_flags):
+    tf = Triggerflow(event_store=store or MemoryEventStore(),
+                     inline_functions=True, commit_policy="every_batch")
+    tf.create_workflow("w")
+    tf.add_trigger("w", make_trigger(
+        "s", condition={"name": "true"}, action={"name": "fp_flaky"},
+        trigger_id="t", transient=False, retry=retry))
+    w = tf.worker("w")
+    w.keep_event_log = False
+    for k, v in worker_flags.items():
+        setattr(w, k, v)
+    return tf, w
+
+
+def test_scalar_retry_then_success():
+    tf, w = _policy_tf({"max_attempts": 4, "backoff_base": 0.0, "jitter": 0.0})
+    ev = CloudEvent(subject="s", data={"fails": 2}, id="flaky-1")
+    tf.event_store.publish("w", ev)
+    _drain(w)
+    ctx = w.context_of("t")
+    assert ctx["done"] == {"flaky-1": 3}          # succeeded on attempt 3
+    assert ctx.get(RETRY_STATE_KEY) in (None, {})  # cleared on success
+    assert w.stats.action_retries == 2
+    assert w.stats.poison_events == 0
+    assert w.stats.fires == 1                      # retries are not fires
+    assert tf.event_store.lag("w") == 0            # committed after success
+    assert tf.event_store.dlq_size("w") == 0
+
+
+def test_scalar_poison_quarantine_with_metadata():
+    tf, w = _policy_tf({"max_attempts": 3, "backoff_base": 0.0, "jitter": 0.0})
+    tf.event_store.publish_batch("w", [
+        CloudEvent(subject="s", data={"poison": True}, id="bad-1"),
+        CloudEvent(subject="s", data={}, id="good-1"),
+    ])
+    _drain(w)
+    # healthy neighbour fired and committed; poison quarantined, not hot-looped
+    assert w.context_of("t")["done"] == {"good-1": 1}
+    assert tf.event_store.lag("w") == 0
+    assert tf.event_store.dlq_by_reason("w") == {REASON_ACTION_ERROR: 1}
+    assert w.stats.poison_events == 1
+    assert w.stats.dlq_events == 1
+    assert w.stats.action_retries == 2            # attempts 1 and 2 retried
+    # structured metadata rides the DLQ entry through redrive
+    assert tf.event_store.redrive("w", reasons=(REASON_DISABLED,)) == 0
+    assert tf.event_store.redrive("w", reasons=(REASON_ACTION_ERROR,)) == 1
+    redriven = [e for e in tf.event_store.consume("w", 10) if e.id == "bad-1"]
+    meta = dlq_meta(redriven[0])
+    assert meta["reason"] == REASON_ACTION_ERROR
+    assert meta["attempts"] == 3
+    assert meta["first_failure"] <= meta["last_failure"]
+
+
+def test_action_timeout_quarantine():
+    register_action("fp_sleepy", lambda ctx, e, p: time.sleep(e.data["dur"]))
+    tf = Triggerflow(inline_functions=True, commit_policy="every_batch")
+    tf.create_workflow("w")
+    tf.add_trigger("w", make_trigger(
+        "s", condition={"name": "true"}, action={"name": "fp_sleepy"},
+        trigger_id="t", transient=False,
+        retry={"max_attempts": 1, "action_timeout": 0.05}))
+    w = tf.worker("w")
+    tf.event_store.publish_batch("w", [
+        CloudEvent(subject="s", data={"dur": 0.4}, id="slow-1"),
+        CloudEvent(subject="s", data={"dur": 0.0}, id="fast-1"),
+    ])
+    _drain(w, rounds=10)
+    assert w.stats.action_timeouts == 1
+    assert w.stats.fires == 1                     # only the fast one
+    assert tf.event_store.dlq_by_reason("w") == {REASON_TIMEOUT: 1}
+    assert tf.event_store.lag("w") == 0
+
+
+def test_backoff_defers_instead_of_hot_redelivery():
+    tf, w = _policy_tf({"max_attempts": 3, "backoff_base": 0.15,
+                        "backoff_factor": 1.0, "jitter": 0.0})
+    tf.event_store.publish("w", CloudEvent(subject="s", data={"fails": 1},
+                                           id="slow-retry"))
+    w.run_once(64)                                # attempt 1 fails
+    attempts_now = w.context_of("t")["seen"]["slow-retry"]
+    assert attempts_now == 1
+    for _ in range(20):                           # hot loop would re-run here
+        w.run_once(64)
+    assert w.context_of("t")["seen"]["slow-retry"] == 1  # deferred, not spun
+    time.sleep(0.2)                               # backoff window elapses
+    _drain(w, rounds=5)
+    assert w.context_of("t")["done"] == {"slow-retry": 2}
+    assert tf.event_store.lag("w") == 0
+
+
+# -- batched-action poison-slice isolation vs the scalar oracle ------------------
+
+def _isolation_run(action_plane):
+    tf, w = _policy_tf({"max_attempts": 2, "backoff_base": 0.0, "jitter": 0.0},
+                       action_plane=action_plane)
+    events = []
+    for i in range(12):
+        poison = i % 4 == 0
+        events.append(CloudEvent(
+            subject="s", data={"poison": True} if poison else {},
+            id=("bad-%d" if poison else "good-%d") % i))
+    tf.event_store.publish_batch("w", events)
+    _drain(w)
+    ctx = w.context_of("t")
+    return (dict(ctx.get("done") or {}), tf.event_store.dlq_by_reason("w"),
+            tf.event_store.lag("w"), w.stats.poison_events)
+
+
+def test_batched_action_poison_isolation_matches_scalar_oracle():
+    batched = _isolation_run(True)
+    scalar = _isolation_run(False)
+    assert batched == scalar
+    done, dlq, lag, poison = batched
+    assert set(done) == {f"good-{i}" for i in range(12) if i % 4 != 0}
+    assert dlq == {REASON_ACTION_ERROR: 3}
+    assert lag == 0 and poison == 3
+
+
+# -- DLQ reason taxonomy across store families -----------------------------------
+
+@pytest.fixture(params=["memory", "file"])
+def plain_store(request, tmp_path):
+    if request.param == "memory":
+        return MemoryEventStore()
+    return FileEventStore(str(tmp_path / "events"))
+
+
+def test_dlq_reasons_across_store_families(plain_store):
+    tf, w = _policy_tf({"max_attempts": 2, "backoff_base": 0.0, "jitter": 0.0},
+                       store=plain_store)
+    tf.add_trigger("w", make_trigger(
+        "d", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="td", transient=False))
+    w.set_trigger_enabled("td", False)            # → ``disabled`` DLQ class
+    tf.event_store.publish_batch("w", [
+        CloudEvent(subject="s", data={"poison": True}, id="bad-1"),
+        termination_event("d", 1),
+    ])
+    _drain(w, rounds=10)
+    assert plain_store.dlq_by_reason("w") == {
+        REASON_ACTION_ERROR: 1, REASON_DISABLED: 1}
+    assert plain_store.dlq_size("w") == 2
+    # the reasons filter redrives selectively — poison stays put
+    assert plain_store.redrive("w", reasons=(REASON_DISABLED,)) == 1
+    assert plain_store.dlq_by_reason("w") == {REASON_ACTION_ERROR: 1}
+    # unfiltered redrive is the legacy everything behaviour
+    assert plain_store.redrive("w") == 1
+    assert plain_store.dlq_size("w") == 0
+
+
+def test_trigger_retry_policy_survives_spec_roundtrip():
+    trg = make_trigger("s", condition={"name": "true"},
+                       action={"name": "noop"}, trigger_id="t",
+                       retry={"max_attempts": 6, "backoff_base": 0.01})
+    from repro.core.triggers import Trigger
+    spec = trg.to_dict()
+    assert spec["retry_policy"]["max_attempts"] == 6
+    back = Trigger.from_dict(spec)
+    assert back.retry_policy["max_attempts"] == 6
+    # triggers without a policy don't grow a key (wire-format compat)
+    bare = make_trigger("s", trigger_id="t2")
+    assert "retry_policy" not in bare.to_dict()
+
+
+# -- thread pool: crash-loop breaker gates restarts ------------------------------
+
+def test_pool_breaker_gates_start_shards():
+    store = PartitionedEventStore(4)
+    pool = ShardedWorkerPool(
+        store, MemoryStateStore(), FunctionBackend(store, inline=True),
+        commit_policy="every_batch",
+        breaker={"threshold": 2, "backoff_base": 0.0, "cooldown": 0.15})
+    pool.add_trigger("w", make_trigger(
+        "s", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="t", transient=False))
+    pool.set_shard_count("w", 1)
+    pool.crash_shard("w", pool.shard_ids("w")[0])   # streak 1: restart free
+    assert pool.start_shards("w", 1)
+    assert pool.shard_count("w") == 1
+    pool.crash_shard("w", pool.shard_ids("w")[0])   # streak 2 → circuit opens
+    br = pool.breaker_of("w")
+    assert br.state == "open"
+    pool.start_shards("w", 2)
+    assert pool.shard_count("w") == 0               # starts denied while open
+    snap = pool.obs_snapshot("w")
+    assert snap["counters"]["tf_circuit_open_total"] == 1
+    assert "breaker=" in pool.failure_diagnostics("w")
+    time.sleep(0.2)                                  # cooldown elapses
+    pool.start_shards("w", 2)
+    assert pool.shard_count("w") == 1               # single half-open probe
+    assert br.state == "half_open"
+    pool.remove_shard("w", pool.shard_ids("w")[0])  # clean retire → closed
+    assert br.state == "closed"
+    pool.start_shards("w", 2)
+    assert pool.shard_count("w") == 2
+    pool.stop_all()
+
+
+# -- process runtime: attempt counts survive SIGKILL -----------------------------
+
+def test_proc_retry_counts_durable_across_sigkill(tmp_path):
+    """Kill the shard mid-retry; the replacement continues the attempt count
+    from the durable checkpoint.  If the counter reset on crash, the
+    replacement would burn the full budget again (3 retries); instead it
+    only spends what the checkpoint says is left."""
+    pool = ProcessShardPool(str(tmp_path / "pool"), num_partitions=2,
+                            batch_size=64, child_init=soak_child_init)
+    try:
+        pool.create_workflow("w")
+        pool.add_trigger("w", make_trigger(
+            "s0", condition={"name": "true"},
+            action={"name": "chaos_record", "seed": 0, "fail_pct": 0},
+            trigger_id="t", transient=False,
+            retry={"max_attempts": 4, "backoff_base": 0.25,
+                   "backoff_factor": 1.0, "jitter": 0.0}))
+        # chaos_record treats poison-* ids as always-failing
+        pool.publish("w", CloudEvent(subject="s0", data={}, id="poison-1"))
+        pool.start_shards("w", 1)
+        deadline = time.monotonic() + 20
+        while True:  # wait for a checkpointed (durable) attempt record
+            rec = pool.trigger_context("w", "t").get(RETRY_STATE_KEY, {})
+            if rec.get("poison-1", [0])[0] >= 1:
+                break
+            assert time.monotonic() < deadline, "no attempt ever checkpointed"
+            time.sleep(0.01)
+        pool.crash_shard("w", pool.shard_ids("w")[0])       # real SIGKILL
+        k = pool.trigger_context("w", "t")[RETRY_STATE_KEY]["poison-1"][0]
+        assert k >= 1
+        pool.start_shards("w", 1)
+        while pool.event_store.dlq_size("w") < 1:
+            assert time.monotonic() < deadline, (
+                "poison event never quarantined: "
+                + pool.failure_diagnostics("w"))
+            time.sleep(0.02)
+        snap = pool.obs_snapshot("w")
+        pool.stop_all()
+        assert pool.event_store.dlq_by_reason("w") == {REASON_ACTION_ERROR: 1}
+        assert pool.event_store.lag("w") == 0
+        # the replacement's counters cover only the REMAINING budget: the
+        # killed shard's k attempts were not repeated (durable counter)
+        assert snap["counters"]["tf_poison_events_total"] == 1
+        assert snap["counters"].get("tf_action_retries_total", 0) == 3 - k
+        # final quarantine metadata carries the full cross-crash attempt count
+        p = pool.event_store.partition_for("s0", "w")
+        assert pool.event_store.redrive("w", reasons=(REASON_ACTION_ERROR,)) == 1
+        ev = [e for e in pool.event_store.consume_partitions("w", [p], 10)
+              if e.id == "poison-1"][0]
+        assert dlq_meta(ev)["attempts"] == 4
+    finally:
+        pool.stop_all()
