@@ -1,0 +1,109 @@
+"""Replication overhead: the durable file bus with the segment transport on.
+
+Three rows, all the same store-level noop workload — publish / consume /
+commit over ``FilePartitionedEventStore`` (``fsync=False``, so segment
+appends rather than disk flushes dominate and the transport's cost is
+maximally visible):
+
+* replication.noop_off  — plain file bus (the committed baseline shape).
+* replication.noop_on   — every segment mutation shipped to a live
+                          ``ReplicaServer`` through the default *pipelined*
+                          client (merged frames, scatter-gather sends, acks
+                          drained in the background), including the final
+                          ``drain_replication`` so unacked frames cannot
+                          flatter the number.  Gated in CI at >= 0.85x of
+                          replication-off on the best *paired* off/on ratio
+                          (``scripts/perf_gate.py``).
+* replication.noop_sync — the semi-sync client (each append blocks on its
+                          ack): the price of a hard zero-lag recovery
+                          point, reported for the table but not gated.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.bus import ReplicaServer
+from repro.bus.partitioned import FilePartitionedEventStore
+from repro.core import termination_event
+
+
+def bench_replicated_bus(n_events: int = 50_000, partitions: int = 4,
+                         subjects: int = 32, batch: int = 1024,
+                         replicate: bool = False,
+                         sync: bool = False) -> Dict:
+    """Store-level publish/consume/commit loop; with ``replicate`` every
+    mutation also ships to a live replica and the timed window includes the
+    final pipeline drain (replica fully caught up, byte for byte)."""
+    root = tempfile.mkdtemp(prefix="tf-repl-bench-")
+    server = None
+    store = None
+    try:
+        kw = {}
+        if replicate:
+            server = ReplicaServer(os.path.join(root, "replica"))
+            kw = {"replicate_to": server.address, "replicate_sync": sync}
+        store = FilePartitionedEventStore(
+            os.path.join(root, "bus"), partitions, fsync=False, **kw)
+        wf = "bench"
+        events = [termination_event("s%d" % (i % subjects), i)
+                  for i in range(n_events)]
+        t0 = time.perf_counter()
+        for i in range(0, n_events, batch):
+            store.publish_batch(wf, events[i:i + batch])
+        done = 0
+        while done < n_events:
+            got = store.consume(wf, batch)
+            if not got:
+                break
+            store.commit(wf, [e.id for e in got])
+            done += len(got)
+        assert store.drain_replication(30.0), "replication never drained"
+        dt = time.perf_counter() - t0
+        assert done == n_events and store.lag(wf) == 0
+        if replicate:
+            assert store.replication_stats()["lag_bytes"] == 0
+        return {"events": n_events, "seconds": dt,
+                "events_per_s": n_events / dt}
+    finally:
+        if store is not None and store._rep is not None:
+            store._rep.close()
+        if server is not None:
+            server.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(reps: int = 3) -> List[Dict]:
+    # Interleaved, and the quoted overhead ratios are best-*paired* (each
+    # variant against the replication-off run measured right next to it):
+    # pairing cancels machine-state drift that best-of-each-side does not.
+    best = {"off": 0.0, "on": 0.0, "sync": 0.0}
+    ratio = {"off": 1.0, "on": 0.0, "sync": 0.0}
+    for _ in range(reps):
+        off = bench_replicated_bus()["events_per_s"]
+        on = bench_replicated_bus(replicate=True)["events_per_s"]
+        syn = bench_replicated_bus(replicate=True, sync=True)["events_per_s"]
+        best["off"] = max(best["off"], off)
+        best["on"] = max(best["on"], on)
+        best["sync"] = max(best["sync"], syn)
+        ratio["on"] = max(ratio["on"], on / off)
+        ratio["sync"] = max(ratio["sync"], syn / off)
+
+    def row(name: str, key: str, note: str) -> Dict:
+        eps = best[key]
+        return {"name": name, "us_per_call": 1e6 / eps, "events_per_s": eps,
+                "derived": f"{eps:.0f} events/s ({note}, "
+                           f"{ratio[key]:.2f}x of replication-off paired, "
+                           f"best of {reps})"}
+
+    return [
+        {"name": "replication.noop_off", "us_per_call": 1e6 / best["off"],
+         "events_per_s": best["off"],
+         "derived": f"{best['off']:.0f} events/s "
+                    f"(file bus, replication off, best of {reps})"},
+        row("replication.noop_on", "on", "pipelined transport + drain"),
+        row("replication.noop_sync", "sync", "semi-sync: per-append ack"),
+    ]

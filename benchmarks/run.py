@@ -27,6 +27,7 @@ SUITES = [
     ("roofline", "§Roofline — per (arch × shape) dry-run terms"),
     ("obs", "Observability — metrics/trace plane overhead on the noop action plane"),
     ("policy", "Failure policy — idle retry-policy overhead on the noop action plane"),
+    ("replication", "Host-loss domain — segment-transport overhead on the file bus"),
 ]
 
 

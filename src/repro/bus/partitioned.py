@@ -55,10 +55,23 @@ except ImportError:  # pragma: no cover - non-POSIX: in-process locks only
     fcntl = None  # type: ignore[assignment]
 
 from ..core.events import CloudEvent, stamp_publish_time
-from ..core.eventstore import EventStore, SegmentLog, StreamShard
+from ..core.eventstore import EventStore, SegmentLog, StreamShard, fsync_dir
+from .replicate import ReplicationClient
 
 # subject -> partition. Stable across processes/restarts (crc32, not hash()).
 Partitioner = Callable[[str, int], int]
+
+
+class FencedWrite(RuntimeError):
+    """A stale partition owner tried to write past its lease.
+
+    Raised (loudly) instead of appending: the partition's lease file carries
+    a higher epoch (or a different owner) than the one this store instance
+    acquired, which means ownership moved on — a paused/SIGSTOPped/netsplit
+    node resuming must never silently interleave its writes with the new
+    owner's.  The fence *latches*: once fenced, every further owner write to
+    that partition is rejected until the runtime explicitly re-acquires the
+    lease through a sanctioned assignment."""
 
 
 def subject_partitioner(subject: str, num_partitions: int) -> int:
@@ -416,6 +429,39 @@ def _decode_event_batch(line: str) -> List[CloudEvent]:
     return [from_dict(d) for d in json.loads(line)]
 
 
+#: Separator between a committed record's lease-epoch prefix and the event
+#: id (``e<epoch>\x1f<id>``).  Unit separator: ids never contain it, and it
+#: is a 1-byte ASCII control char so byte offsets stay equal to char counts.
+_EPOCH_SEP = "\x1f"
+
+
+def _encode_commit_line(event_id: str, epoch: Optional[int]) -> str:
+    """A committed record; when the writer holds a lease it *carries the
+    owner's epoch*, so any reader can audit that commit epochs only ever
+    move forward (the fencing invariant, observable on disk)."""
+    if epoch is None:
+        return event_id
+    return "e%d%s%s" % (epoch, _EPOCH_SEP, event_id)
+
+
+def _decode_commit_line(line: str) -> str:
+    """Committed record → event id (epoch prefix stripped if present)."""
+    if line.startswith("e"):
+        i = line.find(_EPOCH_SEP)
+        if i > 1 and line[1:i].isdigit():
+            return line[i + 1:]
+    return line
+
+
+def _commit_line_epoch(line: str) -> Optional[int]:
+    """The epoch a committed record carries, if any (audit/tests)."""
+    if line.startswith("e"):
+        i = line.find(_EPOCH_SEP)
+        if i > 1 and line[1:i].isdigit():
+            return int(line[1:i])
+    return None
+
+
 class _FilePartition:
     """One partition's durable state + its in-process mirror.
 
@@ -504,7 +550,7 @@ class _FilePartition:
                     continue
                 self.dlq_ids.add(ev.id)
                 shard.to_dlq(ev)
-        ids, self.com_off = self.com.scan(str, self.com_off)
+        ids, self.com_off = self.com.scan(_decode_commit_line, self.com_off)
         if ids or self.deferred:
             want = self.deferred
             want.update(ids)
@@ -542,10 +588,35 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         num_partitions: int = 8,
         partitioner: Optional[Partitioner] = None,
         fsync: bool = True,
+        replicate_to=None,
+        replicate_sync: bool = False,
+        replicate_prefix: str = "",
+        lease_owner: Optional[str] = None,
+        lease_ttl: float = 30.0,
+        lease_skew_hook: Optional[Callable[[str, int], bool]] = None,
+        replicate_fault_hook: Optional[Callable[[str, str], None]] = None,
     ) -> None:
         super().__init__(num_partitions, partitioner)
         self.root = root
         self.fsync = fsync
+        # -- host-loss fault domain -------------------------------------------
+        # replicate_to: (host, port) of a ReplicaServer — every segment
+        # mutation this process makes is shipped there (see repro.bus.replicate)
+        self._rep: Optional[ReplicationClient] = None
+        if replicate_to is not None:
+            self._rep = ReplicationClient(
+                replicate_to, root, sync=replicate_sync,
+                fault_hook=replicate_fault_hook, prefix=replicate_prefix)
+        # lease_owner: this process's fencing identity.  When set, owner-side
+        # mutations (commit / quarantine / redrive) validate the partition's
+        # lease epoch under the flock before appending; a superseded epoch
+        # raises FencedWrite instead of interleaving.
+        self.lease_owner = lease_owner
+        self.lease_ttl = lease_ttl
+        self.lease_skew_hook = lease_skew_hook  # chaos seam: force-expire
+        self.fenced_writes = 0
+        self._lease_epochs: Dict[Any, int] = {}  # (wf, p) -> acquired epoch
+        self._fenced: set = set()                # latched (wf, p) fences
         os.makedirs(root, exist_ok=True)
         meta_p = os.path.join(root, "bus.json")
         if os.path.exists(meta_p):
@@ -628,6 +699,11 @@ class FilePartitionedEventStore(PartitionedStoreBase):
                         _FilePartition(os.path.join(d, "p%04d" % p), self.fsync)
                         for p in range(n)
                     ]
+                    if self._rep is not None:
+                        for fp in fps:
+                            fp.log.replicator = self._rep
+                            fp.com.replicator = self._rep
+                            fp.dlq.replicator = self._rep
                     self._fps[workflow] = fps
         return fps
 
@@ -690,6 +766,139 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         seg.truncate(off)
         return off + seg.append(lines)
 
+    # -- lease-fenced ownership (the host-loss fault domain) -------------------
+    # One JSON lease record per partition, next to ``stream.json``:
+    # ``{"partition": p, "owner": <node id>, "epoch": n, "expires": unix-ts}``.
+    # The *epoch* is a per-partition monotonic counter bumped on every
+    # acquisition; the runtime (consumer-group assignment / host-loss
+    # recovery) force-acquires on ownership change, and every owner-side
+    # mutation re-validates its epoch atomically with the append (both under
+    # the partition's exclusive flock) — so a stale owner is rejected, never
+    # interleaved.  Expiry is the ownerless-cleanup signal, not the safety
+    # mechanism: epochs do the fencing.
+
+    def _lease_path(self, workflow: str, p: int) -> str:
+        return os.path.join(self._wf_dir(workflow), "lease.p%04d.json" % p)
+
+    def _read_lease(self, workflow: str, p: int) -> Dict[str, Any]:
+        try:
+            with open(self._lease_path(workflow, p)) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return {"partition": p, "owner": None, "epoch": 0, "expires": 0.0}
+
+    def _write_lease(self, workflow: str, p: int, rec: Dict[str, Any]) -> None:
+        path = self._lease_path(workflow, p)
+        data = json.dumps(rec, separators=(",", ":"))
+        tmp = path + ".%d.tmp" % os.getpid()
+        with open(tmp, "w") as f:
+            f.write(data)
+            f.flush()
+            if self.fsync:
+                os.fsync(f.fileno())
+        os.replace(tmp, path)
+        if self._rep is not None:
+            self._rep.ship_put(path, data)
+            # ownership transitions are rare control-plane writes: push them
+            # to the replica NOW, so a recovery sees the newest epochs and
+            # its own bump stays strictly above any fenced zombie's
+            if hasattr(self._rep, "flush"):
+                self._rep.flush()
+
+    def _acquire_lease_locked(self, workflow: str, p: int) -> int:
+        cur = self._read_lease(workflow, p)
+        epoch = int(cur.get("epoch", 0)) + 1
+        self._write_lease(workflow, p, {
+            "partition": p, "owner": self.lease_owner, "epoch": epoch,
+            "expires": time.time() + self.lease_ttl})
+        self._lease_epochs[(workflow, p)] = epoch
+        self._fenced.discard((workflow, p))
+        return epoch
+
+    def acquire_partition_lease(self, workflow: str, p: int) -> int:
+        """Force-acquire partition ``p``'s lease for this node (epoch bump).
+        Called by the runtime on sanctioned ownership changes — consumer
+        group assignment and host-loss recovery.  Returns the new epoch."""
+        if self.lease_owner is None:
+            raise ValueError("store has no lease_owner; cannot acquire")
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock, self._plock(fp):
+            return self._acquire_lease_locked(workflow, p)
+
+    def reacquire_partition_leases(self, workflow: str,
+                                   partitions: Iterable[int]) -> Dict[int, int]:
+        """Acquire every given partition's lease; clears any fence latches.
+        The runtime's assignment path (NOT individual writers) calls this —
+        which is what lets a circuit breaker gate lease re-acquisition: no
+        sanctioned assignment, no new epoch."""
+        return {p: self.acquire_partition_lease(workflow, p)
+                for p in partitions}
+
+    def release_partition_lease(self, workflow: str, p: int) -> None:
+        """Give the lease up cleanly (revoked partition): owner cleared,
+        epoch preserved so the next acquisition still moves forward."""
+        key = (workflow, p)
+        epoch = self._lease_epochs.pop(key, None)
+        self._fenced.discard(key)
+        if epoch is None or self.lease_owner is None:
+            return
+        fp = self._parts(workflow)[p]
+        with fp.shard.lock, self._plock(fp):
+            cur = self._read_lease(workflow, p)
+            if cur.get("owner") == self.lease_owner \
+                    and cur.get("epoch") == epoch:
+                self._write_lease(workflow, p, {
+                    "partition": p, "owner": None, "epoch": epoch,
+                    "expires": 0.0})
+
+    def lease_holders(self, workflow: str) -> Dict[int, str]:
+        """Current on-disk lease holder per partition (``owner@e<epoch>``),
+        for diagnostics — what a stalled recovery shows in its timeout."""
+        out: Dict[int, str] = {}
+        for p in range(self.num_partitions_for(workflow)):
+            rec = self._read_lease(workflow, p)
+            if rec.get("owner") is not None:
+                out[p] = "%s@e%s" % (rec["owner"], rec.get("epoch", 0))
+        return out
+
+    def _fence(self, workflow: str, p: int, why: str) -> None:
+        self._fenced.add((workflow, p))
+        self.fenced_writes += 1
+        raise FencedWrite(
+            "partition %d of %r: writes by %r fenced (%s)"
+            % (p, workflow, self.lease_owner, why))
+
+    def _check_lease(self, workflow: str, p: int) -> Optional[int]:
+        """Validate (or first-acquire) this node's lease under the partition
+        flock, immediately before an owner-side append.  Returns the epoch
+        the append must carry, or None when leasing is off."""
+        if self.lease_owner is None:
+            return None
+        key = (workflow, p)
+        if key in self._fenced:
+            self.fenced_writes += 1
+            raise FencedWrite(
+                "partition %d of %r: %r is fenced (lease superseded); "
+                "writes stay rejected until re-assignment"
+                % (p, workflow, self.lease_owner))
+        epoch = self._lease_epochs.get(key)
+        if epoch is None:
+            return self._acquire_lease_locked(workflow, p)
+        hook = self.lease_skew_hook
+        if hook is not None and hook(workflow, p):
+            self._fence(workflow, p,
+                        "lease expired under injected clock skew")
+        cur = self._read_lease(workflow, p)
+        if cur.get("epoch") != epoch or cur.get("owner") != self.lease_owner:
+            self._fence(workflow, p, "superseded by %s@e%s"
+                        % (cur.get("owner"), cur.get("epoch")))
+        if float(cur.get("expires", 0.0)) < time.time():
+            # expired but unclaimed: renew in place (same epoch — only an
+            # acquisition by another node moves the epoch)
+            cur["expires"] = time.time() + self.lease_ttl
+            self._write_lease(workflow, p, cur)
+        return epoch
+
     def create_stream(self, workflow: str,
                       num_partitions: Optional[int] = None) -> None:
         if num_partitions is not None:
@@ -715,6 +924,10 @@ class FilePartitionedEventStore(PartitionedStoreBase):
                         json.dump({"num_partitions": num_partitions}, f)
                     try:
                         os.rename(tmp_d, d)
+                        # the rename-into-place is the stream's creation
+                        # event: fsync the parent so a crash right after
+                        # cannot lose the directory entry (and the pin in it)
+                        fsync_dir(self.root)
                     except OSError:  # lost the creation race: verify below
                         shutil.rmtree(tmp_d, ignore_errors=True)
                 # re-read the effective pin from disk (ours, or a racing
@@ -725,6 +938,13 @@ class FilePartitionedEventStore(PartitionedStoreBase):
                     raise ValueError(
                         "stream %r is pinned to %s partitions, create_stream "
                         "asked for %s" % (workflow, pinned, num_partitions))
+                if self._rep is not None:
+                    # the pin must survive host loss too: without it a
+                    # restored root would fall back to the bus default and
+                    # misroute every subject
+                    self._rep.ship_put(
+                        self._stream_meta_path(workflow),
+                        json.dumps({"num_partitions": pinned}))
         self._parts(workflow)
 
     def workflows(self) -> List[str]:
@@ -798,7 +1018,10 @@ class FilePartitionedEventStore(PartitionedStoreBase):
                 mine = ids & fp.shard.pending_ids
                 if not mine:
                     return 0
-                fp.com_off = self._append_clean(fp.com, fp.com_off, sorted(mine))
+                epoch = self._check_lease(workflow, p)
+                fp.com_off = self._append_clean(
+                    fp.com, fp.com_off,
+                    [_encode_commit_line(i, epoch) for i in sorted(mine)])
                 return fp.shard.commit(mine)
 
     def _lag_p(self, workflow: str, p: int) -> int:
@@ -878,9 +1101,12 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             fp.sync(full=True)
             if not fp.shard.dlq_size():
                 return 0
+            epoch = self._check_lease(workflow, p)
             marker = dict(_REDRIVE_MARKER)
             if reasons is not None:
                 marker["reasons"] = list(reasons)
+            if epoch is not None:
+                marker["epoch"] = epoch
             n = fp.shard.redrive(reasons)
             if not n:
                 return 0
@@ -903,6 +1129,7 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         fp = self._parts(workflow)[p]
         with fp.shard.lock, self._plock(fp):
             fp.sync(full=True)
+            self._check_lease(workflow, p)
             fp.dlq_off = self._append_clean(
                 fp.dlq, fp.dlq_off, [event.to_json()])
             fp.dlq_ids.add(event.id)
@@ -925,3 +1152,100 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         with fp.shard.lock:
             fp.sync(full=True)
             return fp.shard.committed_events()
+
+    # -- replication surface + host-loss recovery ------------------------------
+    def replica_lags(self, workflow: str) -> List[int]:
+        """Per-partition unacked replication bytes (shipped by THIS process
+        minus acked by the replica).  Zeros when replication is off."""
+        n = self.num_partitions_for(workflow)
+        out = [0] * n
+        if self._rep is None:
+            return out
+        wfd = workflow.replace("/", "_")
+        for rel, lag in self._rep.lag_by_rel().items():
+            head, _, fn = rel.rpartition(os.sep)
+            if os.path.basename(head) == wfd and fn.startswith("p") \
+                    and fn[1:5].isdigit():
+                p = int(fn[1:5])
+                if p < n:
+                    out[p] += lag
+        return out
+
+    def replication_stats(self) -> Dict[str, int]:
+        if self._rep is None:
+            return {"ships": 0, "errors": 0, "lag_bytes": 0}
+        return {"ships": self._rep.ships, "errors": self._rep.errors,
+                "lag_bytes": self._rep.replica_lag_bytes()}
+
+    def drain_replication(self, timeout: float = 10.0) -> bool:
+        """Wait for every shipped frame to be acked; True if drained."""
+        if self._rep is None:
+            return True
+        return self._rep.drain(timeout)
+
+    def heal_replication(self, workflow: str) -> None:
+        """Force-reconcile the replica with the local files: ship a
+        zero-length append at each segment's local EOF — a gap (e.g. from a
+        dropped frame whose file was never appended to again) NACKs and
+        heals from the local file."""
+        if self._rep is None:
+            return
+        d = self._wf_dir(workflow)
+        if not os.path.isdir(d):
+            return
+        for fn in sorted(os.listdir(d)):
+            if fn.rpartition(".")[2] in ("log", "committed", "dlq"):
+                path = os.path.join(d, fn)
+                self._rep.ship_append(path, os.path.getsize(path), "")
+
+    def restore_from_replica(self, workflow: str, replica_root: str) -> int:
+        """Host-loss recovery: rebuild the workflow's segment root from a
+        replica root (same layout, written by a ``ReplicaServer``).
+
+        Copies the replica's files into place, then drops every in-memory
+        mirror/cache so the next access replays the restored segments from
+        offset zero through the ordinary torn-tail-tolerant ``sync`` path —
+        recovery IS the crash-replay path, just fed from the replica's
+        bytes.  Lease memory for the workflow is dropped too: ownership
+        comes back only through explicit re-acquisition (epoch bump).
+        Returns the number of bytes restored."""
+        src = os.path.join(os.path.abspath(replica_root),
+                           workflow.replace("/", "_"))
+        dst = self._wf_dir(workflow)
+        restored = 0
+        with self._lock:
+            fps = self._fps.pop(workflow, None)
+            if fps:
+                for fp in fps:
+                    for seg in (fp.log, fp.com, fp.dlq):
+                        seg.reset()
+                    try:
+                        fp.lockf.close()
+                    except OSError:  # pragma: no cover
+                        pass
+            fd = self._notify_fd.pop(workflow, None)
+            if fd is not None:
+                try:
+                    fd.close()
+                except OSError:  # pragma: no cover
+                    pass
+            self._notify_seen.pop(workflow, None)
+            self._lag_cache.pop(workflow, None)
+            self._lag_verified.pop(workflow, None)
+            for key in [k for k in self._lease_epochs if k[0] == workflow]:
+                del self._lease_epochs[key]
+            self._fenced = {k for k in self._fenced if k[0] != workflow}
+            os.makedirs(dst, exist_ok=True)
+            if os.path.isdir(src):
+                for fn in sorted(os.listdir(src)):
+                    if fn == "pub.notify":
+                        continue
+                    s = os.path.join(src, fn)
+                    if not os.path.isfile(s):
+                        continue
+                    shutil.copyfile(s, os.path.join(dst, fn))
+                    restored += os.path.getsize(s)
+            fsync_dir(dst)
+        # wake pollers: everything under the workflow changed
+        self._bump_notify(workflow)
+        return restored

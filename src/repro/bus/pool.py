@@ -385,12 +385,27 @@ class ShardedWorkerPool:
     def _rebalance(self, wp: _WorkflowShards) -> None:
         wp.rebalances += 1
         assignment = wp.group.assignment()
+        granted: set = set()
         for member, worker in wp.shards.items():
             parts = tuple(assignment.get(member, ()))
             with worker.lock:
                 if worker.partitions != parts:
                     worker.partitions = parts
                     worker.rebalance_reset()
+            granted.update(parts)
+        # lease-fenced stores (host-loss fault domain): a rebalance is the
+        # only sanctioned ownership change, so it is the only place fence
+        # latches clear.  With the breaker open no shards start, no
+        # rebalance grants anything, and no lease is re-acquired — the
+        # fencing plane honors the failure-policy plane's quarantine.
+        reacquire = getattr(self.event_store, "reacquire_partition_leases",
+                            None)
+        if reacquire is not None and granted \
+                and getattr(self.event_store, "lease_owner", None) is not None:
+            for wf, w in self._wfs.items():
+                if w is wp:
+                    reacquire(wf, sorted(granted))
+                    break
 
     def set_shard_count(self, workflow: str, count: int) -> List[str]:
         """Add/remove (drive-mode) shards to reach ``count``; returns ids."""
@@ -581,11 +596,24 @@ class ShardedWorkerPool:
         with self._lock:
             wp = self._wfs.get(workflow)
             breaker = wp.breaker.snapshot() if wp else {}
+        rl = getattr(self.event_store, "replica_lags", None)
+        try:
+            rep_lag = {p: n for p, n in enumerate(rl(workflow)) if n} \
+                if rl is not None else {}
+        except Exception:  # noqa: BLE001
+            rep_lag = {}
+        lh = getattr(self.event_store, "lease_holders", None)
+        try:
+            leases = lh(workflow) if lh is not None else {}
+        except Exception:  # noqa: BLE001
+            leases = {}
         return (f"lag={sum(lags.values())} "
                 f"partition_lags={ {p: n for p, n in lags.items() if n} } "
                 f"dlq_by_reason={dlq} "
                 f"live_shards={self.live_shard_count(workflow)} "
-                f"breaker={breaker}")
+                f"breaker={breaker} "
+                f"replica_lag={rep_lag} "
+                f"leases={leases}")
 
     # -- trigger management (broadcast to every shard) --------------------------
     def add_trigger(self, workflow: str, trigger: Trigger) -> str:
@@ -686,6 +714,20 @@ class ShardedWorkerPool:
         g = snap["gauges"]
         g["tf_restart_backoff_seconds"] = g.get("tf_restart_backoff_seconds", 0.0) \
             + (breaker["restart_backoff_seconds"] if breaker else 0.0)
+        # host-loss fault domain (lease-fenced / replicated stores only):
+        # fenced writes are a store-level counter (the threads share one
+        # store instance), replication lag is the store client's deficit
+        if getattr(self.event_store, "lease_owner", None) is not None:
+            fold_counters(snap, {"tf_fenced_writes_total":
+                                 self.event_store.fenced_writes})
+        rep_stats = getattr(self.event_store, "replication_stats", None)
+        if rep_stats is not None:
+            try:
+                g["tf_replication_lag_bytes"] = (
+                    g.get("tf_replication_lag_bytes", 0)
+                    + rep_stats()["lag_bytes"])
+            except Exception:  # noqa: BLE001 - metrics must never raise
+                pass
         return snap
 
     def metrics(self, workflow: str) -> Dict[str, Any]:

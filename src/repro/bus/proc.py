@@ -52,6 +52,7 @@ from ..obs.metrics import empty_snapshot, fold_counters, merge_snapshot
 from .group import ConsumerGroup
 from .partitioned import FilePartitionedEventStore
 from .pool import ShardWorker
+from .replicate import ReplicaServer, ReplicationClient
 
 
 def _stats_dict(worker) -> Dict[str, int]:
@@ -71,6 +72,15 @@ def _metrics_dict(worker, store) -> Dict[str, Any]:
         snap["counters"].get("tf_log_append_seconds_total", 0)
         + ap["append_seconds"])
     snap["gauges"]["tf_cpu_seconds"] = time.process_time()
+    # host-loss fault domain: writes this shard had fenced (a superseded
+    # lease epoch) and the bytes it has shipped but not yet had acked
+    if getattr(store, "lease_owner", None) is not None:
+        fold_counters(snap, {"tf_fenced_writes_total": store.fenced_writes})
+    rep = getattr(store, "_rep", None)
+    if rep is not None:
+        snap["gauges"]["tf_replication_lag_bytes"] = (
+            snap["gauges"].get("tf_replication_lag_bytes", 0)
+            + rep.replica_lag_bytes())
     return snap
 
 
@@ -87,9 +97,18 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
     idle drop.  Its partitions stay with the (dead) member until the parent's
     next ``reap()`` hands them to survivors — or, at scale-to-zero, until a
     later burst makes the autoscaler start fresh shards."""
+    replica_addr = cfg.get("replica_addr")
+    lease = bool(cfg.get("lease"))
     store = FilePartitionedEventStore(
-        bus_root, num_partitions, fsync=cfg["fsync"])
-    state = FileStateStore(state_root, scope=member)
+        bus_root, num_partitions, fsync=cfg["fsync"],
+        replicate_to=replica_addr, replicate_prefix="bus",
+        lease_owner=member if lease else None,
+        lease_ttl=cfg.get("lease_ttl", 30.0))
+    state_rep = None
+    if replica_addr is not None:
+        state_rep = ReplicationClient(replica_addr, state_root,
+                                      prefix="state")
+    state = FileStateStore(state_root, scope=member, replicator=state_rep)
     backend = FunctionBackend(store, inline=True)
     child_init = cfg.get("child_init")
     if child_init is not None:
@@ -127,9 +146,21 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
                 if op == "assign":
                     parts, gen = tuple(msg[1]), msg[2]
                     with worker.lock:
+                        dropped: tuple = ()
                         if worker.partitions != parts:
+                            dropped = tuple(
+                                set(worker.partitions) - set(parts))
                             worker.partitions = parts
                             worker.rebalance_reset()
+                    if lease:
+                        # sanctioned ownership change: release what moved
+                        # away, (re-)acquire what was granted — the epoch
+                        # bump fences any zombie writer and clears this
+                        # member's own fence latches for the partitions
+                        for p in sorted(dropped):
+                            store.release_partition_lease(workflow, p)
+                        if parts:
+                            store.reacquire_partition_leases(workflow, parts)
                     # fresh ownership restarts the idle clock: the grace
                     # period measures inactivity *while serving*, not time
                     # spent waiting out a rebalance
@@ -151,6 +182,12 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
                 elif op == "stop":
                     if tracer is not None:
                         tracer.flush()
+                    if replica_addr is not None:
+                        # bound the replica's staleness at a clean exit;
+                        # SIGKILL keeps whatever lag was in flight — that
+                        # is the bounded-lag window recovery tolerates
+                        store.drain_replication(5.0)
+                        state_rep.drain(5.0)
                     conn.send(("stopped", member, _stats_dict(worker)))
                     return
             try:
@@ -179,6 +216,9 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
                     # the parent classifies by exit code 0 regardless) and go
                     if tracer is not None:
                         tracer.flush()
+                    if replica_addr is not None:
+                        store.drain_replication(5.0)
+                        state_rep.drain(5.0)
                     try:
                         conn.send(("idle", member, _stats_dict(worker)))
                     except (BrokenPipeError, OSError):  # pragma: no cover
@@ -211,7 +251,8 @@ class _ProcShard:
 class _ProcWorkflow:
     __slots__ = ("group", "shards", "next_id", "crashes", "rebalances",
                  "triggers", "finished", "result", "unreaped", "retired_stats",
-                 "breaker")
+                 "breaker", "node_recoveries", "recovery_seconds",
+                 "unreported_recoveries")
 
     def __init__(self, num_partitions: int,
                  breaker: Optional[CircuitBreaker] = None) -> None:
@@ -233,6 +274,12 @@ class _ProcWorkflow:
         self.retired_stats: Dict[str, int] = {}
         # crash-loop breaker: consecutive-crash streak gates start_shards
         self.breaker = breaker if breaker is not None else CircuitBreaker()
+        # host-loss recoveries (recover_host_loss): lifetime count, summed
+        # wall-clock seconds, and the not-yet-reaped delta the autoscaler's
+        # accounting drains exactly once
+        self.node_recoveries = 0
+        self.recovery_seconds = 0.0
+        self.unreported_recoveries = 0
 
     def fold_retired(self, shard: _ProcShard) -> None:
         if shard.final_stats:
@@ -270,6 +317,10 @@ class ProcessShardPool:
         trace: Optional[str] = None,
         trace_sample: float = 0.1,
         breaker: Optional[Dict[str, Any]] = None,
+        replicate: bool = False,
+        replica_root: Optional[str] = None,
+        lease: bool = False,
+        lease_ttl: float = 30.0,
     ) -> None:
         # ``command_timeout`` bounds every command-pipe round-trip.  Shard
         # processes service the pipe between batches, so it must exceed the
@@ -280,9 +331,28 @@ class ProcessShardPool:
         self.bus_root = os.path.join(root, "bus")
         self.state_root = os.path.join(root, "state")
         self._num_partitions = num_partitions  # bus default; see num_partitions()
+        # -- host-loss fault domain -------------------------------------------
+        # replicate=True stands up a ReplicaServer under <root>/replica (or
+        # ``replica_root`` — on a real deployment, another host) and ships
+        # every segment mutation there: the parent's publishes, each shard
+        # process's commits/DLQ/checkpoints.  The replica mirrors the whole
+        # deployment layout (replica/bus/..., replica/state/...), so
+        # ``recover_host_loss`` can rebuild a lost segment root from it.
+        # lease=True arms lease-fenced ownership in the shard processes.
+        self.replica_root = replica_root or os.path.join(root, "replica")
+        self.replica_server: Optional[ReplicaServer] = None
+        self._rep_addr = None
+        if replicate:
+            self.replica_server = ReplicaServer(self.replica_root)
+            self._rep_addr = self.replica_server.address
         self.event_store = FilePartitionedEventStore(
-            self.bus_root, num_partitions, fsync=fsync)
-        self.state_store = FileStateStore(self.state_root)
+            self.bus_root, num_partitions, fsync=fsync,
+            replicate_to=self._rep_addr, replicate_prefix="bus")
+        self.state_store = FileStateStore(
+            self.state_root,
+            replicator=(ReplicationClient(self._rep_addr, self.state_root,
+                                          prefix="state")
+                        if self._rep_addr is not None else None))
         # trace: None (off) | "sampled" (trace_sample of new roots) |
         # "full" (every fire).  Span segments land under <root>/spans,
         # one SIGKILL-durable file per shard process, stitched by
@@ -297,6 +367,8 @@ class ProcessShardPool:
             "idle_timeout": None,
             "metrics": metrics, "trace": trace, "trace_sample": trace_sample,
             "trace_dir": self.trace_dir,
+            "replica_addr": self._rep_addr, "lease": lease,
+            "lease_ttl": lease_ttl,
         }
         self.metrics_enabled = metrics
         self.command_timeout = command_timeout
@@ -508,6 +580,89 @@ class ProcessShardPool:
             wf.group.leave(member)
             self._rebalance(workflow, wf)
 
+    def recover_host_loss(self, workflow: str, count: Optional[int] = None,
+                          ready_timeout: float = 30.0) -> float:
+        """Bounded-time recovery from losing the node that served
+        ``workflow`` — host *and* local segment root (the disk is gone, not
+        just the processes).  The sequence:
+
+        1. SIGKILL whatever shard processes remain (their working set
+           vanished from under them).  Node loss is not a crash loop: the
+           breaker is NOT fed, so the restart below is not backoff-gated —
+           but an already-open breaker still gates it, by design (a workflow
+           mid-quarantine does not get resurrected by a host failover).
+        2. Rehydrate the workflow's bus partition files from the replica
+           root (``restore_from_replica`` — the ordinary torn-tail-tolerant
+           replay, fed from the replica's bytes).
+        3. Restart ``count`` shards (default: as many as were live).  The
+           fresh children force-acquire the partition leases on their first
+           assignment — the epoch bump fences any zombie writer that
+           survived the "lost" host.
+
+        Returns wall-clock recovery seconds (also ``tf_recovery_seconds``)."""
+        if self.replica_server is None:
+            raise RuntimeError(
+                "recover_host_loss requires the pool to be constructed with "
+                "replicate=True (there is no replica to recover from)")
+        t0 = time.perf_counter()
+        with self._lock:
+            wf = self._wf(workflow)
+            want = count if count is not None else max(1, len(self._live(wf)))
+            for shard in list(wf.shards.values()):
+                if not shard.alive:
+                    continue  # already departed: reap() accounts for it
+                self._drain_final(wf, shard)
+                if shard.proc.is_alive():
+                    os.kill(shard.proc.pid, signal.SIGKILL)
+                shard.proc.join(timeout=10.0)
+                shard.alive = False
+                shard.exit_reason = "host-loss"
+                shard.conn.close()
+                wf.group.leave(shard.member)
+                wf.unreaped.append("host-loss")
+                wf.fold_retired(shard)
+                wf.shards.pop(shard.member, None)
+            self.event_store.restore_from_replica(
+                workflow, os.path.join(self.replica_root, "bus"))
+            wf.node_recoveries += 1
+            wf.unreported_recoveries += 1
+        self.start_shards(workflow, want, ready_timeout=ready_timeout)
+        seconds = time.perf_counter() - t0
+        with self._lock:
+            wf.recovery_seconds += seconds
+        return seconds
+
+    def replica_lag(self, workflow: str) -> Dict[int, int]:
+        """True per-partition replication deficit in bytes: local segment
+        sizes minus the replica's — across ALL writers (parent publishes and
+        every shard process), unlike the per-client ``replica_lags`` view.
+        Empty when replication is off."""
+        out: Dict[int, int] = {}
+        if self.replica_server is None:
+            return out
+        d = os.path.join(self.bus_root, workflow.replace("/", "_"))
+        rd = os.path.join(self.replica_root, "bus",
+                          workflow.replace("/", "_"))
+        if not os.path.isdir(d):
+            return out
+        for fn in sorted(os.listdir(d)):
+            if fn.rpartition(".")[2] not in ("log", "committed", "dlq"):
+                continue
+            if not (fn.startswith("p") and fn[1:5].isdigit()):
+                continue
+            try:
+                local = os.path.getsize(os.path.join(d, fn))
+            except OSError:
+                local = 0
+            try:
+                remote = os.path.getsize(os.path.join(rd, fn))
+            except OSError:
+                remote = 0
+            if local > remote:
+                p = int(fn[1:5])
+                out[p] = out.get(p, 0) + (local - remote)
+        return out
+
     def reap(self, workflow: str) -> Dict[str, Any]:
         """Fold in shards whose process died on its own — idle scale-down,
         workflow end, or a genuine crash (SIGKILL, OOM, failed batch).
@@ -523,7 +678,13 @@ class ProcessShardPool:
         with self._lock:
             wf = self._wfs.get(workflow)
             if wf is None:
-                return {"reaped": 0, "crashed": 0, "reasons": {}}
+                return {"reaped": 0, "crashed": 0, "reasons": {},
+                        "node_recoveries": 0}
+            # host-loss recoveries since the last reap: the restart storm
+            # they caused is deliberate (not a crash loop), so the
+            # autoscaler accounts them separately
+            recoveries = wf.unreported_recoveries
+            wf.unreported_recoveries = 0
             # departures _observe_death already retired (their wf.crashes
             # were counted there; only the report entries are pending)
             for reason in wf.unreaped:
@@ -557,7 +718,8 @@ class ProcessShardPool:
                 wf.shards.pop(shard.member, None)
             if dead:
                 self._rebalance(workflow, wf)
-        return {"reaped": reaped, "crashed": crashed, "reasons": reasons}
+        return {"reaped": reaped, "crashed": crashed, "reasons": reasons,
+                "node_recoveries": recoveries}
 
     def stop(self, workflow: str) -> None:
         with self._lock:
@@ -575,6 +737,19 @@ class ProcessShardPool:
     def stop_all(self) -> None:
         for workflow in list(self._wfs.keys()):
             self.stop(workflow)
+
+    def close_replication(self) -> None:
+        """Tear down the replication plane (tests/soaks; the threads are
+        daemons, so skipping this just leaves idle sockets until exit)."""
+        rep = getattr(self.event_store, "_rep", None)
+        if rep is not None:
+            rep.drain(2.0)
+            rep.close()
+        if self.state_store.replicator is not None:
+            self.state_store.replicator.drain(2.0)
+            self.state_store.replicator.close()
+        if self.replica_server is not None:
+            self.replica_server.close()
 
     def _stop_shard(self, wf: _ProcWorkflow, shard: _ProcShard) -> None:
         reply = self._request(wf, shard, ("stop",), "stopped", timeout=10.0)
@@ -783,11 +958,22 @@ class ProcessShardPool:
             fold_counters(snap, {"tf_rebalance_total": wf.rebalances,
                                  "tf_shard_failures_total": wf.crashes,
                                  "tf_circuit_open_total":
-                                     breaker["opened_total"]})
+                                     breaker["opened_total"],
+                                 "tf_node_recoveries_total":
+                                     wf.node_recoveries})
             g = snap["gauges"]
             g["tf_restart_backoff_seconds"] = (
                 g.get("tf_restart_backoff_seconds", 0.0)
                 + breaker["restart_backoff_seconds"])
+            g["tf_recovery_seconds"] = (
+                g.get("tf_recovery_seconds", 0.0) + wf.recovery_seconds)
+            rep = getattr(self.event_store, "_rep", None)
+            if rep is not None:
+                # the parent's own unacked publishes (shard lag arrives via
+                # the scraped child snapshots above)
+                g["tf_replication_lag_bytes"] = (
+                    g.get("tf_replication_lag_bytes", 0)
+                    + rep.replica_lag_bytes())
         return snap
 
     def trace_spans(self, workflow: Optional[str] = None) -> List[dict]:
@@ -805,6 +991,7 @@ class ProcessShardPool:
                 "shards": len(shards),
                 "crashes": wf.crashes if wf else 0,
                 "rebalances": wf.rebalances if wf else 0,
+                "node_recoveries": wf.node_recoveries if wf else 0,
                 "breaker": wf.breaker.snapshot() if wf else {},
                 "generation": wf.group.generation if wf else 0,
                 "assignment": {s.member: list(s.partitions) for s in shards},
@@ -854,8 +1041,20 @@ class ProcessShardPool:
         with self._lock:
             wf = self._wfs.get(workflow)
             breaker = wf.breaker.snapshot() if wf else {}
+            recoveries = wf.node_recoveries if wf else 0
+        try:
+            rep_lag = self.replica_lag(workflow)
+        except Exception:  # noqa: BLE001
+            rep_lag = {}
+        try:
+            leases = self.event_store.lease_holders(workflow)
+        except Exception:  # noqa: BLE001
+            leases = {}
         return (f"lag={sum(lags.values())} "
                 f"partition_lags={ {p: n for p, n in lags.items() if n} } "
                 f"dlq_by_reason={dlq} "
                 f"live_shards={self.live_shard_count(workflow)} "
-                f"breaker={breaker}")
+                f"breaker={breaker} "
+                f"replica_lag={rep_lag} "
+                f"leases={leases} "
+                f"node_recoveries={recoveries}")

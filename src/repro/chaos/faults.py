@@ -98,11 +98,15 @@ def _batch_key(events) -> str:
 
 
 class ChaosEventStore:
-    """Wraps any event store; injects at the publish and commit seams.
+    """Wraps any event store; injects at the publish, commit and consume
+    seams.
 
-    Everything else (consume, DLQ, partition routing, lag…) passes through,
-    so the wrapper satisfies whatever store protocol the inner one does —
-    including ``ShardedWorkerPool``'s ``consume_partitions`` check.
+    A consume fault fires *before* the inner call ever runs, so the shard's
+    mirror replay has not advanced — the §3.4 contract degenerates to "the
+    poll never happened" and redelivery is automatic.  Everything else (DLQ,
+    partition routing, lag…) passes through, so the wrapper satisfies
+    whatever store protocol the inner one does — including
+    ``ShardedWorkerPool``'s ``consume_partitions`` check.
     """
 
     def __init__(self, inner: Any, plan: FaultPlan) -> None:
@@ -127,6 +131,27 @@ class ChaosEventStore:
     def commit_partitions(self, workflow: str, partitions, event_ids) -> None:
         self._plan.check("store.commit", _batch_key(event_ids))
         return self._inner.commit_partitions(workflow, partitions, event_ids)
+
+    # consume seam: the fault fires BEFORE the inner call, so no mirror
+    # offset has advanced — the poll simply failed, and the next one sees
+    # exactly the events this one would have.  Keyed by workflow+partitions
+    # (a consume has no stable event identity before it returns).
+    def consume(self, workflow: str, max_events: int = 512):
+        self._plan.check("store.consume", workflow)
+        return self._inner.consume(workflow, max_events)
+
+    def consume_partition(self, workflow: str, partition: int,
+                          max_events: int = 512):
+        self._plan.check("store.consume", f"{workflow}:{partition}")
+        return self._inner.consume_partition(workflow, partition, max_events)
+
+    def consume_partitions(self, workflow: str, partitions,
+                           max_events: int = 512):
+        parts = list(partitions)
+        self._plan.check(
+            "store.consume",
+            f"{workflow}:{','.join(str(p) for p in parts)}")
+        return self._inner.consume_partitions(workflow, parts, max_events)
 
 
 class ChaosStateStore:

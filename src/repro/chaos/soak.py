@@ -50,9 +50,17 @@ WORKFLOW = "chaos-soak"
 # Seeded store-seam fault rates for the thread soak; every seam is capped so
 # the run provably terminates (a fault consumes budget, budgets are finite).
 DEFAULT_RATES = {"store.publish": 0.12, "store.commit": 0.10,
-                 "state.checkpoint": 0.08}
+                 "state.checkpoint": 0.08, "store.consume": 0.05}
 DEFAULT_MAX_FAULTS = {"store.publish": 6, "store.commit": 5,
-                      "state.checkpoint": 4}
+                      "state.checkpoint": 4, "store.consume": 3}
+
+# The replicated soak adds the host-loss fault domain's seams: dropped
+# replication frames/acks (healed, never crashing) and injected lease-expiry
+# clock skew (a loud FencedWrite, cleared only by sanctioned re-assignment).
+REPLICATED_RATES = dict(DEFAULT_RATES, **{
+    "replicate.send": 0.08, "replicate.ack": 0.06, "lease.expire": 0.04})
+REPLICATED_MAX_FAULTS = dict(DEFAULT_MAX_FAULTS, **{
+    "replicate.send": 4, "replicate.ack": 3, "lease.expire": 2})
 
 
 def _u(seed: int, *parts: Any) -> float:
@@ -179,6 +187,27 @@ def assert_invariants(summary: Dict[str, Any], seed: int, n_root: int,
     assert len(ids) == len(set(ids)), "an event id committed twice"
     missing = {f"soak-{i}" for i in range(n_root)} - set(ids)
     assert not missing, f"root events never committed: {sorted(missing)}"
+
+
+def _lose_tree(path: str, timeout: float = 5.0) -> None:
+    """rmtree that tolerates racing writers — the host-loss simulation.
+
+    A zombie shard may recreate a file between rmtree's directory scan and
+    the final rmdir (Errno 39).  It can only win that race a bounded number
+    of times: its next commit reads the missing lease, fences, and exits.
+    """
+    import shutil
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            shutil.rmtree(path)
+            return
+        except FileNotFoundError:
+            return
+        except OSError:
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.01)
 
 
 def _collect(pool, store, n_subj: int) -> Dict[str, Any]:
@@ -315,3 +344,220 @@ def run_soak_proc(root: str, seed: int = 0, n_root: int = 24, n_subj: int = 4,
         return summary
     finally:
         pool.stop_all()
+
+
+def _files_equal(a_dir: str, b_dir: str, skip=("pub.notify",)) -> List[str]:
+    """Names under ``a_dir`` whose bytes differ from (or are missing in)
+    ``b_dir``.  Empty list ⇒ the replica truly mirrors the primary."""
+    import os
+    diff: List[str] = []
+    for fn in sorted(os.listdir(a_dir)):
+        if fn in skip or not os.path.isfile(os.path.join(a_dir, fn)):
+            continue
+        a = os.path.join(a_dir, fn)
+        b = os.path.join(b_dir, fn)
+        try:
+            with open(a, "rb") as fa, open(b, "rb") as fb:
+                if fa.read() != fb.read():
+                    diff.append(fn)
+        except OSError:
+            diff.append(fn)
+    return diff
+
+
+def run_soak_replicated(root: str, seed: int = 0, n_root: int = 30,
+                        n_subj: int = 4, poison_every: int = 11,
+                        fail_pct: int = 30, shards: int = 2,
+                        rates: Optional[Dict[str, float]] = None,
+                        max_faults: Optional[Dict[str, int]] = None,
+                        batch_size: int = 16,
+                        timeout: float = 60.0) -> Dict[str, Any]:
+    """Thread-runtime soak over the *replicated, lease-fenced* file bus.
+
+    Same deterministic drive as ``run_soak`` — plus the host-loss fault
+    domain's seams: replication frames/acks drop on the seeded schedule
+    (healed, never crashing a writer), lease-expiry clock skew fences owner
+    writes (``FencedWrite`` crashes the shard; the replacement's rebalance
+    re-acquires with a bumped epoch), and at a seed-chosen commit volume the
+    primary's segment root is DELETED and rebuilt from the replica
+    (``restore_from_replica``), after which the run resumes exactly-once.
+
+    Every field of the summary — fault history, fence count, the recovery
+    point — is a pure function of the arguments; the determinism test runs
+    it twice and compares.  Before the loss the replica is healed to lag
+    zero (semi-sync replication's acked offset IS the recovery point; the
+    in-flight-lag data-loss window is pinned by the transport tests, not
+    here, so the oracle stays exact for every seed).
+    """
+    import os
+
+    from ..bus import FencedWrite, ReplicaServer, ShardedWorkerPool
+    from ..bus.partitioned import FilePartitionedEventStore
+    from ..core.functions import FunctionBackend
+    from ..core.statestore import MemoryStateStore
+
+    plan = FaultPlan(
+        seed,
+        rates if rates is not None else REPLICATED_RATES,
+        max_faults if max_faults is not None else REPLICATED_MAX_FAULTS)
+    replica_root = os.path.join(root, "replica")
+    server = ReplicaServer(replica_root)
+    inner = FilePartitionedEventStore(
+        os.path.join(root, "bus"), n_subj, fsync=False,
+        replicate_to=server.address, replicate_sync=True,
+        lease_owner="node-a",
+        lease_skew_hook=lambda wf, p: plan.decide(
+            "lease.expire", f"{wf}:{p}"),
+        replicate_fault_hook=plan.check)
+    store = ChaosEventStore(inner, plan)
+    state = ChaosStateStore(MemoryStateStore(), plan)
+    pool = ShardedWorkerPool(
+        store, state, FunctionBackend(store, inline=True),
+        commit_policy="every_batch", batch_size=batch_size,
+        keep_event_log=False)
+    try:
+        inner.create_stream(WORKFLOW)
+        for trg in _soak_triggers(seed, n_subj, poison_every, fail_pct):
+            pool.add_trigger(WORKFLOW, trg)
+        inner.publish_batch(WORKFLOW, [
+            CloudEvent(subject="fan", data={"i": i}, id=f"soak-{i}")
+            for i in range(n_root)])
+        pool.set_shard_count(WORKFLOW, shards)
+
+        total_commits = n_root + (n_root - n_poison(n_root, poison_every))
+        loss_at = int(total_commits * (0.2 + 0.5 * _u(seed, "host-loss")))
+        deadline = time.monotonic() + timeout
+        crashes = recoveries = 0
+        lost = False
+        while True:
+            progressed = 0
+            for member in pool.shard_ids(WORKFLOW):
+                try:
+                    progressed += pool.run_shard_once(WORKFLOW, member)
+                except (InjectedFault, FencedWrite):
+                    # an injected fault tore the batch, or the owner's lease
+                    # was superseded/skew-expired mid-write: either way the
+                    # shard dies loudly and the replacement replays
+                    pool.crash_shard(WORKFLOW, member)
+                    crashes += 1
+            if not lost and \
+                    sum(inner.commit_offsets(WORKFLOW)) >= loss_at:
+                lost = True
+                # heal the replica to lag zero (drop caps make this
+                # converge), then lose the host: segment root deleted,
+                # rebuilt from the replica, every worker replaced
+                for _ in range(8):
+                    inner.heal_replication(WORKFLOW)
+                    inner.drain_replication(10.0)
+                    if inner.replication_stats()["lag_bytes"] == 0:
+                        break
+                _lose_tree(inner._wf_dir(WORKFLOW))
+                inner.restore_from_replica(WORKFLOW, replica_root)
+                for member in pool.shard_ids(WORKFLOW):
+                    pool.crash_shard(WORKFLOW, member)
+                recoveries += 1
+            if pool.shard_count(WORKFLOW) < shards:
+                pool.set_shard_count(WORKFLOW, shards)
+                continue
+            if progressed == 0 and inner.lag(WORKFLOW) == 0:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError("replicated chaos soak did not drain: "
+                                   + pool.failure_diagnostics(WORKFLOW))
+
+        # final reconcile: the replica must end byte-identical to the
+        # primary (modulo the advisory notify/lease/meta files)
+        for _ in range(8):
+            inner.heal_replication(WORKFLOW)
+            inner.drain_replication(10.0)
+            if inner.replication_stats()["lag_bytes"] == 0:
+                break
+        wf_dirname = WORKFLOW.replace("/", "_")
+        diverged = [
+            fn for fn in _files_equal(
+                inner._wf_dir(WORKFLOW),
+                os.path.join(replica_root, wf_dirname))
+            if fn.rpartition(".")[2] in ("log", "committed", "dlq")]
+        assert not diverged, f"replica diverged from primary: {diverged}"
+
+        summary = _collect(pool, inner, n_subj)
+        summary["faults"] = plan.faults_injected()
+        summary["history"] = list(plan.history)
+        summary["crashes"] = crashes
+        summary["fenced"] = inner.fenced_writes
+        summary["dropped_frames"] = inner._rep.dropped if inner._rep else 0
+        summary["recoveries"] = recoveries
+        assert recoveries == 1, "the host-loss point never fired"
+        assert_invariants(summary, seed, n_root, n_subj, poison_every,
+                          fail_pct)
+        return summary
+    finally:
+        if inner._rep is not None:
+            inner._rep.close()
+        server.close()
+
+
+def run_soak_host_loss(root: str, seed: int = 0, n_root: int = 24,
+                       n_subj: int = 4, poison_every: int = 9,
+                       fail_pct: int = 30, shards: int = 2,
+                       batch_size: int = 16, timeout: float = 120.0,
+                       recovery_bound: float = 15.0,
+                       fsync: bool = False) -> Dict[str, Any]:
+    """Process-runtime host-loss soak: run the chaos workload on a
+    replicated, lease-fenced ``ProcessShardPool``; at a seed-chosen commit
+    volume DELETE the workflow's segment root out from under the live shard
+    processes (unlinked inodes: the nastiest version of losing the disk),
+    then ``recover_host_loss`` — SIGKILL the zombies, rehydrate from the
+    replica, restart with bumped lease epochs — and drain to the exact
+    oracle.  Asserts recovery lands under ``recovery_bound`` seconds."""
+    import os
+
+    from ..bus import ProcessShardPool
+
+    pool = ProcessShardPool(
+        root, num_partitions=n_subj, batch_size=batch_size, fsync=fsync,
+        child_init=soak_child_init, replicate=True, lease=True,
+        breaker={"backoff_base": 0.02, "backoff_max": 0.1, "cooldown": 0.05})
+    try:
+        pool.create_workflow(WORKFLOW)
+        for trg in _soak_triggers(seed, n_subj, poison_every, fail_pct):
+            pool.add_trigger(WORKFLOW, trg)
+        pool.publish_batch(WORKFLOW, [
+            CloudEvent(subject="fan", data={"i": i}, id=f"soak-{i}")
+            for i in range(n_root)])
+        pool.start_shards(WORKFLOW, shards)
+
+        total_commits = n_root + (n_root - n_poison(n_root, poison_every))
+        target = int(total_commits * (0.2 + 0.5 * _u(seed, "host-loss")))
+        deadline = time.monotonic() + timeout
+        while (sum(pool.event_store.commit_offsets(WORKFLOW)) < target
+               and pool.lag(WORKFLOW) > 0):
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    "host-loss soak never reached the loss point: "
+                    + pool.failure_diagnostics(WORKFLOW))
+            time.sleep(0.002)
+
+        _lose_tree(os.path.join(
+            pool.bus_root, WORKFLOW.replace("/", "_")))
+        recovery_seconds = pool.recover_host_loss(WORKFLOW, count=shards)
+        assert recovery_seconds < recovery_bound, (
+            f"recovery took {recovery_seconds:.2f}s "
+            f"(bound {recovery_bound}s)")
+
+        pool.wait_drained(
+            WORKFLOW, timeout=max(5.0, deadline - time.monotonic()))
+        summary = _collect(pool, pool.event_store, n_subj)
+        m = pool.metrics(WORKFLOW)
+        summary["crashes"] = m["crashes"]
+        summary["recoveries"] = m["node_recoveries"]
+        summary["recovery_seconds"] = recovery_seconds
+        summary["leases"] = pool.event_store.lease_holders(WORKFLOW)
+        assert summary["recoveries"] == 1
+        assert summary["obs"].get("tf_node_recoveries_total") == 1
+        assert_invariants(summary, seed, n_root, n_subj, poison_every,
+                          fail_pct)
+        return summary
+    finally:
+        pool.stop_all()
+        pool.close_replication()

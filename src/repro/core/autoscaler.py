@@ -101,6 +101,9 @@ class KedaAutoscaler:
         self.scale_ups = 0
         self.scale_downs = 0
         self.restarts = 0
+        # host-loss recoveries observed via reap(): the recovery's restart
+        # storm is deliberate, so it is neither a scale-down nor a crash
+        self.node_recoveries = 0
         self._live: Dict[str, threading.Thread] = {}
         # Classic-mode crash-loop breakers, one per workflow: a worker whose
         # loop keeps dying gets restarted with exponential backoff and is
@@ -196,8 +199,10 @@ class KedaAutoscaler:
         lives: Dict[str, int] = {}
         for wf in workflows:
             reaped = pool.reap(wf)
-            self.scale_downs += reaped["reaped"] - reaped["crashed"]
+            host_lost = reaped["reasons"].get("host-loss", 0)
+            self.scale_downs += reaped["reaped"] - reaped["crashed"] - host_lost
             self.restarts += reaped["crashed"]
+            self.node_recoveries += reaped.get("node_recoveries", 0)
             lags[wf] = pool.lag(wf)
             lives[wf] = pool.live_shard_count(wf)
         # max_workers caps the *total* shard count across workflows, so the
@@ -267,6 +272,7 @@ class KedaAutoscaler:
             "tf_scale_ups_total": self.scale_ups,
             "tf_scale_downs_total": self.scale_downs,
             "tf_restarts_total": self.restarts,
+            "tf_autoscaler_node_recoveries_total": self.node_recoveries,
             # classic-mode breakers only; sharded-mode breakers report
             # through their pool's obs_snapshot (no double counting)
             "tf_circuit_open_total":

@@ -84,6 +84,15 @@ class StreamShard:
 
     def publish(self, events: Iterable[CloudEvent]) -> None:
         events = list(events)
+        if self.dlq:
+            # Quarantine is sticky by id: a re-published copy of a DLQ'd
+            # event (e.g. a replayed producer re-emitting a poison child)
+            # never re-enters the stream — only redrive() can.  Mirrors the
+            # durable store's replay filter, which skips dlq_ids.
+            dlq_ids = {e.id for e in self.dlq}
+            events = [e for e in events if e.id not in dlq_ids]
+            if not events:
+                return
         self._log.extend(events)
         ids = [e.id for e in events]
         pids = self.pending_ids
@@ -197,7 +206,10 @@ class StreamShard:
         return len(self._committed_log)
 
     def to_dlq(self, event: CloudEvent) -> None:
-        self.dlq.append(event)
+        # Idempotent by id: a batch holding two copies of one poison event
+        # quarantines it once (same dedup discipline commit applies).
+        if not any(e.id == event.id for e in self.dlq):
+            self.dlq.append(event)
         if event.id in self.pending_ids:
             self.pending_ids.discard(event.id)
             self._log = [e for e in self._log[self.head:] if e.id != event.id]
@@ -210,10 +222,10 @@ class StreamShard:
         if not self.dlq:
             return 0
         if reasons is None:
-            n = len(self.dlq)
-            self.publish(self.dlq)
-            self.dlq.clear()
-            return n
+            moved_all = list(self.dlq)
+            self.dlq.clear()  # before publish: quarantined ids are filtered
+            self.publish(moved_all)
+            return len(moved_all)
         from .policy import reason_matches
         moved = [e for e in self.dlq if reason_matches(e, reasons)]
         if moved:
@@ -236,6 +248,20 @@ class StreamShard:
 
     def committed_events(self) -> List[CloudEvent]:
         return list(self._committed_log)
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so a freshly-created (or renamed-in) entry survives
+    a crash: on journaling filesystems the file's *data* fsync does not imply
+    the directory entry reached disk."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - non-POSIX / transient
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 class SegmentLog:
@@ -263,7 +289,8 @@ class SegmentLog:
     that *removes* the file must go through ``remove`` so both are dropped.
     """
 
-    __slots__ = ("path", "fsync", "_rf", "_af", "append_count", "append_seconds")
+    __slots__ = ("path", "fsync", "_rf", "_af", "append_count",
+                 "append_seconds", "replicator", "_dir_dirty")
 
     def __init__(self, path: str, fsync: bool = True) -> None:
         self.path = path
@@ -276,6 +303,12 @@ class SegmentLog:
         # already a flush(+fsync) syscall — noise-level overhead.
         self.append_count = 0
         self.append_seconds = 0.0
+        # Optional replication sink (repro.bus.replicate): called after each
+        # durable local mutation with the byte range / new size, so a replica
+        # root can mirror the segment.  Local durability always comes first —
+        # the ship happens after flush+fsync.
+        self.replicator = None
+        self._dir_dirty = False
 
     def size(self) -> int:
         try:
@@ -305,21 +338,37 @@ class SegmentLog:
         self._close()
         if os.path.exists(self.path):
             os.remove(self.path)
+            if self.replicator is not None:
+                self.replicator.ship_remove(self.path)
 
     def append(self, lines: Iterable[str]) -> int:
         """Append one line per record (flush + optional fsync).  Returns the
         number of bytes written."""
         t0 = time.perf_counter()
-        data = "\n".join(lines) + "\n"
+        # binary handle + one explicit encode: the text layer would encode
+        # too, and a replicated log would then pay a SECOND full encode in
+        # ship_append — this way writer and replicator share the same bytes
+        data = ("\n".join(lines) + "\n").encode("utf-8")
         f = self._af
         if f is None:
-            f = self._af = open(self.path, "a")
+            if not os.path.exists(self.path):
+                # first append creates the file: the directory entry needs
+                # its own fsync or a crash right after can lose the file
+                # despite the data fsync below (satellite of §3.4 durability)
+                self._dir_dirty = True
+            f = self._af = open(self.path, "ab")
         f.write(data)
         f.flush()
         if self.fsync:
             os.fsync(f.fileno())
+            if self._dir_dirty:
+                fsync_dir(os.path.dirname(self.path) or ".")
+                self._dir_dirty = False
         self.append_count += 1
         self.append_seconds += time.perf_counter() - t0
+        if self.replicator is not None:
+            end = f.tell()  # exact even with interleaved O_APPEND writers
+            self.replicator.ship_append(self.path, end - len(data), data)
         return len(data)
 
     def scan(self, parse, offset: int = 0):
@@ -367,6 +416,8 @@ class SegmentLog:
                 f.truncate(size)
                 f.flush()
                 os.fsync(f.fileno())
+            if self.replicator is not None:
+                self.replicator.ship_truncate(self.path, size)
 
 
     def repair(self, parse):
@@ -633,7 +684,10 @@ class FileEventStore(EventStore):
                 self._committed_order[workflow] = []
                 self._dlq[workflow] = deque()
                 log_p, _, _ = self._paths(workflow)
+                existed = os.path.exists(log_p)
                 open(log_p, "a").close()
+                if not existed:
+                    fsync_dir(os.path.dirname(log_p) or ".")
 
     def publish(self, workflow: str, event: CloudEvent) -> None:
         self.publish_batch(workflow, [event])

@@ -170,13 +170,19 @@ class FileStateStore(StateStore):
 
     def __init__(self, root: str, compact_every: int = 256,
                  compact_bytes: Optional[int] = None,
-                 scope: Optional[str] = None) -> None:
+                 scope: Optional[str] = None,
+                 replicator=None) -> None:
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._lock = threading.RLock()
         self.compact_every = compact_every
         self.compact_bytes = compact_bytes
         self.scope = scope
+        # host-loss fault domain: a ``repro.bus.replicate.ReplicationClient``
+        # rooted at this store's ``root`` — checkpoint delta appends ship as
+        # segment frames, atomic JSON writes ship as whole-file puts, so a
+        # replica root holds the same recoverable state this disk does
+        self.replicator = replicator
         self._delta_lines: Dict[str, int] = {}
         self._delta_bytes: Dict[str, int] = {}
         self._flocks: Dict[str, Any] = {}
@@ -214,6 +220,8 @@ class FileStateStore(StateStore):
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic
+        if self.replicator is not None:
+            self.replicator.ship_put(path, json.dumps(obj))
 
     def _read(self, path: str, default: Any) -> Any:
         if not os.path.exists(path):
@@ -281,6 +289,7 @@ class FileStateStore(StateStore):
         log = self._own_logs.get(workflow)
         if log is None:
             log = SegmentLog(os.path.join(wf_dir, self._own_log_name()))
+            log.replicator = self.replicator
             self._own_logs[workflow] = log
         return log
 
@@ -290,7 +299,12 @@ class FileStateStore(StateStore):
         names = sorted(
             fn for fn in os.listdir(wf_dir)
             if fn.startswith("contexts.delta") and fn.endswith(".jsonl"))
-        return [SegmentLog(os.path.join(wf_dir, fn)) for fn in names]
+        logs = [SegmentLog(os.path.join(wf_dir, fn)) for fn in names]
+        for log in logs:
+            # compaction removals mirror too — other scopes' logs are
+            # dropped on the replica when the compactor drops them locally
+            log.replicator = self.replicator
+        return logs
 
     def _merged_contexts(self, wf_dir: str) -> Dict[str, Dict[str, Any]]:
         """Base + every delta log.  Between compaction points a trigger id is
@@ -335,6 +349,8 @@ class FileStateStore(StateStore):
     def put_contexts(self, workflow: str, contexts: Dict[str, Dict[str, Any]]) -> None:
         with self._lock, self._flock(workflow, exclusive=True):
             self._compact_locked(workflow, self._dir(workflow), extra=contexts)
+        if self.replicator is not None and hasattr(self.replicator, "flush"):
+            self.replicator.flush()
 
     def put_contexts_delta(self, workflow: str, deltas: Dict[str, Dict[str, Any]]) -> None:
         with self._lock:
@@ -372,6 +388,13 @@ class FileStateStore(StateStore):
                 # concurrent compaction in the gap is benign.
                 with self._flock(workflow, exclusive=True):
                     self._compact_locked(workflow, wf_dir)
+            if self.replicator is not None and \
+                    hasattr(self.replicator, "flush"):
+                # checkpoint-before-commit extends to the replica: the
+                # delta must be *sent* before the caller commits the events
+                # it covers through the (separate) bus client, or a host
+                # loss strands a committed event with no checkpointed result
+                self.replicator.flush()
 
     def get_contexts(self, workflow: str) -> Dict[str, Dict[str, Any]]:
         with self._lock:

@@ -95,6 +95,19 @@ def test_thread_soak_same_seed_same_world():
     assert s1["done"] == expected_results(11, 39, 4, 13, 35)
 
 
+def test_thread_soak_consume_seam_fires_and_replays():
+    """The consume seam (a poll that never happened) participates in the
+    seeded schedule: seed 13 draws it several times, shards crash on it,
+    and two runs still land on the identical world."""
+    s1 = run_soak(seed=13)
+    s2 = run_soak(seed=13)
+    assert s1["faults"].get("store.consume", 0) >= 2
+    for key in ("done", "dlq_by_reason", "committed_ids", "faults",
+                "history", "crashes"):
+        assert s1[key] == s2[key], key
+    assert any(seam == "store.consume" for seam, _k, _n in s1["history"])
+
+
 def test_thread_soak_retry_counters_surface_in_obs():
     # store seams quiet (no shard crashes, so no counters die with their
     # shard) — the flaky/poison actions still drive the retry plane

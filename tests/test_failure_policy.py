@@ -355,6 +355,86 @@ def test_pool_breaker_gates_start_shards():
     pool.stop_all()
 
 
+# -- breaker x lease fencing: no sanctioned re-acquisition while open ------------
+
+def _leased_pool(tmp_path, breaker):
+    from repro.bus import FilePartitionedEventStore
+    store = FilePartitionedEventStore(
+        str(tmp_path / "bus"), 2, fsync=False, lease_owner="node-a")
+    pool = ShardedWorkerPool(
+        store, MemoryStateStore(), FunctionBackend(store, inline=True),
+        commit_policy="every_batch", breaker=breaker)
+    pool.add_trigger("w", make_trigger(
+        "s", condition={"name": "true"}, action={"name": "noop"},
+        trigger_id="t", transient=False))
+    return store, pool
+
+
+def _lease_epochs(store, wf="w"):
+    return {p: int(h.rpartition("@e")[2])
+            for p, h in store.lease_holders(wf).items()}
+
+
+def test_open_breaker_blocks_lease_reacquisition(tmp_path):
+    """Lease re-acquisition rides the assignment path, and the breaker gates
+    assignment: while the circuit is open no shard starts, no rebalance
+    runs, and the on-disk lease epochs must NOT advance — an epoch bump
+    from a crash-looping pool would fence a healthy takeover node."""
+    store, pool = _leased_pool(tmp_path, {"threshold": 2, "backoff_base": 0.0,
+                                          "cooldown": 0.15})
+    pool.set_shard_count("w", 1)                    # assignment → epoch 1
+    assert set(_lease_epochs(store).values()) == {1}
+    pool.crash_shard("w", pool.shard_ids("w")[0])   # streak 1: restart free
+    pool.start_shards("w", 1)                       # re-assignment → epoch 2
+    assert set(_lease_epochs(store).values()) == {2}
+    pool.crash_shard("w", pool.shard_ids("w")[0])   # streak 2 → circuit opens
+    assert pool.breaker_of("w").state == "open"
+    for _ in range(3):                              # denied: no assignment,
+        pool.start_shards("w", 1)                   # so no epoch movement
+    assert pool.shard_count("w") == 0
+    assert set(_lease_epochs(store).values()) == {2}
+    time.sleep(0.2)                                 # cooldown → probe allowed
+    pool.start_shards("w", 1)
+    assert pool.breaker_of("w").state == "half_open"
+    assert set(_lease_epochs(store).values()) == {3}
+    pool.stop_all()
+
+
+def test_fenced_half_open_probe_reopens_breaker(tmp_path):
+    """A half-open probe whose lease was superseded mid-run dies on
+    ``FencedWrite`` like any other owner write — and that death counts as a
+    failed probe: the breaker re-opens instead of letting a fenced zombie
+    keep probing against the new owner's epoch."""
+    from repro.bus import FencedWrite, FilePartitionedEventStore
+    store, pool = _leased_pool(tmp_path, {"threshold": 2, "backoff_base": 0.0,
+                                          "cooldown": 0.05})
+    pool.set_shard_count("w", 1)
+    pool.crash_shard("w", pool.shard_ids("w")[0])
+    pool.start_shards("w", 1)
+    pool.crash_shard("w", pool.shard_ids("w")[0])   # → open
+    br = pool.breaker_of("w")
+    assert br.state == "open" and br.opened_total == 1
+    time.sleep(0.1)
+    pool.start_shards("w", 1)                       # half-open probe
+    assert br.state == "half_open"
+    # another node takes the leases AFTER the probe's assignment: the
+    # probe's next owner-side write runs under a superseded epoch
+    other = FilePartitionedEventStore(
+        str(tmp_path / "bus"), 2, fsync=False, lease_owner="node-b")
+    other.reacquire_partition_leases("w", [0, 1])
+    store.publish_batch("w", [termination_event(f"s{i}", i)
+                              for i in range(8)])
+    member = pool.shard_ids("w")[0]
+    with pytest.raises(FencedWrite):
+        pool.run_shard_once("w", member)            # commit fenced, loudly
+    assert store.fenced_writes >= 1
+    pool.crash_shard("w", member)                   # the fenced probe died
+    assert br.state == "open" and br.opened_total == 2
+    assert pool.obs_snapshot("w")["counters"]["tf_fenced_writes_total"] >= 1
+    assert "leases=" in pool.failure_diagnostics("w")
+    pool.stop_all()
+
+
 # -- process runtime: attempt counts survive SIGKILL -----------------------------
 
 def test_proc_retry_counts_durable_across_sigkill(tmp_path):

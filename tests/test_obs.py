@@ -356,7 +356,8 @@ def test_autoscaler_metrics_snapshot():
     assert snap["counters"] == {"tf_scale_ups_total": 3,
                                 "tf_scale_downs_total": 2,
                                 "tf_restarts_total": 1,
-                                "tf_circuit_open_total": 0}
+                                "tf_circuit_open_total": 0,
+                                "tf_autoscaler_node_recoveries_total": 0}
     assert snap["gauges"]["tf_active_workers"] == 0
     assert snap["gauges"]["tf_restart_backoff_seconds"] == 0.0
     tf.shutdown()

@@ -1,0 +1,315 @@
+"""Host-loss fault domain: replicated segment transport, lease-fenced
+ownership, bounded-time recovery.
+
+Covers:
+* the replication transport's byte-mirroring contract: appends, truncates,
+  removes and whole-file puts land on the replica byte-for-byte, and a
+  replica missing bytes (dropped frame / fresh standby) NACKs and is healed
+  from the authoritative local file,
+* dropped frames/acks (the chaos seams) never crash a writer — they surface
+  as replication lag and heal on the next ack cycle,
+* first-append and create_stream directory fsync: the durable-creation
+  contract (a data fsync alone does not persist a new directory entry),
+* lease fencing between two store instances sharing one segment root: a
+  superseded epoch raises ``FencedWrite`` loudly, latches until sanctioned
+  re-acquisition, and commit epochs on disk only ever move forward,
+* ``restore_from_replica``: a deleted segment root rebuilt from the replica
+  replays to the same committed results through the ordinary
+  torn-tail-tolerant path,
+* the replicated thread soak is seed-deterministic end to end (faults,
+  fences, the host-loss point, committed results), and the process-runtime
+  host-loss soak recovers inside its bound with exactly-once results.
+"""
+import os
+import shutil
+import stat
+
+import pytest
+
+from repro.bus import (FencedWrite, FilePartitionedEventStore, ReplicaServer,
+                       ReplicationClient)
+from repro.chaos import run_soak_host_loss, run_soak_replicated
+from repro.chaos.faults import tear_segment_tail
+from repro.core import termination_event
+from repro.core.eventstore import SegmentLog
+from repro.core.events import CloudEvent
+
+
+# -- transport: byte mirroring + NACK heal ---------------------------------------
+
+def _mirror(tmp_path, **kw):
+    replica = str(tmp_path / "replica")
+    primary = str(tmp_path / "primary")
+    os.makedirs(primary, exist_ok=True)
+    server = ReplicaServer(replica)
+    client = ReplicationClient(server.address, primary, sync=True, **kw)
+    return server, client, primary, replica
+
+
+def test_transport_round_trip_bytes(tmp_path):
+    server, client, primary, replica = _mirror(tmp_path)
+    try:
+        path = os.path.join(primary, "wf", "p0000.log")
+        os.makedirs(os.path.dirname(path))
+        with open(path, "w") as f:
+            f.write("r1\nr2\n")
+        client.ship_append(path, 0, "r1\n")
+        client.ship_append(path, 3, "r2\n")
+        rpath = os.path.join(replica, "wf", "p0000.log")
+        assert open(rpath).read() == "r1\nr2\n"
+        # acks carry absolute replica sizes: lag is zero once acked
+        assert client.replica_lag_bytes() == 0
+        # truncate mirrors torn-tail repair
+        client.ship_truncate(path, 3)
+        assert open(rpath).read() == "r1\n"
+        # put mirrors atomic whole-file replaces (stream.json, leases)
+        meta = os.path.join(primary, "wf", "stream.json")
+        client.ship_put(meta, '{"num_partitions":4}')
+        assert open(os.path.join(replica, "wf", "stream.json")).read() == \
+            '{"num_partitions":4}'
+        # remove mirrors compaction removals
+        client.ship_remove(path)
+        assert not os.path.exists(rpath)
+        assert server.frames >= 5
+    finally:
+        client.close()
+        server.close()
+
+
+def test_transport_prefix_namespaces_trees(tmp_path):
+    """Two primary trees (bus/ and state/) share one replica root via the
+    prefix: the replica mirrors the whole deployment layout."""
+    replica = str(tmp_path / "replica")
+    server = ReplicaServer(replica)
+    bus = ReplicationClient(server.address, str(tmp_path / "bus"),
+                            sync=True, prefix="bus")
+    try:
+        os.makedirs(str(tmp_path / "bus"))
+        p = str(tmp_path / "bus" / "f.log")
+        with open(p, "w") as f:
+            f.write("x\n")
+        bus.ship_append(p, 0, "x\n")
+        assert open(os.path.join(replica, "bus", "f.log")).read() == "x\n"
+    finally:
+        bus.close()
+        server.close()
+
+
+def test_nack_heals_gap_from_local_file(tmp_path):
+    """A replica missing bytes (off past its EOF) NACKs with its size; the
+    client re-ships the gap from the shared local file, which is always
+    authoritative — even when the gap was written by another process."""
+    server, client, primary, replica = _mirror(tmp_path)
+    try:
+        path = os.path.join(primary, "p0.log")
+        with open(path, "w") as f:
+            f.write("a\nb\nc\n")
+        # ship only the LAST record: the replica has nothing, NACKs, and the
+        # heal frame carries [0, 6) straight from the local file
+        client.ship_append(path, 4, "c\n")
+        assert open(os.path.join(replica, "p0.log")).read() == "a\nb\nc\n"
+        assert client.replica_lag_bytes() == 0
+    finally:
+        client.close()
+        server.close()
+
+
+def test_dropped_frames_surface_as_lag_then_heal(tmp_path):
+    """The chaos seams model lost frames/acks on the wire: the local write
+    already happened, the client counts the drop, and the deficit shows as
+    replica lag until a later append's ack NACK-heals the gap.  Writers
+    never crash on a replication fault."""
+    drops = {"n": 2}
+
+    def hook(seam, rel):
+        if seam == "replicate.send" and drops["n"] > 0:
+            drops["n"] -= 1
+            raise RuntimeError("injected: frame lost on wire")
+
+    server, client, primary, replica = _mirror(tmp_path, fault_hook=hook)
+    try:
+        seg = SegmentLog(os.path.join(primary, "p0.log"), fsync=False)
+        seg.replicator = client
+        seg.append(["r1"])          # dropped: no crash, lag grows
+        assert client.dropped == 1
+        assert client.replica_lag_bytes() == 3
+        seg.append(["r2"])          # dropped too
+        assert client.dropped == 2
+        assert client.replica_lag_bytes() == 6
+        # an explicit zero-length append at EOF (heal_replication's
+        # mechanism) NACKs and re-ships the whole missing range
+        client.ship_append(seg.path, seg.size(), "")
+        assert client.replica_lag_bytes() == 0
+        assert open(os.path.join(replica, "p0.log")).read() == "r1\nr2\n"
+    finally:
+        client.close()
+        server.close()
+
+
+# -- directory fsync on creation (durable-creation contract) ---------------------
+
+def _recording_fsync(monkeypatch):
+    """Patch os.fsync to record (st_dev, st_ino) of every directory fd it is
+    handed — the only observable proof the *directory entry* was persisted."""
+    synced = []
+    real = os.fsync
+
+    def fsync(fd):
+        st = os.fstat(fd)
+        if stat.S_ISDIR(st.st_mode):
+            synced.append((st.st_dev, st.st_ino))
+        return real(fd)
+
+    monkeypatch.setattr(os, "fsync", fsync)
+    return synced
+
+
+def _dir_key(path):
+    st = os.stat(path)
+    return (st.st_dev, st.st_ino)
+
+
+def test_segment_first_append_fsyncs_parent_dir(tmp_path, monkeypatch):
+    synced = _recording_fsync(monkeypatch)
+    seg = SegmentLog(str(tmp_path / "seg.log"), fsync=True)
+    seg.append(["r1"])
+    assert _dir_key(str(tmp_path)) in synced, (
+        "first append created the file but never fsynced its directory")
+    # later appends write to an existing entry: no more directory fsyncs
+    synced.clear()
+    seg.append(["r2"])
+    assert _dir_key(str(tmp_path)) not in synced
+
+
+def test_create_stream_fsyncs_bus_root(tmp_path, monkeypatch):
+    """The pinned-stream rename-into-place is the stream's creation event:
+    the bus root is fsynced so a crash right after cannot lose the directory
+    (and the partition pin inside it)."""
+    synced = _recording_fsync(monkeypatch)
+    root = str(tmp_path / "bus")
+    store = FilePartitionedEventStore(root, 8)
+    store.create_stream("wf", num_partitions=2)
+    assert _dir_key(root) in synced
+
+
+# -- lease fencing: two nodes, one segment root ----------------------------------
+
+def _epochs(store, wf):
+    return {p: int(holder.rpartition("@e")[2])
+            for p, holder in store.lease_holders(wf).items()}
+
+
+def test_lease_fencing_two_nodes(tmp_path):
+    root = str(tmp_path / "bus")
+    a = FilePartitionedEventStore(root, 2, fsync=False, lease_owner="node-a")
+    b = FilePartitionedEventStore(root, 2, fsync=False, lease_owner="node-b")
+    wf = "w"
+    evs1 = [termination_event(f"s{i}", i) for i in range(8)]
+    a.publish_batch(wf, evs1)
+    a.commit(wf, [e.id for e in evs1])  # first owner write acquires epoch 1
+    assert set(_epochs(a, wf).values()) == {1}
+    assert all(h.startswith("node-a@") for h in a.lease_holders(wf).values())
+
+    # node-b force-acquires (sanctioned ownership change): epoch bump
+    assert b.reacquire_partition_leases(wf, [0, 1]) == {0: 2, 1: 2}
+    evs2 = [termination_event(f"s{i}", i) for i in range(8, 16)]
+    a.publish_batch(wf, evs2)          # producer-side: not fenced
+    ids2 = [e.id for e in evs2]
+    with pytest.raises(FencedWrite):   # owner-side: superseded epoch
+        a.commit(wf, ids2)
+    assert a.fenced_writes == 1
+    # the fence LATCHES: retrying without re-assignment stays rejected
+    with pytest.raises(FencedWrite):
+        a.commit(wf, ids2)
+    assert a.fenced_writes == 2
+    # node-b (current epoch holder) consumes and commits the same ids fine
+    assert {e.id for e in b.consume(wf, 100)} == set(ids2)
+    b.commit(wf, ids2)
+    assert b.lag(wf) == 0
+
+    # sanctioned re-acquisition clears node-a's latch and moves the epoch
+    assert a.reacquire_partition_leases(wf, [0, 1]) == {0: 3, 1: 3}
+    evs3 = [termination_event(f"s{i}", i) for i in range(16, 20)]
+    a.publish_batch(wf, evs3)
+    a.commit(wf, [e.id for e in evs3])
+    assert a.lag(wf) == 0
+
+    # the fencing invariant is auditable on disk: committed records carry
+    # their writer's epoch, and epochs never move backwards
+    for p in (0, 1):
+        path = os.path.join(root, wf, "p%04d.committed" % p)
+        epochs = []
+        for line in open(path).read().splitlines():
+            head, sep, _ = line.partition("\x1f")
+            if sep:
+                epochs.append(int(head[1:]))
+        assert epochs == sorted(epochs), (
+            f"p{p} commit epochs moved backwards: {epochs}")
+
+
+# -- restore_from_replica: host loss, rebuilt root, exact replay -----------------
+
+def test_restore_from_replica_replays_exactly(tmp_path):
+    replica_root = str(tmp_path / "replica")
+    server = ReplicaServer(replica_root)
+    store = FilePartitionedEventStore(
+        str(tmp_path / "bus"), 2, fsync=False,
+        replicate_to=server.address, replicate_sync=True)
+    try:
+        wf = "w"
+        evs = [termination_event(f"s{i}", i) for i in range(10)]
+        store.publish_batch(wf, evs)
+        done = [e.id for e in evs[:6]]
+        store.commit(wf, done)
+        store.to_dlq(wf, CloudEvent(subject="s0", data={}, id="quar-1"))
+        assert store.drain_replication(5.0)
+        assert store.replication_stats()["lag_bytes"] == 0
+
+        # the host is lost: segment root gone.  A torn tail on the replica
+        # (its own unclean copy) must not break replay either.
+        shutil.rmtree(str(tmp_path / "bus" / wf))
+        tear_segment_tail(os.path.join(replica_root, wf))
+        restored = store.restore_from_replica(wf, replica_root)
+        assert restored > 0
+
+        assert sorted(e.id for e in store.committed_events(wf)) == \
+            sorted(done)
+        assert store.dlq_size(wf) == 1
+        assert store.lag(wf) == 4       # uncommitted events redeliver
+        remaining = {e.id for e in store.consume(wf, 100)}
+        assert remaining == {e.id for e in evs[6:]}
+        # the restored root is a live, writable primary again
+        store.commit(wf, list(remaining))
+        assert store.lag(wf) == 0
+    finally:
+        if store._rep is not None:
+            store._rep.close()
+        server.close()
+
+
+# -- soaks: seed determinism + bounded-time recovery -----------------------------
+
+def test_replicated_soak_same_seed_same_world(tmp_path):
+    s1 = run_soak_replicated(str(tmp_path / "a"), seed=5)
+    s2 = run_soak_replicated(str(tmp_path / "b"), seed=5)
+    for key in ("done", "dlq_by_reason", "committed_ids", "faults",
+                "history", "crashes", "fenced", "recoveries"):
+        assert s1[key] == s2[key], key
+    # the run exercised the whole fault domain, not a clean pass
+    assert s1["faults"].get("replicate.send", 0) >= 1
+    assert s1["faults"].get("lease.expire", 0) >= 1
+    assert s1["dropped_frames"] >= 1
+    assert s1["fenced"] >= 1
+    assert s1["recoveries"] == 1
+
+
+def test_proc_host_loss_recovery_bounded(tmp_path):
+    s = run_soak_host_loss(str(tmp_path / "soak"), seed=3)
+    assert s["recoveries"] == 1
+    assert s["recovery_seconds"] < 15.0
+    assert s["obs"]["tf_node_recoveries_total"] == 1
+    # every partition came back under a fresh (post-recovery) epoch
+    assert s["leases"] and all(
+        int(h.rpartition("@e")[2]) >= 2 for h in s["leases"].values())
+    assert s["dlq_by_reason"] == {"poison:action-error": 3}
+    assert s["lag"] == 0
