@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""tfcheck — the repo's invariant linter (static half; CI gate).
+
+Runs the ``repro.analysis`` AST rules over ``src/repro/core`` and
+``src/repro/bus`` (override with positional paths) and fails on any finding
+not covered by the committed baseline (``tfcheck-baseline.json``) or an
+inline ``# tfcheck: allow[rule] reason`` pragma.
+
+    PYTHONPATH=src python scripts/tfcheck.py              # gate (CI mode)
+    python scripts/tfcheck.py --list-rules                # the catalogue
+    python scripts/tfcheck.py --write-baseline            # re-ratchet
+    python scripts/tfcheck.py src/repro extra_dir/        # custom scope
+
+Exit codes: 0 clean (or fully baselined), 1 new findings, 2 usage/IO error.
+
+The dynamic half (runtime lock-order recording) is not here: set
+``TFCHECK_TRACE_LOCKS=1`` and run the tier-1 suite — ``tests/conftest.py``
+installs ``repro.analysis.locktrace`` and asserts an acyclic runtime lock
+graph at session end.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis import (ALL_RULES, load_baseline, load_paths,  # noqa: E402
+                            ratchet, run_rules, write_baseline)
+
+DEFAULT_PATHS = ("src/repro/core", "src/repro/bus")
+DEFAULT_BASELINE = "tfcheck-baseline.json"
+
+
+def list_rules() -> None:
+    print("tfcheck rules (static; see docs/ARCHITECTURE.md §10):\n")
+    for r in ALL_RULES:
+        print("  %-20s %s" % (r.id, r.invariant))
+        print("  %-20s motivation: %s\n" % ("", r.motivation))
+    print("  %-20s %s" % (
+        "lock-trace (dynamic)",
+        "TFCHECK_TRACE_LOCKS=1 under pytest records the runtime lock "
+        "acquisition graph"))
+    print("  %-20s %s" % (
+        "", "and asserts it is acyclic with no sleep under bus locks."))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to check (default: %s)"
+                    % " ".join(DEFAULT_PATHS))
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, DEFAULT_BASELINE))
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings")
+    ap.add_argument("--no-ratchet", action="store_true",
+                    help="ignore the baseline; report everything")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+
+    if args.list_rules:
+        list_rules()
+        return 0
+
+    paths = args.paths or [os.path.join(REPO, p) for p in DEFAULT_PATHS]
+    for p in paths:
+        if not os.path.exists(p):
+            print("tfcheck: no such path: %s" % p, file=sys.stderr)
+            return 2
+    try:
+        files = load_paths(paths, root=REPO)
+    except SyntaxError as exc:
+        print("tfcheck: cannot parse: %s" % exc, file=sys.stderr)
+        return 2
+
+    findings = run_rules(files)
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print("tfcheck: baseline written to %s (%d findings)"
+              % (args.baseline, len(findings)))
+        return 0
+
+    baseline = {} if args.no_ratchet else load_baseline(args.baseline)
+    new = ratchet(findings, baseline)
+    if not args.quiet:
+        for f in new:
+            print(f.render())
+    n_baselined = len(findings) - len(new)
+    if new:
+        print("tfcheck: %d finding(s) (%d more baselined) over %d files "
+              "-> FAIL" % (len(new), n_baselined, len(files)))
+        return 1
+    if not args.quiet:
+        print("tfcheck: clean (%d files, %d rules, %d baselined finding(s))"
+              % (len(files), len(ALL_RULES), n_baselined))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""Bad fixture: all three durability orderings violated
+(tfcheck durability-ordering)."""
+import os
+
+
+class Shard:
+    def __init__(self, event_store, state_store, seg):
+        self.event_store = event_store
+        self.state_store = state_store
+        self.seg = seg
+
+    def commit_without_checkpoint(self, deltas):
+        # BAD: commit marks events done before their effects are durable
+        self.event_store.commit("w")
+        self.state_store.put_contexts_delta("w", deltas)
+
+    def publish_without_fsync(self, tmp, final):
+        with open(tmp, "w") as f:
+            f.write("payload")
+        os.rename(tmp, final)         # BAD: name is atomic, contents are not
+
+    def chop_without_flock(self, offset):
+        self.seg.truncate(offset)     # BAD: a live writer could be mid-append

@@ -1,0 +1,25 @@
+"""Good fixture: checkpoint dominates commit, fsync precedes rename, the
+segment chop sits under the owning flock (tfcheck durability-ordering)."""
+import os
+
+
+class Shard:
+    def __init__(self, event_store, state_store, seg):
+        self.event_store = event_store
+        self.state_store = state_store
+        self.seg = seg
+
+    def checkpoint_then_commit(self, deltas):
+        self.state_store.put_contexts_delta("w", deltas)
+        self.event_store.commit("w")  # OK: effects durable first
+
+    def publish_with_fsync(self, tmp, final):
+        with open(tmp, "w") as f:
+            f.write("payload")
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)         # OK: contents hit disk before the name
+
+    def chop_under_flock(self, fp, offset):
+        with self._plock(fp):
+            self.seg.truncate(offset)  # OK: exclusive owner, no live writer

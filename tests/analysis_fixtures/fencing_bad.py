@@ -1,0 +1,16 @@
+"""Bad fixture: owner-side segment appends with no lease check
+(tfcheck fencing) — the zombie-writer window."""
+
+
+class Store:
+    def _check_lease(self, fp):
+        pass
+
+    def commit_unfenced(self, fp, line):
+        self._append_clean(fp.com, line)   # BAD: stale owner can interleave
+
+    def quarantine_unfenced(self, fp, line):
+        fp.dlq.append(line)                # BAD: direct unfenced append
+
+    def _append_clean(self, seg, line):
+        seg.append(line)

@@ -1,0 +1,21 @@
+"""Good fixture: every owner-side append is preceded by a lease check in
+the same method; .log publishes are exempt (tfcheck fencing)."""
+
+
+class Store:
+    def _check_lease(self, fp):
+        pass
+
+    def commit_fenced(self, fp, line):
+        self._check_lease(fp)
+        self._append_clean(fp.com, line)   # OK: fenced
+
+    def quarantine_fenced(self, fp, line):
+        self._check_lease(fp)
+        fp.dlq.append(line)                # OK: fenced
+
+    def publish(self, fp, line):
+        fp.log.append(line)                # OK: any process may publish
+
+    def _append_clean(self, seg, line):
+        seg.append(line)

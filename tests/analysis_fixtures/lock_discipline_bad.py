@@ -1,0 +1,35 @@
+"""Bad fixture: blocking calls under a thread lock (tfcheck lock-discipline).
+
+Each method holds ``self._lock`` across a call the rule forbids: fsync,
+socket send, subprocess, sleep, and a command-pipe wait.
+"""
+import os
+import subprocess
+import time
+
+
+class Shard:
+    def __init__(self, lock, sock, conn):
+        self._lock = lock
+        self.sock = sock
+        self.conn = conn
+
+    def fsync_under_lock(self, f):
+        with self._lock:
+            os.fsync(f.fileno())          # BAD: durable write under lock
+
+    def send_under_lock(self, data):
+        with self._lock:
+            self.sock.sendall(data)       # BAD: network send under lock
+
+    def spawn_under_lock(self):
+        with self._lock:
+            subprocess.run(["true"])      # BAD: process spawn under lock
+
+    def sleep_under_lock(self):
+        with self._lock:
+            time.sleep(0.1)               # BAD: sleep under lock
+
+    def pipe_wait_under_lock(self):
+        with self._lock:
+            return self.conn.recv()       # BAD: command-pipe wait under lock

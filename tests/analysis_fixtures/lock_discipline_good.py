@@ -1,0 +1,39 @@
+"""Good fixture: the same operations, outside the lock (tfcheck
+lock-discipline).  Snapshot under the lock; block after releasing it."""
+import os
+import subprocess
+import time
+
+
+class Shard:
+    def __init__(self, lock, sock, conn):
+        self._lock = lock
+        self.sock = sock
+        self.conn = conn
+        self._pending = []
+
+    def fsync_outside_lock(self, f):
+        with self._lock:
+            batch = list(self._pending)
+        f.write(b"".join(batch))
+        os.fsync(f.fileno())              # OK: lock already released
+
+    def send_outside_lock(self, data):
+        with self._lock:
+            payload = bytes(data)
+        self.sock.sendall(payload)        # OK
+
+    def spawn_outside_lock(self):
+        subprocess.run(["true"])          # OK: no lock at all
+
+    def sleep_between(self):
+        with self._lock:
+            n = len(self._pending)
+        time.sleep(0.01)                  # OK
+        return n
+
+    def pipe_wait_outside(self):
+        with self._lock:
+            want = True
+        if want:
+            return self.conn.recv()       # OK

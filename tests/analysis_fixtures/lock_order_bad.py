@@ -1,0 +1,18 @@
+"""Bad fixture: two methods nest the same two locks in opposite orders
+(tfcheck lock-order) — the classic AB/BA latent deadlock."""
+
+
+class Pool:
+    def __init__(self, a_lock, b_lock):
+        self._a_lock = a_lock
+        self._b_lock = b_lock
+
+    def forward(self):
+        with self._a_lock:
+            with self._b_lock:        # A -> B
+                return 1
+
+    def backward(self):
+        with self._b_lock:
+            with self._a_lock:        # B -> A: cycle
+                return 2

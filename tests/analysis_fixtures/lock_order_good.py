@@ -1,0 +1,23 @@
+"""Good fixture: every path nests the two locks in the same A -> B order
+(tfcheck lock-order)."""
+
+
+class Pool:
+    def __init__(self, a_lock, b_lock):
+        self._a_lock = a_lock
+        self._b_lock = b_lock
+
+    def forward(self):
+        with self._a_lock:
+            with self._b_lock:        # A -> B
+                return 1
+
+    def also_forward(self):
+        with self._a_lock:
+            with self._b_lock:        # A -> B again: still a DAG
+                return 2
+
+    def reentrant(self):
+        with self._a_lock:
+            with self._a_lock:        # RLock re-entry: not an ordering edge
+                return 3

@@ -1,0 +1,13 @@
+"""Bad fixture: scalar metric updates inside per-item loops
+(tfcheck obs-discipline) — O(events) instrument cost on the hot path."""
+
+
+class Shard:
+    def __init__(self, events_total, latency):
+        self.events_total = events_total
+        self.latency = latency
+
+    def consume(self, batch):
+        for event in batch:
+            self.events_total.inc()            # BAD: per-event counter bump
+            self.latency.observe(event.age)    # BAD: per-event observe

@@ -1,0 +1,14 @@
+"""Good fixture: batch-granular metrics (tfcheck obs-discipline)."""
+
+
+class Shard:
+    def __init__(self, events_total, latency):
+        self.events_total = events_total
+        self.latency = latency
+
+    def consume(self, batch):
+        ages = []
+        for event in batch:
+            ages.append(event.age)             # OK: plain list append
+        self.events_total.inc(len(batch))      # OK: one bump per batch
+        self.latency.observe_batch(ages)       # OK: the sanctioned call

@@ -1,0 +1,17 @@
+"""Bad fixture: blanket handlers that swallow silently
+(tfcheck seam-safety) — the crashed-shard-becomes-a-hang bug class."""
+
+
+def run_once(shard):
+    try:
+        return shard.step()
+    except Exception:
+        pass                # BAD: the error evaporates, shard looks hung
+
+
+def drain(shards):
+    for s in shards:
+        try:
+            s.flush()
+        except:             # noqa: E722  BAD: bare AND silent
+            continue

@@ -1,0 +1,270 @@
+"""Tests for the tfcheck analysis plane (repro.analysis).
+
+Static half: every rule fires on its bad fixture and stays silent on its
+good twin; the pragma fixture scans clean; the baseline ratchet forgives
+exactly the baselined count.  Dynamic half: the lock tracer records
+acquisition order across real threads, flags AB/BA inversions and
+sleep-under-lock, and installs nothing when the env flag is unset.
+The CLI gate is exercised end-to-end in a subprocess, including the
+seeded-violation negative path CI relies on.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.analysis import (ALL_RULES, load_baseline, load_paths, ratchet,
+                            rules_by_id, run_rules, write_baseline)
+from repro.analysis import locktrace
+from repro.analysis.lockrules import build_lock_graph, find_cycle
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+REPO = os.path.dirname(HERE)
+
+RULE_FIXTURES = {
+    "lock-discipline": "lock_discipline",
+    "lock-order": "lock_order",
+    "durability-ordering": "durability",
+    "fencing": "fencing",
+    "obs-discipline": "obs_discipline",
+    "seam-safety": "seam_safety",
+}
+
+
+def _scan(rule_id, basename):
+    files = load_paths([os.path.join(FIXTURES, basename + ".py")],
+                       root=REPO)
+    return rules_by_id()[rule_id].check(files)
+
+
+# -- static rules over the fixture corpus ----------------------------------------
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_rule_fires_on_bad_fixture(rule_id):
+    findings = _scan(rule_id, RULE_FIXTURES[rule_id] + "_bad")
+    assert findings, "%s found nothing in its bad fixture" % rule_id
+    assert all(f.rule == rule_id for f in findings)
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_rule_silent_on_good_fixture(rule_id):
+    findings = _scan(rule_id, RULE_FIXTURES[rule_id] + "_good")
+    assert findings == [], "%s false-positives on its good fixture: %s" % (
+        rule_id, [f.render() for f in findings])
+
+
+def test_bad_fixture_finding_counts():
+    """Each bad fixture trips every sub-check its rule encodes."""
+    assert len(_scan("lock-discipline", "lock_discipline_bad")) == 5
+    assert len(_scan("durability-ordering", "durability_bad")) == 3
+    assert len(_scan("fencing", "fencing_bad")) == 2
+    assert len(_scan("obs-discipline", "obs_discipline_bad")) == 2
+    assert len(_scan("seam-safety", "seam_safety_bad")) == 2
+    assert len(_scan("lock-order", "lock_order_bad")) == 1
+
+
+def test_pragma_blesses_findings():
+    files = load_paths([os.path.join(FIXTURES, "pragma_keep.py")], root=REPO)
+    assert run_rules(files) == []
+
+
+def test_pragma_is_rule_scoped():
+    """allow[lock-discipline] must not bless a seam-safety finding."""
+    src = open(os.path.join(FIXTURES, "pragma_keep.py"),
+               encoding="utf-8").read()
+    mangled = src.replace("allow[seam-safety]", "allow[lock-discipline]")
+    from repro.analysis.core import SourceFile
+    sf = SourceFile("pragma_keep.py", "pragma_keep.py", mangled)
+    findings = run_rules([sf])
+    assert [f.rule for f in findings] == ["seam-safety"]
+
+
+def test_lock_order_cycle_reports_both_edges():
+    files = load_paths([os.path.join(FIXTURES, "lock_order_bad.py")],
+                       root=REPO)
+    (finding,) = rules_by_id()["lock-order"].check(files)
+    assert "Pool._a_lock" in finding.message
+    assert "Pool._b_lock" in finding.message
+
+
+def test_lock_graph_is_dag_on_good_fixture():
+    files = load_paths([os.path.join(FIXTURES, "lock_order_good.py")],
+                       root=REPO)
+    adj, _ = build_lock_graph(files)
+    assert find_cycle(adj) is None
+    # the re-entrant with produced no self-edge
+    assert all(a not in bs for a, bs in adj.items())
+
+
+# -- baseline / ratchet ----------------------------------------------------------
+
+def test_ratchet_forgives_baselined_counts(tmp_path):
+    files = load_paths([os.path.join(FIXTURES, "obs_discipline_bad.py")],
+                       root=REPO)
+    findings = rules_by_id()["obs-discipline"].check(files)
+    assert len(findings) == 2
+
+    path = str(tmp_path / "baseline.json")
+    write_baseline(findings, path)
+    baseline = load_baseline(path)
+    # everything baselined: the gate passes
+    assert ratchet(findings, baseline) == []
+    # one MORE finding with the same key than baselined: the gate fails
+    assert ratchet(findings + [findings[0]], baseline) == [findings[0]]
+    # an empty baseline forgives nothing
+    assert ratchet(findings, {}) == findings
+
+
+def test_baseline_roundtrip(tmp_path):
+    files = load_paths([os.path.join(FIXTURES, "seam_safety_bad.py")],
+                       root=REPO)
+    findings = run_rules(files)
+    path = str(tmp_path / "b.json")
+    write_baseline(findings, path)
+    data = json.loads(open(path, encoding="utf-8").read())
+    assert data["version"] == 1
+    assert sum(data["findings"].values()) == len(findings)
+    assert load_baseline(str(tmp_path / "missing.json")) == {}
+
+
+# -- the committed gate ----------------------------------------------------------
+
+def _tfcheck(*argv, env=None):
+    e = dict(os.environ)
+    if env:
+        e.update(env)
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "tfcheck.py"),
+         *argv], cwd=REPO, env=e, capture_output=True, text=True)
+
+
+def test_gate_clean_on_repo():
+    """src/repro/core + src/repro/bus must pass against the committed
+    baseline — the exact invocation CI runs."""
+    proc = _tfcheck()
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_gate_fails_on_seeded_violation(tmp_path):
+    """Seeding a bad fixture into the scanned tree must fail the gate —
+    the negative check that proves CI would catch a regression."""
+    bad = open(os.path.join(FIXTURES, "obs_discipline_bad.py"),
+               encoding="utf-8").read()
+    seeded = tmp_path / "seeded"
+    seeded.mkdir()
+    (seeded / "seeded_violation.py").write_text(bad)
+    proc = _tfcheck(str(seeded))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "obs-discipline" in proc.stdout
+
+
+def test_list_rules_covers_every_rule():
+    proc = _tfcheck("--list-rules")
+    assert proc.returncode == 0
+    for rule in ALL_RULES:
+        assert rule.id in proc.stdout
+
+
+# -- dynamic half: the lock tracer -----------------------------------------------
+
+_session_traced = pytest.mark.skipif(
+    bool(os.environ.get("TFCHECK_TRACE_LOCKS")),
+    reason="session-wide tracer active; these tests own the tracer state")
+
+
+@pytest.fixture
+def traced():
+    """Fresh tracer installation; never leaks patched factories."""
+    locktrace.uninstall()
+    locktrace.install()
+    yield
+    locktrace.uninstall()
+
+
+@_session_traced
+def test_locktrace_noop_when_env_unset(monkeypatch):
+    monkeypatch.delenv("TFCHECK_TRACE_LOCKS", raising=False)
+    assert not locktrace.enabled_by_env()
+    locktrace.maybe_install()
+    try:
+        assert not locktrace.is_installed()
+        assert threading.Lock is locktrace._real_Lock
+    finally:
+        locktrace.uninstall()
+
+
+@_session_traced
+def test_locktrace_records_edges(traced):
+    a = threading.Lock()
+    b = threading.Lock()
+    with a:
+        with b:
+            pass
+    rep = locktrace.report()
+    assert rep["acquisitions"] >= 2
+    assert len(rep["edges"]) == 1
+    assert locktrace.find_cycle() is None
+    locktrace.check()   # acyclic: must not raise
+
+
+@_session_traced
+def test_locktrace_flags_inversion_across_threads(traced):
+    a = threading.Lock()
+    b = threading.Lock()
+
+    def forward():
+        with a:
+            with b:
+                pass
+
+    def backward():
+        with b:
+            with a:
+                pass
+
+    # sequential execution is deadlock-free but records the AB/BA hazard
+    t1 = threading.Thread(target=forward)
+    t1.start()
+    t1.join()
+    t2 = threading.Thread(target=backward)
+    t2.start()
+    t2.join()
+    assert locktrace.find_cycle() is not None
+    with pytest.raises(AssertionError, match="lock-order cycle"):
+        locktrace.check()
+
+
+@_session_traced
+def test_locktrace_rlock_reentry_is_not_an_edge(traced):
+    lk = threading.RLock()
+    with lk:
+        with lk:
+            pass
+    rep = locktrace.report()
+    assert rep["edges"] == {}
+    locktrace.check()
+
+
+@_session_traced
+def test_locktrace_flags_sleep_under_lock(traced):
+    lk = threading.Lock()
+    with lk:
+        time.sleep(0.001)
+    rep = locktrace.report()
+    assert rep["sleep_violations"]
+    with pytest.raises(AssertionError, match="sleep"):
+        locktrace.check()
+
+
+@_session_traced
+def test_locktrace_sleep_outside_lock_ok(traced):
+    lk = threading.Lock()
+    with lk:
+        pass
+    time.sleep(0.001)
+    locktrace.check()
