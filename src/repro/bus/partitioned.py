@@ -630,6 +630,11 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             tmp = meta_p + ".%d.tmp" % os.getpid()
             with open(tmp, "w") as f:
                 json.dump({"num_partitions": num_partitions}, f)
+                f.flush()
+                # the pin must be readable after a power cut, not just after
+                # a process crash: os.replace publishes the *name* atomically
+                # but not the bytes behind it
+                os.fsync(f.fileno())
             os.replace(tmp, meta_p)
         self._lock = threading.Lock()  # guards the workflow → partitions map
         self._fps: Dict[str, List[_FilePartition]] = {}
@@ -922,6 +927,13 @@ class FilePartitionedEventStore(PartitionedStoreBase):
                     os.makedirs(tmp_d, exist_ok=True)
                     with open(os.path.join(tmp_d, "stream.json"), "w") as f:
                         json.dump({"num_partitions": num_partitions}, f)
+                        f.flush()
+                        # a power cut between the rename below and the disk
+                        # writing the pin would leave the stream dir visible
+                        # with an empty stream.json — every process would
+                        # silently route by the bus default
+                        # tfcheck: allow[lock-discipline] one-time stream creation; the pin must be durable before the rename publishes the dir
+                        os.fsync(f.fileno())
                     try:
                         os.rename(tmp_d, d)
                         # the rename-into-place is the stream's creation
