@@ -19,8 +19,6 @@ Covers:
 import os
 import time
 
-import pytest
-
 from repro.bus import (FilePartitionedEventStore, PartitionedEventStore,
                        ProcessShardPool)
 from repro.core import Trigger, Triggerflow, make_trigger, termination_event
@@ -362,7 +360,13 @@ def test_crash_shard_discards_inflight_commit():
     def boom(ctx, event, params):
         if not crashed:  # only the first owner crashes
             crashed.append(ctx._worker.member)
-            tf.pool.crash_shard("w", ctx._worker.member)
+            # kill() (lock-free) crashes the victim *mid-batch*; the pool
+            # membership change happens below, from the test thread.  An
+            # action runs under its worker's batch lock, so calling
+            # pool.crash_shard here would take pool._lock under worker.lock
+            # — the reverse of the pool->worker order _rebalance uses
+            # (tfcheck lock-order).
+            ctx._worker.kill()
 
     register_action("boom", boom)
     try:
@@ -384,6 +388,8 @@ def test_crash_shard_discards_inflight_commit():
         # THE regression assertion: nothing the victim did was committed —
         # every event is still pending for the new owner
         assert store.lag("w") == 10
+        # complete the crash from outside the batch: membership + rebalance
+        tf.pool.crash_shard("w", owner)
         tf.pool.drive("w", timeout=20)
         assert store.lag("w") == 0
         assert tf.pool.trigger_context("w", "tcount").get("count") == 10
