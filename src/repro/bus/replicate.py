@@ -212,6 +212,7 @@ class ReplicaServer:
                 if size > end:  # only an overwrite-shrink needs ftruncate
                     f.truncate(end)
                 if self.fsync:
+                    # tfcheck: allow[lock-discipline] fsync-before-ack is the replica's durability contract; _lock serializes appliers, no consumer hot path contends
                     os.fsync(f.fileno())
                 self._sizes[rel] = end
                 return {"ok": True, "rel": rel, "size": end}
@@ -242,6 +243,7 @@ class ReplicaServer:
                     f.write(data)
                     f.flush()
                     if self.fsync:
+                        # tfcheck: allow[lock-discipline] fsync-before-ack is the replica's durability contract; _lock serializes appliers, no consumer hot path contends
                         os.fsync(f.fileno())
                 os.replace(tmp, path)
                 self._drop_handle(rel)

@@ -16,7 +16,6 @@ append-only JSONL file store (crash/restart fault tolerance, Fig 13).
 """
 from __future__ import annotations
 
-import json
 import os
 import threading
 import time
@@ -400,6 +399,7 @@ class SegmentLog:
                 try:
                     records.append(parse(line))
                 except Exception:  # noqa: BLE001 - frankenline: stop before it
+                    # tfcheck: allow[seam-safety] an unparseable line IS the torn tail: stopping the scan here is the contract, not a swallow
                     break
             valid = offset + nl + 1
             pos = nl + 1
