@@ -11,8 +11,8 @@ import threading
 import time
 from typing import Dict, List
 
-from repro.core import (KedaAutoscaler, MemoryEventStore, Triggerflow,
-                        make_trigger, termination_event)
+from repro.core import (KedaAutoscaler, Triggerflow, make_trigger,
+                        termination_event)
 
 N_WORKFLOWS = 40
 BURST_EVENTS = 150

@@ -23,7 +23,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import MemoryEventStore, Triggerflow, make_trigger, termination_event
+from repro.core import Triggerflow, make_trigger, termination_event
 
 
 def bench_noop(n_events: int = 100_000, action_plane: bool = False) -> Dict:

@@ -11,7 +11,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.roofline import fraction_of_roofline, load_cells, markdown_table  # noqa: E402
+from benchmarks.roofline import load_cells, markdown_table  # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 RES = os.path.join(ROOT, "results")

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import os
 import zlib
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 
 class InjectedFault(RuntimeError):

@@ -29,7 +29,7 @@ at the next checkpoint as an explicit escape hatch.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Any, Dict, List, Optional
+from typing import TYPE_CHECKING, Any, Dict, List
 
 from .events import CloudEvent
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, List, Optional
 
 from .actions import register_pyfunc
-from .events import TYPE_FAILURE, termination_event
+from .events import TYPE_FAILURE
 from .service import Triggerflow
 from .triggers import Trigger, make_trigger
 

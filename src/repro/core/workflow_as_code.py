@@ -28,8 +28,7 @@ Two schedulers, as in the paper:
 """
 from __future__ import annotations
 
-import threading
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List
 
 from .actions import register_pyfunc
 from .service import Triggerflow

@@ -13,7 +13,7 @@ loop's trip count, recovered from the canonical XLA counter pattern.
 from __future__ import annotations
 
 import re
-from typing import Dict, Tuple
+from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -14,7 +14,6 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import Param, is_param

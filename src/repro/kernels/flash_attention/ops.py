@@ -4,7 +4,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from .flash_attention import flash_attention_bhsd
 

@@ -28,7 +28,7 @@ from repro.distributed.hlo_analysis import collective_bytes, roofline_terms  # n
 from repro.distributed.sharding import Resolver, replicated, shardings_for  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import batch_specs, cache_specs  # noqa: E402
-from repro.models import Model, axes_tree, unbox  # noqa: E402
+from repro.models import Model, unbox  # noqa: E402
 from repro.models.layers import reset_activation_resolver, set_activation_resolver  # noqa: E402
 from repro.training.optimizer import AdamW  # noqa: E402
 from repro.training.train_step import (make_decode_step, make_prefill_step,  # noqa: E402

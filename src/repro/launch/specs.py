@@ -2,7 +2,7 @@
 dry-run lowers against these; nothing is ever allocated."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,13 +8,11 @@ from __future__ import annotations
 
 import math
 from contextvars import ContextVar
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .common import KeyGen, Param, make_param
+from .common import KeyGen, make_param
 
 # -- logical activation sharding ----------------------------------------------------
 # The distributed layer installs a resolver(logical_axes_tuple) -> PartitionSpec;

@@ -31,7 +31,7 @@ from . import mla as MLA
 from . import moe as MOE
 from . import ssm as SSM
 from . import xlstm as XL
-from .common import KeyGen, Param, axes_tree, make_param, unbox
+from .common import KeyGen, Param, make_param, unbox
 
 
 @dataclasses.dataclass

@@ -14,8 +14,6 @@ Sharding: experts over the 'model' mesh axis (expert parallelism), tokens over
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

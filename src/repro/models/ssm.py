@@ -12,8 +12,6 @@ causal conv applies to the x-branch only (not B/C), single B/C group.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -8,8 +8,7 @@ out of Triggerflow: no requests → no events → the worker is reclaimed.
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ regenerates the identical stream — the data-pipeline analogue of event replay.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

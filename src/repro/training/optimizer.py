@@ -5,7 +5,7 @@ dependency).  Moments are fp32 and shard exactly like their parameters
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,7 @@ microbatches with fp32 grad accumulation.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ conditions + batched actions).  All observables must agree.
 import random
 import threading
 
-import pytest
-
 from repro.core import (
     BATCHED_ACTIONS,
     FIRE_RUN_CONDITIONS,
@@ -23,7 +21,6 @@ from repro.core import (
     register_action,
     termination_event,
 )
-from repro.core.events import CloudEvent
 from repro.core.functions import FunctionBackend
 from repro.core.worker import TFWorker
 

@@ -23,7 +23,7 @@ from repro.core import (
     failure_event,
     register_condition,
 )
-from repro.core.conditions import BATCHED_CONDITIONS, CONDITIONS
+from repro.core.conditions import BATCHED_CONDITIONS
 from repro.core.events import TYPE_TIMEOUT, CloudEvent
 from repro.core.worker import TFWorker
 from repro.core.functions import FunctionBackend

@@ -10,8 +10,6 @@ Covers the subsystem's contract surface:
 """
 import time
 
-import pytest
-
 from repro.bus import ConsumerGroup, PartitionedEventStore
 from repro.core import (KedaAutoscaler, Trigger, Triggerflow, make_trigger,
                         termination_event)

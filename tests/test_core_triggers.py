@@ -1,12 +1,10 @@
 """Unit + property tests for the Rich Trigger engine (paper §3)."""
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (CloudEvent, MemoryEventStore, TYPE_FAILURE, TYPE_TIMEOUT,
-                        Triggerflow, failure_event, make_trigger,
-                        register_pyfunc, termination_event)
+from repro.core import (CloudEvent, TYPE_TIMEOUT, Triggerflow,
+                        failure_event, make_trigger, register_pyfunc,
+                        termination_event)
 from repro.core.conditions import CONDITIONS
-from repro.core.context import TriggerContext
 
 
 def _tf():

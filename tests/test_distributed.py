@@ -3,7 +3,7 @@ parsing, and a real (host-sized) mesh lowering with constraints applied."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.distributed.hlo_analysis import (ICI_BW, PEAK_FLOPS, collective_bytes,

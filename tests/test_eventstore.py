@@ -1,8 +1,6 @@
 """Event store contract tests (memory + durable file) + hypothesis property:
 at-least-once with commit — no committed event is redelivered, no uncommitted
 event is lost across restarts."""
-import os
-
 import pytest
 from _hypothesis_compat import given, settings, st
 

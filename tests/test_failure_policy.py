@@ -26,7 +26,7 @@ from repro.core import (FileEventStore, MemoryEventStore, Triggerflow,
                         make_trigger, termination_event)
 from repro.core.events import CloudEvent
 from repro.core.functions import FunctionBackend
-from repro.core.actions import ACTIONS, register_action
+from repro.core.actions import register_action
 from repro.core.policy import (ActionTimeout, CircuitBreaker, RETRY_STATE_KEY,
                                REASON_ACTION_ERROR, REASON_DISABLED,
                                REASON_TIMEOUT, RetryPolicy, call_with_timeout,

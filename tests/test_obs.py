@@ -25,8 +25,8 @@ from repro.core import Triggerflow, make_trigger, termination_event
 from repro.obs.metrics import (DEFAULT_BOUNDS, Histogram, MetricsRegistry,
                                dump_metrics, empty_snapshot, fold_counters,
                                merge_snapshot, render_prometheus)
-from repro.obs.trace import (Tracer, context_of_span, inject, load_spans,
-                             span_trees, stitch_spans, trace_context)
+from repro.obs.trace import (Tracer, context_of_span, inject, span_trees,
+                             stitch_spans, trace_context)
 
 
 # -- metrics registry ------------------------------------------------------------

@@ -3,7 +3,7 @@ import time
 
 import pytest
 
-from repro.core import Triggerflow, termination_event
+from repro.core import Triggerflow
 from repro.core.dag import DAG, MapOperator, PythonOperator
 from repro.core.fedlearn import FederatedLearningOrchestrator, ObjectStore
 from repro.core.statemachine import StateMachine

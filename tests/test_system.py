@@ -3,10 +3,6 @@ together — autoscaling, crash recovery across the full stack (events +
 trigger contexts + model checkpoints), and trigger-orchestrated serving."""
 import time
 
-import jax.numpy as jnp
-import numpy as np
-import pytest
-
 from repro.configs import get_config
 from repro.core import (FileEventStore, FileStateStore, KedaAutoscaler,
                         Triggerflow, make_trigger, termination_event)
@@ -41,8 +37,6 @@ def test_autoscaler_scales_up_and_to_zero():
 
 def test_full_stack_crash_recovery(tmp_path):
     """Workflow-level (event replay) + state-level (checkpoint) recovery."""
-    from repro.training.trainer import run_training
-
     cfg = get_config("llama3.2-3b", smoke=True)
     work = str(tmp_path / "ckpt")
     es = FileEventStore(str(tmp_path / "ev"))

@@ -9,10 +9,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import Triggerflow
 from repro.training import checkpoint as ckpt
 from repro.training.data import SyntheticData
-from repro.training.optimizer import AdamW, global_norm, warmup_cosine
+from repro.training.optimizer import AdamW, warmup_cosine
 from repro.training.trainer import run_training
 
 
