@@ -1,5 +1,6 @@
 """CI perf-regression gate: batch plane, action plane, process bus,
-observability, failure policy and the replicated segment transport.
+observability, failure policy, the replicated segment transport and the
+tfcheck lock tracer's flag-off zero-cost guarantee.
 
 Three gated ratios, all measured through the real runtimes within one job:
 
@@ -196,6 +197,55 @@ def main() -> int:
     if step_summary:
         with open(step_summary, "a") as f:
             f.write("\n" + rep_line)
+
+    # tfcheck lock-trace zero-cost gate: with TFCHECK_TRACE_LOCKS unset,
+    # importing repro.analysis.locktrace and calling maybe_install() must
+    # patch nothing — threading.Lock/RLock, fcntl.flock and time.sleep stay
+    # the real primitives.  The sharp assertion is *identity*: after
+    # maybe_install(), the primitives must literally still be the originals.
+    # On top of that, noop action-plane throughput must hold within 2% of a
+    # run that never called into the tracer — best *paired* ratio like the
+    # replication gate above, but since the two sides run identical code a
+    # 2% floor sits inside single-sample noise, so this gate uses >=5 pairs
+    # of longer runs and alternates which side goes first within each pair
+    # (monotone machine drift then cannot bias one side).
+    os.environ.pop("TFCHECK_TRACE_LOCKS", None)
+    import threading
+    import time as _time
+    from repro.analysis import locktrace
+    installed = locktrace.maybe_install()
+    if installed or locktrace.is_installed() or not (
+            threading.Lock is locktrace._real_Lock
+            and threading.RLock is locktrace._real_RLock
+            and _time.sleep is locktrace._real_sleep):
+        failures.append(
+            "lock-trace: maybe_install() patched the primitives with "
+            "TFCHECK_TRACE_LOCKS unset -> instrumentation is not "
+            "compiled out")
+    trace_ratio = trace_off = trace_on = 0.0
+    for i in range(max(args.reps, 5)):
+        sides = ("off", "on") if i % 2 == 0 else ("on", "off")
+        pair = {}
+        for side in sides:
+            if side == "on":
+                locktrace.maybe_install()
+            pair[side] = bench_noop(n_events=200_000,
+                                    action_plane=True)["events_per_s"]
+        if pair["on"] / pair["off"] > trace_ratio:
+            trace_ratio = pair["on"] / pair["off"]
+            trace_off, trace_on = pair["off"], pair["on"]
+    trace_line = (f"lock-trace off overhead: tracer-touched {trace_on:,.0f} "
+                  f"ev/s vs untouched {trace_off:,.0f} ev/s = "
+                  f"{trace_ratio:.2f}x (floor 0.98x)\n")
+    if trace_ratio and trace_ratio < 0.98:
+        failures.append(
+            f"lock-trace: flag-unset ratio {trace_ratio:.2f}x is below the "
+            f"0.98x floor -> the disabled tracer costs >2% on the noop "
+            f"action plane")
+    print(trace_line, end="")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write("\n" + trace_line)
 
     # deterministic idle-tick check: syscall counts, not wall time, so it
     # gates even when no committed baseline exists
