@@ -1,0 +1,140 @@
+"""Event-codec benchmark: v1 JSON lines vs TFB1 columnar frames.
+
+The per-event decode cost is the durable bus consumer's floor — every
+consume/refresh/replay pays it before any trigger logic runs.  Three decode
+rows, all over the same stamped event stream in store-shaped batches:
+
+* codec.decode_json    — the legacy wire format: one JSON event per line,
+                         ``CloudEvent.from_json`` per event.
+* codec.decode_frame   — TFB1 columnar frames decoded *and* materialized to
+                         per-event CloudEvents (the live ``sync`` path).
+                         Gated in CI at >= 2x of decode_json on the best
+                         *paired* ratio (``scripts/perf_gate.py``).
+* codec.decode_columns — frames decoded to :class:`EventColumns` only (the
+                         ``VectorJoinPlane.triage`` ingest path: ids /
+                         subjects / types / results, no event objects).
+
+Plus the matching encode pair (one ``to_json`` per event vs one frame per
+batch) and the wire size per event in the decode_frame row's derived text.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import termination_event
+from repro.core import codec as _codec
+from repro.core.events import stamp_publish_time
+
+
+def _batches(n_events: int, batch: int, subjects: int):
+    evs = [termination_event("s%d" % (i % subjects), i)
+           for i in range(n_events)]
+    out = []
+    for i in range(0, n_events, batch):
+        b = evs[i:i + batch]
+        stamp_publish_time(b)  # published batches share one time stamp
+        out.append(b)
+    return out
+
+
+def bench_codec(n_events: int = 200_000, batch: int = 512,
+                subjects: int = 32) -> Dict[str, float]:
+    """One paired measurement: every rate comes from the same event stream
+    in the same process, back to back."""
+    batches = _batches(n_events, batch, subjects)
+    json_lines: List[List[str]] = []
+    frames: List[bytes] = []
+
+    t0 = time.perf_counter()
+    for b in batches:
+        json_lines.append([e.to_json() for e in b])
+    t_enc_json = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for b in batches:
+        frames.append(_codec.encode_frame_payload(b))
+    t_enc_frame = time.perf_counter() - t0
+
+    from_json = _codec.event_from_json
+    t0 = time.perf_counter()
+    for lines in json_lines:
+        for line in lines:
+            from_json(line)
+    t_dec_json = time.perf_counter() - t0
+
+    decode_frame = _codec.decode_frame_payload
+    t0 = time.perf_counter()
+    for f in frames:
+        decode_frame(f).events()
+    t_dec_frame = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for f in frames:
+        cols = decode_frame(f)
+        cols.results()  # the triage feed: ids/subjects/types + result column
+    t_dec_cols = time.perf_counter() - t0
+
+    json_bytes = sum(len(line) + 1 for lines in json_lines for line in lines)
+    frame_bytes = sum(len(_codec.encode_record(f)) for f in frames)
+    return {
+        "events": n_events,
+        "enc_json": n_events / t_enc_json,
+        "enc_frame": n_events / t_enc_frame,
+        "dec_json": n_events / t_dec_json,
+        "dec_frame": n_events / t_dec_frame,
+        "dec_cols": n_events / t_dec_cols,
+        "json_bytes_per_event": json_bytes / n_events,
+        "frame_bytes_per_event": frame_bytes / n_events,
+    }
+
+
+def run(reps: int = 3) -> List[Dict]:
+    best: Dict[str, float] = {}
+    ratio = {"dec_frame": 0.0, "dec_cols": 0.0, "enc_frame": 0.0}
+    bytes_info = {}
+    for _ in range(reps):
+        m = bench_codec()
+        for k in ("enc_json", "enc_frame", "dec_json", "dec_frame",
+                  "dec_cols"):
+            best[k] = max(best.get(k, 0.0), m[k])
+        # best-*paired* ratios: both sides of each ratio come from the same
+        # in-process run, so machine drift cancels
+        ratio["dec_frame"] = max(ratio["dec_frame"],
+                                 m["dec_frame"] / m["dec_json"])
+        ratio["dec_cols"] = max(ratio["dec_cols"],
+                                m["dec_cols"] / m["dec_json"])
+        ratio["enc_frame"] = max(ratio["enc_frame"],
+                                 m["enc_frame"] / m["enc_json"])
+        bytes_info = {"json": m["json_bytes_per_event"],
+                      "frame": m["frame_bytes_per_event"]}
+
+    def row(name: str, key: str, note: str) -> Dict:
+        eps = best[key]
+        return {"name": name, "us_per_call": 1e6 / eps, "events_per_s": eps,
+                "derived": f"{eps:.0f} events/s ({note}, best of {reps})"}
+
+    frame_eps = best["dec_frame"]
+    cols_eps = best["dec_cols"]
+    return [
+        row("codec.decode_json", "dec_json",
+            "v1 JSON lines, from_json per event"),
+        {"name": "codec.decode_frame", "us_per_call": 1e6 / frame_eps,
+         "events_per_s": frame_eps,
+         "derived": f"{frame_eps:.0f} events/s (TFB1 frames -> CloudEvents, "
+                    f"{ratio['dec_frame']:.2f}x of v1 decode paired, "
+                    f"{bytes_info['frame']:.0f} vs {bytes_info['json']:.0f} "
+                    f"bytes/event, best of {reps})"},
+        {"name": "codec.decode_columns", "us_per_call": 1e6 / cols_eps,
+         "events_per_s": cols_eps,
+         "derived": f"{cols_eps:.0f} events/s (TFB1 frames -> EventColumns "
+                    f"only, {ratio['dec_cols']:.2f}x of v1 decode paired, "
+                    f"best of {reps})"},
+        row("codec.encode_json", "enc_json",
+            "v1 JSON lines, to_json per event"),
+        {"name": "codec.encode_frame", "us_per_call": 1e6 / best["enc_frame"],
+         "events_per_s": best["enc_frame"],
+         "derived": f"{best['enc_frame']:.0f} events/s (one columnar frame "
+                    f"per batch, {ratio['enc_frame']:.2f}x of v1 encode "
+                    f"paired, best of {reps})"},
+    ]

@@ -28,6 +28,7 @@ SUITES = [
     ("obs", "Observability — metrics/trace plane overhead on the noop action plane"),
     ("policy", "Failure policy — idle retry-policy overhead on the noop action plane"),
     ("replication", "Host-loss domain — segment-transport overhead on the file bus"),
+    ("codec", "Event codec — v1 JSON lines vs TFB1 columnar frames"),
 ]
 
 

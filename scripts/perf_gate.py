@@ -1,6 +1,7 @@
 """CI perf-regression gate: batch plane, action plane, process bus,
-observability, failure policy, the replicated segment transport and the
-tfcheck lock tracer's flag-off zero-cost guarantee.
+observability, failure policy, the replicated segment transport, the TFB1
+event-codec decode advantage and the tfcheck lock tracer's flag-off
+zero-cost guarantee.
 
 Three gated ratios, all measured through the real runtimes within one job:
 
@@ -197,6 +198,29 @@ def main() -> int:
     if step_summary:
         with open(step_summary, "a") as f:
             f.write("\n" + rep_line)
+
+    # event-codec decode gate: TFB1 columnar frames must decode (and
+    # materialize) at >= 2x the v1 JSON-lines rate — the headline win the
+    # binary format exists for.  Absolute floor on the best *paired* ratio
+    # (both sides of each pair measured in one bench_codec call, so host
+    # speed cancels exactly).
+    from benchmarks.codec import bench_codec
+    cod_ratio = cod_json = cod_frame = 0.0
+    for _ in range(args.reps):
+        m = bench_codec(n_events=100_000)
+        if m["dec_frame"] / m["dec_json"] > cod_ratio:
+            cod_ratio = m["dec_frame"] / m["dec_json"]
+            cod_json, cod_frame = m["dec_json"], m["dec_frame"]
+    cod_line = (f"codec decode: TFB1 frames {cod_frame:,.0f} ev/s vs v1 JSON "
+                f"{cod_json:,.0f} ev/s = {cod_ratio:.2f}x (floor 2.00x)\n")
+    if cod_ratio < 2.0:
+        failures.append(
+            f"codec: TFB1 decode ratio {cod_ratio:.2f}x is below the 2.00x "
+            f"floor -> the binary format lost its decode advantage")
+    print(cod_line, end="")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write("\n" + cod_line)
 
     # tfcheck lock-trace zero-cost gate: with TFCHECK_TRACE_LOCKS unset,
     # importing repro.analysis.locktrace and calling maybe_install() must

@@ -20,6 +20,10 @@ Three checks, one rule id:
   the call must sit inside the owning flock context (``_plock`` /
   ``_wf_flock`` / ``_flock``), directly or via a helper whose in-file
   callers all hold it.  (PR 4's live-writer chop was exactly this bug.)
+  ``remove`` is fenced the same way since the TFB1 framing landed: a
+  recreated segment re-applies the writer's *preferred* format, so an
+  unfenced remove racing a live appender can flip a file's wire format
+  mid-stream (v1 lines fused after a TFB1 magic header, or vice versa).
 """
 from __future__ import annotations
 
@@ -32,7 +36,7 @@ from .core import (Finding, Rule, SourceFile, call_name, callers_of,
 _CHECKPOINT_CALLS = ("put_contexts_delta", "put_contexts", "save_contexts")
 _WORKER_COMMITS = ("self._commit", "self.event_store.commit",
                    "self.event_store.commit_partitions")
-_SEG_MUTATIONS = ("truncate", "repair")
+_SEG_MUTATIONS = ("truncate", "repair", "remove")
 #: Receivers whose .truncate() is not a SegmentLog chop (os.truncate on the
 #: notify counter, file objects in SegmentLog's own implementation).
 _TRUNCATE_EXEMPT_RECEIVERS = ("os", "f", "fd", "fh")
@@ -93,7 +97,8 @@ class DurabilityOrdering(Rule):
     id = "durability-ordering"
     invariant = ("Checkpoint dominates commit; os.rename/os.replace is "
                  "preceded by an fsync of the source; SegmentLog "
-                 "truncate/repair happens under the owning flock.")
+                 "truncate/repair/remove (framing-mutating calls) happens "
+                 "under the owning flock.")
     motivation = ("PR 4's torn-tail live-writer chop and §5's "
                   "checkpoint-before-commit ordering: every crash test in "
                   "the suite assumes these hold on every path.")
@@ -149,6 +154,9 @@ class DurabilityOrdering(Rule):
         f = n.func
         if not isinstance(f, ast.Attribute) or f.attr not in _SEG_MUTATIONS:
             return
+        if f.attr == "remove" and (n.args or n.keywords):
+            return  # list.remove(x) / set.remove(x) — SegmentLog.remove()
+            # takes no arguments
         recv = (name.rpartition(".")[0] or "").rsplit(".", 1)[-1]
         if recv in _TRUNCATE_EXEMPT_RECEIVERS:
             return
@@ -165,4 +173,5 @@ class DurabilityOrdering(Rule):
             return
         self._finding(
             sf, n, "SegmentLog %s() outside the owning flock — a live "
-            "writer's tail could be chopped (PR 4 bug class)" % f.attr, out)
+            "writer's tail could be chopped, or the recreated segment's "
+            "wire format flipped under it (PR 4 bug class)" % f.attr, out)

@@ -54,6 +54,7 @@ try:
 except ImportError:  # pragma: no cover - non-POSIX: in-process locks only
     fcntl = None  # type: ignore[assignment]
 
+from ..core import codec
 from ..core.events import CloudEvent, stamp_publish_time
 from ..core.eventstore import EventStore, SegmentLog, StreamShard, fsync_dir
 from .replicate import ReplicationClient
@@ -415,18 +416,25 @@ class PartitionedEventStore(PartitionedStoreBase):
 _REDRIVE_MARKER = {"__redrive__": 1}
 
 
-def _encode_event_batch(events: List[CloudEvent]) -> str:
-    """One log record per *publish batch* (a JSON array of event dicts):
-    amortizes the per-record JSON overhead across the batch — decode cost is
-    the consumer's per-event floor — and keeps the torn-tail contract at the
-    granularity writes actually happen (a torn batch was never
-    acknowledged, so dropping it whole is exactly right)."""
+def _encode_event_batch(seg: SegmentLog, events: List[CloudEvent]):
+    """One log record per *publish batch*, in the segment's active format:
+    a columnar TFB1 frame (``repro.core.codec`` — the 2x-cheaper decode) on
+    a binary segment, a JSON array line on a v1 one.  Either way the
+    per-record overhead amortizes across the batch and the torn-tail
+    contract sits at the granularity writes actually happen (a torn batch
+    was never acknowledged, so dropping it whole is exactly right)."""
+    if seg.active_format() == "tfb1":
+        return codec.encode_frame_payload(events)
     return json.dumps([e.to_dict() for e in events], separators=(",", ":"))
 
 
-def _decode_event_batch(line: str) -> List[CloudEvent]:
+def _decode_event_batch(rec) -> List[CloudEvent]:
+    """A scanned log record → events: bytes payloads are columnar frames,
+    str lines are v1 JSON arrays."""
+    if isinstance(rec, bytes):
+        return codec.decode_frame_payload(rec).events()
     from_dict = CloudEvent.from_dict
-    return [from_dict(d) for d in json.loads(line)]
+    return [from_dict(d) for d in json.loads(rec)]
 
 
 #: Separator between a committed record's lease-epoch prefix and the event
@@ -478,9 +486,10 @@ class _FilePartition:
 
     The ``StreamShard`` mirror gives consumers the same O(batch) commit/DLQ
     semantics as the in-memory bus; ``sync`` incrementally replays whatever
-    the files gained since the last look (only whole, parseable lines — a
-    torn tail from a crashed writer is invisible until the next locked
-    writer truncates it).  Readers sync lock-free; the mirror is private.
+    the files gained since the last look (only whole, CRC-verified records
+    in either wire format — a torn tail from a crashed writer is invisible
+    until the next locked writer truncates it).  Readers sync lock-free;
+    the mirror is private.
     """
 
     __slots__ = ("shard", "log", "com", "dlq", "lockf", "log_off", "com_off",
@@ -492,11 +501,14 @@ class _FilePartition:
     #: and a partition's first sync after (re)assignment is always full.
     FULL_SYNC_INTERVAL = 0.05
 
-    def __init__(self, base: str, fsync: bool) -> None:
+    def __init__(self, base: str, fsync: bool, binary: bool = True) -> None:
         self.shard = StreamShard()
-        self.log = SegmentLog(base + ".log", fsync=fsync)
+        # event + DLQ segments carry batch frames and prefer the binary
+        # format for new files; the committed log stays line-oriented text —
+        # its epoch-tagged id records are the on-disk fencing audit surface
+        self.log = SegmentLog(base + ".log", fsync=fsync, binary=binary)
         self.com = SegmentLog(base + ".committed", fsync=fsync)
-        self.dlq = SegmentLog(base + ".dlq", fsync=fsync)
+        self.dlq = SegmentLog(base + ".dlq", fsync=fsync, binary=binary)
         self.lockf = open(base + ".lock", "a")
         self.log_off = 0
         self.com_off = 0
@@ -538,18 +550,20 @@ class _FilePartition:
                     shard.publish(fresh)
         if not full:
             return
-        ops, self.dlq_off = self.dlq.scan(json.loads, self.dlq_off)
+        ops, self.dlq_off = self.dlq.scan(codec.decode_payload, self.dlq_off)
         for op in ops:
-            if "__redrive__" in op:
+            if isinstance(op, dict) and "__redrive__" in op:
                 reasons = op.get("reasons")
                 shard.redrive(reasons)
                 self.dlq_ids = {e.id for e in shard.dlq}
             else:
-                ev = CloudEvent.from_dict(op)
-                if ev.id in shard.committed_ids or ev.id in self.dlq_ids:
-                    continue
-                self.dlq_ids.add(ev.id)
-                shard.to_dlq(ev)
+                # v1: one event dict per record; tfb1: a columnar frame
+                # (possibly several quarantined events per record)
+                for ev in codec.events_of(op):
+                    if ev.id in shard.committed_ids or ev.id in self.dlq_ids:
+                        continue
+                    self.dlq_ids.add(ev.id)
+                    shard.to_dlq(ev)
         ids, self.com_off = self.com.scan(_decode_commit_line, self.com_off)
         if ids or self.deferred:
             want = self.deferred
@@ -595,10 +609,16 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         lease_ttl: float = 30.0,
         lease_skew_hook: Optional[Callable[[str, int], bool]] = None,
         replicate_fault_hook: Optional[Callable[[str, str], None]] = None,
+        event_codec: str = "binary",
     ) -> None:
         super().__init__(num_partitions, partitioner)
         self.root = root
         self.fsync = fsync
+        # event_codec picks the wire format for NEW event/DLQ segments:
+        # "binary" (TFB1 columnar frames) or "json" (v1 array lines).  An
+        # existing segment's sniffed format always wins, so mixed-version
+        # processes sharing a root stay byte-compatible.
+        self.event_codec = event_codec
         # -- host-loss fault domain -------------------------------------------
         # replicate_to: (host, port) of a ReplicaServer — every segment
         # mutation this process makes is shipped there (see repro.bus.replicate)
@@ -701,7 +721,9 @@ class FilePartitionedEventStore(PartitionedStoreBase):
                     d = self._wf_dir(workflow)
                     os.makedirs(d, exist_ok=True)
                     fps = [
-                        _FilePartition(os.path.join(d, "p%04d" % p), self.fsync)
+                        _FilePartition(os.path.join(d, "p%04d" % p),
+                                       self.fsync,
+                                       binary=self.event_codec == "binary")
                         for p in range(n)
                     ]
                     if self._rep is not None:
@@ -979,7 +1001,7 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             # true parseable EOF or _append_clean would chop foreign records
             fp.sync()
             fp.log_off = self._append_clean(
-                fp.log, fp.log_off, [_encode_event_batch(events)])
+                fp.log, fp.log_off, [_encode_event_batch(fp.log, events)])
             committed = fp.shard.committed_ids
             live = [e for e in events if e.id not in committed]
             if live:
@@ -1142,8 +1164,11 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         with fp.shard.lock, self._plock(fp):
             fp.sync(full=True)
             self._check_lease(workflow, p)
-            fp.dlq_off = self._append_clean(
-                fp.dlq, fp.dlq_off, [event.to_json()])
+            if fp.dlq.active_format() == "tfb1":
+                rec = codec.encode_frame_payload([event])
+            else:
+                rec = event.to_json()  # legacy ledger shape: one event dict
+            fp.dlq_off = self._append_clean(fp.dlq, fp.dlq_off, [rec])
             fp.dlq_ids.add(event.id)
             fp.shard.to_dlq(event)
 

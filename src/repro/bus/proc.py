@@ -103,7 +103,8 @@ def _shard_main(member: str, workflow: str, bus_root: str, state_root: str,
         bus_root, num_partitions, fsync=cfg["fsync"],
         replicate_to=replica_addr, replicate_prefix="bus",
         lease_owner=member if lease else None,
-        lease_ttl=cfg.get("lease_ttl", 30.0))
+        lease_ttl=cfg.get("lease_ttl", 30.0),
+        event_codec=cfg.get("event_codec", "binary"))
     state_rep = None
     if replica_addr is not None:
         state_rep = ReplicationClient(replica_addr, state_root,
@@ -322,6 +323,7 @@ class ProcessShardPool:
         replica_root: Optional[str] = None,
         lease: bool = False,
         lease_ttl: float = 30.0,
+        event_codec: str = "binary",
     ) -> None:
         # ``command_timeout`` bounds every command-pipe round-trip.  Shard
         # processes service the pipe between batches, so it must exceed the
@@ -348,7 +350,8 @@ class ProcessShardPool:
             self._rep_addr = self.replica_server.address
         self.event_store = FilePartitionedEventStore(
             self.bus_root, num_partitions, fsync=fsync,
-            replicate_to=self._rep_addr, replicate_prefix="bus")
+            replicate_to=self._rep_addr, replicate_prefix="bus",
+            event_codec=event_codec)
         self.state_store = FileStateStore(
             self.state_root,
             replicator=(ReplicationClient(self._rep_addr, self.state_root,
@@ -369,7 +372,7 @@ class ProcessShardPool:
             "metrics": metrics, "trace": trace, "trace_sample": trace_sample,
             "trace_dir": self.trace_dir,
             "replica_addr": self._rep_addr, "lease": lease,
-            "lease_ttl": lease_ttl,
+            "lease_ttl": lease_ttl, "event_codec": event_codec,
         }
         self.metrics_enabled = metrics
         self.command_timeout = command_timeout

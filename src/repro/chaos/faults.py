@@ -170,19 +170,33 @@ class ChaosStateStore:
         return self._inner.put_contexts_delta(workflow, deltas)
 
 
+#: A torn *binary* record: the varint length prefix promises a 64-byte
+#: payload but the crash left only a crc fragment and a few payload bytes.
+#: ``codec.iter_records`` must refuse to advance past it.
+TORN_BINARY_RECORD = b"\x40\xde\xad\xbe\xef\x00Ctorn"
+
+
 def tear_segment_tail(root: str, suffix: str = ".log",
                       garbage: bytes = b'{"id":"torn-tail","su') -> List[str]:
-    """Append a torn (truncated-JSON) record to every segment file under
-    ``root`` — the on-disk state a crash mid-append leaves behind.  Readers
+    """Append a torn (half-written) record to every segment file under
+    ``root`` — the on-disk state a crash mid-append leaves behind.  The
+    tear matches each file's wire format (sniffed per file, like
+    ``SegmentLog`` itself): a TFB1 segment gets a binary record cut
+    mid-payload, a text segment the truncated-JSON ``garbage``.  Readers
     must stop before the torn record and the next locked writer must
     truncate it.  Returns the files torn."""
+    from ..core import codec
+
     torn: List[str] = []
     for dirpath, _dirs, files in os.walk(root):
         for fname in files:
             if not fname.endswith(suffix):
                 continue
             path = os.path.join(dirpath, fname)
-            with open(path, "ab") as f:
-                f.write(garbage)
+            with open(path, "ab+") as f:
+                f.seek(0)
+                head = f.read(len(codec.MAGIC))
+                f.write(TORN_BINARY_RECORD if head == codec.MAGIC
+                        else garbage)
             torn.append(path)
     return torn

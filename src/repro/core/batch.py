@@ -19,6 +19,12 @@ triggers additionally get their ``data["result"]`` column appended in one
 list-comprehension per (subject, trigger) run.  The Table-1 join hot loop
 becomes O(batch) array/column ops plus O(distinct subjects) Python.
 
+``triage`` also accepts an :class:`EventColumns` view straight off a
+decoded TFB1 columnar frame (``core.codec``): ids/subjects/types and the
+result column are then the decoded frame's own columns, so a fully-claimed
+binary batch flows from the segment log into the ``event_join`` kernel
+without ever materializing per-event CloudEvent objects.
+
 Everything else — slices that would cross a threshold, dedup, timeouts,
 failures, non-join conditions — is returned as leftover for the worker's
 per-trigger fire-run/batched/scalar path, which owns the exact fire
@@ -36,6 +42,7 @@ try:  # numpy is the plane's only hard dependency; degrade to None without it
 except ImportError:  # pragma: no cover - numpy is in the base image
     np = None
 
+from .codec import EventColumns
 from .conditions import _result_of
 from .events import TYPE_FAILURE, TYPE_TIMEOUT, CloudEvent
 
@@ -54,8 +61,10 @@ class VectorJoinPlane:
     def __init__(self, backend: Optional[str] = None, min_subjects: int = 2):
         if np is None:
             raise RuntimeError("VectorJoinPlane requires numpy")
-        from ..kernels.event_join.dispatch import resolve_join_backend
+        from ..kernels.event_join.dispatch import (join_counts_segments,
+                                                   resolve_join_backend)
 
+        self._join_segments = join_counts_segments
         self.backend, self._join = resolve_join_backend(backend)
         if self._join is None:
             raise RuntimeError("join backend disabled")
@@ -96,10 +105,15 @@ class VectorJoinPlane:
                 return None
         return threshold, aggregates
 
-    def triage(self, batch: List[CloudEvent],
+    def triage(self, batch: "List[CloudEvent] | EventColumns",
                entries_for: Callable[[str], Sequence[Any]],
                stats) -> Optional[TriageResult]:
         """Claim and evaluate the non-firing join share of a consumed batch.
+
+        ``batch`` is either a list of CloudEvents (the in-memory bus) or an
+        :class:`EventColumns` view straight off a decoded TFB1 frame — the
+        columnar path never materializes per-event objects unless a split
+        leaves events for the exact path.
 
         Returns ``(handled_event_ids, leftover_events)`` — the handled events
         have been fully accounted (counters advanced, result columns
@@ -109,32 +123,38 @@ class VectorJoinPlane:
         failure/timeout slices, too few claimable subjects) — the caller
         then processes the whole batch normally.
         """
-        etype = batch[0].type
-        if len({e.type for e in batch}) != 1:
+        cols = batch if isinstance(batch, EventColumns) else None
+        if cols is not None:
+            ids, subjects, types = cols.ids, cols.subjects, cols.types
+        else:
+            ids = [e.id for e in batch]
+            subjects = [e.subject for e in batch]
+            types = [e.type for e in batch]
+        etype = types[0]
+        if len(set(types)) != 1:
             return None
         if etype == TYPE_FAILURE or etype == TYPE_TIMEOUT:
             return None
-        ids = [e.id for e in batch]
         if len(set(ids)) != len(ids):
             # A re-published duplicate inside the batch: counting the copies
             # would double-count the join.  The grouped path's in-flight set
             # dedups exactly (§3.4), so leave the whole batch to it.
             return None
-        # subject -> its arrival-ordered events (insertion order = the order
-        # the grouped path would build its slices in)
+        # subject -> its arrival-ordered event indices (insertion order =
+        # the order the grouped path would build its slices in)
         by_subject: dict = {}
-        for e in batch:
-            evs = by_subject.get(e.subject)
-            if evs is None:
-                by_subject[e.subject] = [e]
+        for i, s in enumerate(subjects):
+            idxs = by_subject.get(s)
+            if idxs is None:
+                by_subject[s] = [i]
             else:
-                evs.append(e)
+                idxs.append(i)
         # tid -> [ctx, count0, threshold, events_in_batch]
         pairs: dict = {}
         aggregating: dict = {}   # tid -> pre-extracted result column
         claimed: dict = {}       # subject -> its candidate tid list
-        for subject, sevs in by_subject.items():
-            m = len(sevs)
+        for subject, sidx in by_subject.items():
+            m = len(sidx)
             entries = entries_for(subject)
             if not entries:
                 continue  # unknown subject: worker's drop-count path
@@ -170,16 +190,20 @@ class VectorJoinPlane:
         if len(claimed) < self.min_subjects or not pairs:
             return None
 
-        # Pre-extracted result columns: one C-level comprehension per
-        # (subject, trigger) run, in the same subject-slice order the
-        # grouped path's batched conditions would append in.
+        # Pre-extracted result columns: one C-level gather per (subject,
+        # trigger) run, in the same subject-slice order the grouped path's
+        # batched conditions would append in.  On a ``_D_RESULT`` frame the
+        # whole-batch result column already exists inside the decoded frame.
         if aggregating:
+            res = cols.results() if cols is not None else None
             for subject, tids in claimed.items():
-                cols = [aggregating[t] for t in tids if t in aggregating]
-                if not cols:
+                acc_cols = [aggregating[t] for t in tids if t in aggregating]
+                if not acc_cols:
                     continue
-                column = [_result_of(e) for e in by_subject[subject]]
-                for col in cols:
+                sidx = by_subject[subject]
+                column = ([res[i] for i in sidx] if res is not None
+                          else [_result_of(batch[i]) for i in sidx])
+                for col in acc_cols:
                     col.extend(column)
 
         rows = list(pairs.values())
@@ -187,10 +211,11 @@ class VectorJoinPlane:
         counts = np.fromiter((r[1] for r in rows), np.int32, n_rows)
         expected = np.fromiter((r[2] for r in rows), np.int32, n_rows)
         lens = np.fromiter((r[3] for r in rows), np.int64, n_rows)
-        # The routed event batch as the kernel sees it: one trigger-row id
-        # per event (−1 would be padding; none is needed here).
-        event_rows = np.repeat(np.arange(n_rows, dtype=np.int32), lens)
-        new_counts, fired = self._join(event_rows, counts, expected)
+        # The routed event batch as the kernel sees it is contiguous runs of
+        # trigger-row ids (−1 would be padding; none is needed here) — the
+        # row-id expansion lives next to the kernel.
+        new_counts, fired = self._join_segments(lens, counts, expected,
+                                                self._join)
         if fired.any():  # pragma: no cover - screening guarantees this
             raise AssertionError("vector join plane screening let a fire through")
         total = 0
@@ -208,6 +233,8 @@ class VectorJoinPlane:
         self.events += int(lens.sum())
 
         if len(claimed) == len(by_subject):
-            return ids, []
-        return ([e.id for e in batch if e.subject in claimed],
-                [e for e in batch if e.subject not in claimed])
+            # Fully claimed: nothing materializes even on the columnar path.
+            return (ids if cols is None else list(ids)), []
+        evs = cols.events() if cols is not None else batch
+        return ([ids[i] for i, s in enumerate(subjects) if s in claimed],
+                [evs[i] for i, s in enumerate(subjects) if s not in claimed])

@@ -8,11 +8,12 @@ carries a unique ``id`` used for at-least-once dedup (§3.4).
 from __future__ import annotations
 
 import itertools
-import json
 import os
 import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
+
+from repro.core import codec as _codec
 
 SPECVERSION = "1.0"
 
@@ -63,44 +64,19 @@ class CloudEvent:
     # format (and its cost) unchanged.
     ext: Optional[Dict[str, Any]] = None
 
-    def to_dict(self) -> Dict[str, Any]:
-        d = {
-            "specversion": self.specversion,
-            "id": self.id,
-            "source": self.source,
-            "subject": self.subject,
-            "type": self.type,
-            "time": self.time,
-            "data": self.data,
-        }
-        if self.ext is not None:
-            d["ext"] = self.ext
-        return d
+    # The (de)serialization implementations live in repro.core.codec —
+    # the single encode and single decode shared by every surface
+    # (per-event JSON, batch lines, columnar frames).  Bound below after
+    # _codec._install so the hot paths pay no extra call indirection.
 
-    def to_json(self) -> str:
-        return json.dumps(self.to_dict(), separators=(",", ":"))
 
-    @staticmethod
-    def from_dict(d: Dict[str, Any]) -> "CloudEvent":
-        # Deserialization is the file-bus consumer's per-event floor, so it
-        # bypasses the frozen-dataclass __init__ (~4x): build the instance
-        # directly in __dict__ (writes don't go through __setattr__).
-        ev = object.__new__(CloudEvent)
-        ev.__dict__.update({
-            "subject": d["subject"],
-            "type": d.get("type", TYPE_TERMINATION),
-            "data": d.get("data"),
-            "source": d.get("source", "triggerflow"),
-            "id": d["id"],
-            "time": d.get("time"),
-            "specversion": d.get("specversion", SPECVERSION),
-            "ext": d.get("ext"),
-        })
-        return ev
-
-    @staticmethod
-    def from_json(s: str) -> "CloudEvent":
-        return CloudEvent.from_dict(json.loads(s))
+# codec needs the class (and its field defaults) to materialize events;
+# binding the methods here keeps exactly one implementation of each.
+_codec._install(CloudEvent)
+CloudEvent.to_dict = _codec.event_to_dict
+CloudEvent.to_json = _codec.event_to_json
+CloudEvent.from_dict = staticmethod(_codec.event_from_dict)
+CloudEvent.from_json = staticmethod(_codec.event_from_json)
 
 
 def stamp_publish_time(events, now: Optional[float] = None) -> None:

@@ -28,6 +28,7 @@ try:
 except ImportError:  # pragma: no cover - non-POSIX: single-process only
     fcntl = None  # type: ignore[assignment]
 
+from . import codec
 from .events import CloudEvent, stamp_publish_time
 
 
@@ -264,23 +265,39 @@ def fsync_dir(path: str) -> None:
 
 
 class SegmentLog:
-    """Append-only line-record segment: the durable log primitive.
+    """Append-only record segment: the durable log primitive.
 
-    One record per line, appended with flush (+ optional fsync) — the shared
-    building block of ``FileEventStore``, the partitioned file bus
-    (``repro.bus.FilePartitionedEventStore``: per-partition event/committed/DLQ
-    segments) and the state store's checkpoint delta logs.
+    Two on-disk formats, decided *per file* (never mixed within one):
+
+    * ``v1`` — one text record per line (the original JSONL format).
+    * ``tfb1`` — binary: the file starts with ``codec.MAGIC``
+      (``TFB1\\x00``) and each record is length-prefixed + crc32-framed
+      (``repro.core.codec``).  Records may be arbitrary bytes — the
+      event stores put whole columnar batch frames in them.
+
+    ``binary=True`` sets the *preferred* format: it applies only when this
+    instance appends to an empty (or brand-new) file.  A non-empty file's
+    format is sniffed from its first bytes and always wins, so existing v1
+    segments keep replaying — and keep receiving v1 appends — unchanged.
+
+    This is the shared building block of ``FileEventStore``, the
+    partitioned file bus (``repro.bus.FilePartitionedEventStore``:
+    per-partition event/committed/DLQ segments) and the state store's
+    checkpoint delta logs.
 
     Torn-tail contract (crash mid-append, §3.4): a write that never completed
     was never acknowledged, so readers must not see it.  ``scan`` consumes
-    only *whole* lines whose ``parse`` succeeds and stops (without advancing)
-    at the first torn or unparseable line; ``repair`` truncates such a tail so
-    later appends cannot land beyond it and masquerade as part of a valid
-    record.  Writers must ``repair`` before their first append to a segment
-    they did not create (the owning store does this once per open).
+    only *whole* records whose ``parse`` succeeds and stops (without
+    advancing) at the first torn or unparseable record — for ``tfb1`` that
+    means a truncation at *any* byte offset (mid-varint, mid-crc,
+    mid-payload) recovers exactly the prefix of whole crc-valid records.
+    ``repair`` truncates such a tail so later appends cannot land beyond it
+    and masquerade as part of a valid record.  Writers must ``repair``
+    before their first append to a segment they did not create (the owning
+    store does this once per open).
 
-    Offsets are byte offsets; records are ASCII (``json.dumps`` default /
-    hex ids), so text-mode character counts equal byte counts.
+    Offsets are byte offsets in both formats (``scan`` works on raw bytes;
+    v1 lines decode per record), so callers can persist them format-blind.
 
     File handles persist across calls (``open`` costs ~ms under syscall
     sandboxes): one lazily-opened append handle, one read handle.  They stay
@@ -288,12 +305,15 @@ class SegmentLog:
     that *removes* the file must go through ``remove`` so both are dropped.
     """
 
-    __slots__ = ("path", "fsync", "_rf", "_af", "append_count",
-                 "append_seconds", "replicator", "_dir_dirty")
+    __slots__ = ("path", "fsync", "binary", "_format", "_rf", "_af",
+                 "append_count", "append_seconds", "replicator", "_dir_dirty")
 
-    def __init__(self, path: str, fsync: bool = True) -> None:
+    def __init__(self, path: str, fsync: bool = True,
+                 binary: bool = False) -> None:
         self.path = path
         self.fsync = fsync
+        self.binary = binary
+        self._format: Optional[str] = None  # sniffed lazily; None = unknown
         self._rf = None
         self._af = None
         # Append accounting for the metrics plane (appends are the store's
@@ -315,6 +335,26 @@ class SegmentLog:
         except OSError:
             return 0
 
+    def active_format(self) -> str:
+        """The file's format (``"v1"`` | ``"tfb1"``).  Sniffed from the
+        first bytes and cached; an empty (or absent) file answers with this
+        instance's *preferred* format without caching — the file only
+        commits to a format once bytes land in it.  A 1–4 byte file (e.g. a
+        magic header torn by a crash) counts as v1: the text scan finds no
+        whole line, so ``repair`` truncates it to empty and the preference
+        re-applies."""
+        fmt = self._format
+        if fmt is None:
+            try:
+                with open(self.path, "rb") as f:
+                    head = f.read(len(codec.MAGIC))
+            except OSError:
+                head = b""
+            if not head:
+                return "tfb1" if self.binary else "v1"
+            fmt = self._format = "tfb1" if head == codec.MAGIC else "v1"
+        return fmt
+
     def _close(self) -> None:
         for f in (self._rf, self._af):
             if f is not None:
@@ -330,24 +370,42 @@ class SegmentLog:
         (e.g. a concurrent delta-log compaction) — the next append/scan
         reopens the *current* inode instead of feeding the unlinked one."""
         self._close()
+        self._format = None  # the recreated file may use the other format
 
     def remove(self) -> None:
         """Delete the file (and drop the cached handles, so a later append
         recreates it instead of writing to the unlinked inode)."""
         self._close()
+        self._format = None
         if os.path.exists(self.path):
             os.remove(self.path)
             if self.replicator is not None:
                 self.replicator.ship_remove(self.path)
 
-    def append(self, lines: Iterable[str]) -> int:
-        """Append one line per record (flush + optional fsync).  Returns the
-        number of bytes written."""
+    def append(self, lines: Iterable) -> int:
+        """Append records in the file's active format (flush + optional
+        fsync): one line per record on v1 (``str`` records only), one
+        length+crc frame per record on tfb1 (``str`` records are framed as
+        their utf-8 bytes; ``bytes`` pass through).  A tfb1 append to an
+        empty file writes the magic header first.  Returns the number of
+        bytes written."""
         t0 = time.perf_counter()
         # binary handle + one explicit encode: the text layer would encode
         # too, and a replicated log would then pay a SECOND full encode in
         # ship_append — this way writer and replicator share the same bytes
-        data = ("\n".join(lines) + "\n").encode("utf-8")
+        fmt = self.active_format()
+        if fmt == "tfb1":
+            data = b"".join(
+                codec.encode_record(
+                    r.encode("utf-8") if isinstance(r, str) else r)
+                for r in lines)
+            if self.size() == 0:
+                data = codec.MAGIC + data
+                self._format = "tfb1"
+        else:
+            data = ("\n".join(lines) + "\n").encode("utf-8")
+            if self._format is None:
+                self._format = "v1"
         f = self._af
         if f is None:
             if not os.path.exists(self.path):
@@ -373,31 +431,48 @@ class SegmentLog:
     def scan(self, parse, offset: int = 0):
         """Parse whole records from ``offset``.  Returns
         ``(records, next_offset)`` where ``next_offset`` is the end of the
-        parseable prefix — a torn final line (no newline: the append never
-        completed) or an unparseable line (a tail that was never repaired)
-        stops the scan without advancing past it."""
+        parseable prefix — a torn final record (the append never completed)
+        or an unparseable one (a tail that was never repaired) stops the
+        scan without advancing past it.
+
+        ``parse`` receives ``str`` lines on a v1 segment (unchanged
+        contract) and raw ``bytes`` payloads on a tfb1 segment."""
         size = self.size()
         if size <= offset:
             return [], offset
+        fmt = self.active_format()
         f = self._rf
         if f is None:
             try:
-                f = self._rf = open(self.path)
+                f = self._rf = open(self.path, "rb")
             except OSError:
+                return [], offset
+        if fmt == "tfb1" and offset < len(codec.MAGIC):
+            offset = len(codec.MAGIC)  # skip the sniffed header
+            if size <= offset:
                 return [], offset
         f.seek(offset)
         chunk = f.read()
         records = []
         valid = offset
+        if fmt == "tfb1":
+            for payload, end in codec.iter_records(chunk):
+                try:
+                    records.append(parse(payload))
+                except Exception:  # noqa: BLE001 - stop before the frankenrecord
+                    # tfcheck: allow[seam-safety] an unparseable payload IS the torn tail: stopping the scan here is the contract, not a swallow
+                    break
+                valid = offset + end
+            return records, valid
         pos = 0
         while True:
-            nl = chunk.find("\n", pos)
+            nl = chunk.find(b"\n", pos)
             if nl < 0:
                 break
             line = chunk[pos:nl].strip()
             if line:
                 try:
-                    records.append(parse(line))
+                    records.append(parse(line.decode("utf-8")))
                 except Exception:  # noqa: BLE001 - frankenline: stop before it
                     # tfcheck: allow[seam-safety] an unparseable line IS the torn tail: stopping the scan here is the contract, not a swallow
                     break
@@ -412,10 +487,14 @@ class SegmentLog:
         (kernel-positioned at EOF per write) and the read handle seeks
         absolutely."""
         if size < self.size():
-            with open(self.path, "r+") as f:
+            with open(self.path, "rb+") as f:
                 f.truncate(size)
                 f.flush()
                 os.fsync(f.fileno())
+            if size < len(codec.MAGIC):
+                # the (possibly binary) header is gone: the file is free to
+                # re-commit to either format on its next append
+                self._format = None
             if self.replicator is not None:
                 self.replicator.ship_truncate(self.path, size)
 
@@ -426,6 +505,24 @@ class SegmentLog:
         records, valid = self.scan(parse, 0)
         self.truncate(valid)
         return records, valid
+
+
+def parse_event_record(rec) -> List[CloudEvent]:
+    """Segment-format-blind event-record parse for ``SegmentLog.scan``:
+    a v1 line (str) holds one JSON event dict *or* a JSON array of them,
+    a tfb1 payload (bytes) holds a columnar batch frame.  Always returns
+    a list of events."""
+    return codec.events_of(codec.decode_payload(rec))
+
+
+def append_events(seg: SegmentLog, events) -> int:
+    """Append one event batch in ``seg``'s active format: a single
+    columnar frame record on tfb1 (one encode for the whole batch — the
+    2x-cheaper wire format), one JSON line per event on v1 (the legacy
+    layout existing segments keep)."""
+    if seg.active_format() == "tfb1":
+        return seg.append([codec.encode_frame_payload(events)])
+    return seg.append([e.to_json() for e in events])
 
 
 class EventStore:
@@ -565,13 +662,22 @@ class MemoryEventStore(EventStore):
 
 
 class FileEventStore(EventStore):
-    """Durable append-only JSONL log per workflow + committed-id set.
+    """Durable append-only event log per workflow + committed-id set.
 
-    Layout: ``<root>/<workflow>.log`` (one JSON event per line, append-only),
+    Layout: ``<root>/<workflow>.log`` (event segment, append-only),
     ``<root>/<workflow>.committed`` (one event id per line, append-only),
-    ``<root>/<workflow>.dlq`` (JSONL).  A restarted process reconstructs the
-    uncommitted set = log - committed, which is exactly the paper's
-    "the event broker will send again uncommitted events" recovery semantics.
+    ``<root>/<workflow>.dlq`` (quarantine segment).  A restarted process
+    reconstructs the uncommitted set = log - committed, which is exactly the
+    paper's "the event broker will send again uncommitted events" recovery
+    semantics.
+
+    ``codec`` picks the wire format for *new* event/DLQ segments:
+    ``"binary"`` (default) writes TFB1 columnar batch frames, ``"json"``
+    the legacy one-JSON-event-per-line layout.  The format of an existing
+    segment is sniffed per file and always wins (``SegmentLog``), so a v1
+    root replays — and keeps appending — unchanged under either setting.
+    The committed log stays line-oriented text in both modes (ids are the
+    audit surface).
     """
 
     #: Like ``MemoryEventStore``: the pending mirror excludes committed ids
@@ -579,8 +685,9 @@ class FileEventStore(EventStore):
     #: committed event.
     UNCOMMITTED_ONLY = True
 
-    def __init__(self, root: str) -> None:
+    def __init__(self, root: str, codec: str = "binary") -> None:
         self.root = root
+        self.codec = codec
         os.makedirs(root, exist_ok=True)
         self._lock = threading.RLock()
         # In-memory mirrors for speed; the segment logs are the source of truth.
@@ -621,9 +728,10 @@ class FileEventStore(EventStore):
         Returns the number of new events mirrored."""
         with self._lock:
             log, _, _ = self._seglogs(workflow)
-            new, off = log.scan(CloudEvent.from_json,
-                                self._offsets.get(workflow, 0))
+            batches, off = log.scan(parse_event_record,
+                                    self._offsets.get(workflow, 0))
             self._offsets[workflow] = off
+            new = [e for b in batches for e in b]
             if not new:
                 return 0
             committed = self._committed_ids.get(workflow, set())
@@ -650,7 +758,9 @@ class FileEventStore(EventStore):
         segs = self._segs.get(wf)
         if segs is None:
             log_p, com_p, dlq_p = self._paths(wf)
-            segs = (SegmentLog(log_p), SegmentLog(com_p), SegmentLog(dlq_p))
+            binary = self.codec == "binary"
+            segs = (SegmentLog(log_p, binary=binary), SegmentLog(com_p),
+                    SegmentLog(dlq_p, binary=binary))
             self._segs[wf] = segs
         return segs
 
@@ -662,9 +772,11 @@ class FileEventStore(EventStore):
         # a live writer's in-flight append, and truncating that would
         # destroy an fsync-acknowledged publish.
         with self._wf_flock(wf):
-            events, log_size = log.repair(CloudEvent.from_json)
+            batches, log_size = log.repair(parse_event_record)
+            events = [e for b in batches for e in b]
             committed = set(com.repair(str)[0])
-            dlq: deque = deque(dlq_seg.repair(CloudEvent.from_json)[0])
+            dlq: deque = deque(
+                e for b in dlq_seg.repair(parse_event_record)[0] for e in b)
         by_id = {e.id: e for e in events}
         self._committed_ids[wf] = committed
         self._committed_order[wf] = [by_id[i] for i in committed if i in by_id]
@@ -708,8 +820,7 @@ class FileEventStore(EventStore):
                 # acknowledged — fsync cannot have returned) and must go, or
                 # our append would fuse with it into an unparseable line.
                 log.truncate(off)
-                self._offsets[workflow] = off + \
-                    log.append(e.to_json() for e in events)
+                self._offsets[workflow] = off + append_events(log, events)
             # A re-published copy of a committed id must not re-enter the
             # pending mirror (UNCOMMITTED_ONLY contract); the log append above
             # is harmless — _load filters committed ids on recovery.
@@ -758,7 +869,9 @@ class FileEventStore(EventStore):
         with self._lock:
             _, _, dlq_seg = self._seglogs(workflow)
             with self._wf_flock(workflow):
-                dlq_seg.append([event.to_json()])
+                # the batch encoder even for a single event: quarantine and
+                # publish share one append shape per format
+                append_events(dlq_seg, [event])
             self._dlq.setdefault(workflow, deque()).append(event)
             q = self._pending.get(workflow)
             if q:
@@ -785,7 +898,7 @@ class FileEventStore(EventStore):
             with self._wf_flock(workflow):
                 dlq_seg.remove()
                 if kept:
-                    dlq_seg.append([e.to_json() for e in kept])
+                    append_events(dlq_seg, kept)
             return len(moved)
 
     def dlq_size(self, workflow: str) -> int:

@@ -115,3 +115,20 @@ def join_counts(events: np.ndarray, counts: np.ndarray,
     if fn is None:
         raise RuntimeError("join backend disabled (TRIGGERFLOW_JOIN_BACKEND=off)")
     return fn(events, counts, expected)
+
+
+def join_counts_segments(lens, counts: np.ndarray, expected: np.ndarray,
+                         fn: Optional[JoinFn] = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Segmented-sum join over *contiguous runs*: ``lens[i]`` events belong
+    to trigger row ``i``.  This is the shape the columnar ingest path
+    produces (a batch bucketed by subject is runs of row ids, never a
+    ragged scatter), so the row-id expansion lives here next to the kernel
+    instead of in every caller."""
+    if fn is None:
+        _name, fn = resolve_join_backend()
+        if fn is None:
+            raise RuntimeError(
+                "join backend disabled (TRIGGERFLOW_JOIN_BACKEND=off)")
+    event_rows = np.repeat(np.arange(len(lens), dtype=np.int32), lens)
+    return fn(event_rows, counts, expected)

@@ -21,3 +21,7 @@ class Shard:
 
     def chop_without_flock(self, offset):
         self.seg.truncate(offset)     # BAD: a live writer could be mid-append
+
+    def rewrite_without_flock(self, kept):
+        self.seg.remove()             # BAD: the recreated segment re-applies
+        self.seg.append(kept)         # the writer's preferred wire format

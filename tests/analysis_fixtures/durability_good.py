@@ -23,3 +23,9 @@ class Shard:
     def chop_under_flock(self, fp, offset):
         with self._plock(fp):
             self.seg.truncate(offset)  # OK: exclusive owner, no live writer
+
+    def rewrite_under_flock(self, fp, kept, member):
+        with self._plock(fp):
+            self.seg.remove()          # OK: format flip fenced by the flock
+            self.seg.append(kept)
+        kept.remove(member)            # OK: list.remove, not a segment

@@ -61,7 +61,7 @@ def test_rule_silent_on_good_fixture(rule_id):
 def test_bad_fixture_finding_counts():
     """Each bad fixture trips every sub-check its rule encodes."""
     assert len(_scan("lock-discipline", "lock_discipline_bad")) == 5
-    assert len(_scan("durability-ordering", "durability_bad")) == 3
+    assert len(_scan("durability-ordering", "durability_bad")) == 4
     assert len(_scan("fencing", "fencing_bad")) == 2
     assert len(_scan("obs-discipline", "obs_discipline_bad")) == 2
     assert len(_scan("seam-safety", "seam_safety_bad")) == 2

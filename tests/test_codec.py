@@ -1,0 +1,401 @@
+"""TFB1 codec contract tests: record framing (torn-tail fuzz at every byte
+offset), the single CloudEvent (de)serialization implementation, columnar
+frame round-trips, SegmentLog per-file format sniffing, v1 → tfb1 migration
+equivalence, replication byte-mirroring of binary segments, and the
+columnar zero-materialization path into ``VectorJoinPlane.triage``.
+"""
+import json
+import os
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import FileEventStore, termination_event
+from repro.core import codec
+from repro.core.codec import EventColumns
+from repro.core.conditions import _result_of
+from repro.core.events import CloudEvent
+from repro.core.eventstore import SegmentLog, append_events, parse_event_record
+
+
+# -- record framing -----------------------------------------------------------
+
+def test_record_roundtrip_varint_sizes():
+    payloads = [b"", b"x", b"hello" * 3, os.urandom(200), b"y" * 70000]
+    buf = codec.encode_records(payloads)
+    got, end = codec.scan_records(buf)
+    assert got == payloads
+    assert end == len(buf)
+
+
+def test_truncation_at_every_byte_offset_recovers_whole_prefix():
+    payloads = [f"rec-{i}".encode() * (i + 1) for i in range(6)]
+    buf = codec.encode_records(payloads)
+    # per-record end offsets from a full scan
+    ends = [0] + [end for _, end in codec.iter_records(buf)]
+    assert ends[-1] == len(buf)
+    for cut in range(len(buf) + 1):
+        got, valid = codec.scan_records(buf[:cut])
+        # exactly the whole-record prefix that fits inside the cut
+        n = max(i for i, e in enumerate(ends) if e <= cut)
+        assert got == payloads[:n], cut
+        assert valid == ends[n], cut
+
+
+def test_flipped_byte_fails_crc_and_stops_scan():
+    payloads = [b"aaaa", b"bbbb", b"cccc"]
+    buf = bytearray(codec.encode_records(payloads))
+    ends = [end for _, end in codec.iter_records(bytes(buf))]
+    buf[ends[0] + 5 + 2] ^= 0xFF  # a byte inside record 2's payload
+    got, valid = codec.scan_records(bytes(buf))
+    assert got == payloads[:1]
+    assert valid == ends[0]
+
+
+# -- the one CloudEvent codec -------------------------------------------------
+
+def test_cloudevent_serialization_is_the_codec():
+    # satellite: exactly one encode and one decode implementation
+    assert CloudEvent.to_dict is codec.event_to_dict
+    assert CloudEvent.from_dict is codec.event_from_dict
+    assert CloudEvent.to_json is codec.event_to_json
+    assert CloudEvent.from_json is codec.event_from_json
+
+
+@pytest.mark.parametrize("ev", [
+    CloudEvent(subject="π-sübject→", data={"result": "víctor"}),
+    CloudEvent(subject="s", data={}),                      # empty dict data
+    CloudEvent(subject="s", data=None),
+    CloudEvent(subject="s", data={"result": None}),
+    CloudEvent(subject="s", data={"nested": {"deep": [1, 2, {"x": None}]}}),
+    CloudEvent(subject="s", data={"result": 1},
+               ext={"tftrace": {"id": "a1", "parent": None}}),
+    CloudEvent(subject="s", type="event.triggerflow.termination.failure",
+               data={"error": "boom"}, time=123.5),
+])
+def test_event_json_roundtrip(ev):
+    back = CloudEvent.from_json(ev.to_json())
+    assert back.to_dict() == ev.to_dict()
+    assert (back.subject, back.type, back.id, back.time, back.data, back.ext) \
+        == (ev.subject, ev.type, ev.id, ev.time, ev.data, ev.ext)
+
+
+def test_from_dict_fills_defaults():
+    ev = CloudEvent.from_dict({"id": "x", "subject": "s"})
+    assert ev.type == CloudEvent.__dataclass_fields__["type"].default
+    assert ev.specversion == "1.0"
+    assert ev.data is None and ev.ext is None and ev.time is None
+
+
+# -- columnar frames ----------------------------------------------------------
+
+def _frame_roundtrip(events):
+    payload = codec.encode_frame_payload(events)
+    assert payload[:1] == b"\x00"  # NUL-tagged: never mistaken for JSON
+    cols = codec.decode_frame_payload(payload)
+    assert len(cols) == len(events)
+    assert [e.to_dict() for e in cols.events()] == \
+        [e.to_dict() for e in events]
+    return payload, cols
+
+
+def test_frame_roundtrip_result_batch():
+    evs = [termination_event(f"s{i % 3}", i) for i in range(10)]
+    payload, cols = _frame_roundtrip(evs)
+    # the common shape stores the result scalars directly: results() is the
+    # decoded column itself, zero per-event work
+    assert cols.results() is cols._data_col
+    assert cols.results() == [_result_of(e) for e in evs]
+
+
+def test_frame_roundtrip_mixed_data_times_ext():
+    evs = [
+        CloudEvent(subject="â", data={"result": 1, "extra": 2}, time=1.5),
+        CloudEvent(subject="b", data=None, time=2.5,
+                   ext={"tftrace": {"id": "t"}}),
+        CloudEvent(subject="â", data=[1, 2], time=None),
+    ]
+    _, cols = _frame_roundtrip(evs)
+    assert cols.results() == [_result_of(e) for e in evs]
+    assert [cols.time_at(i) for i in range(3)] == [1.5, 2.5, None]
+    assert cols.ext_at(1) == {"tftrace": {"id": "t"}}
+
+
+def test_frame_roundtrip_empty_and_wide_tables():
+    _frame_roundtrip([])
+    # >255 interned strings forces the u16 index arrays
+    evs = [termination_event(f"subject-{i}", i) for i in range(300)]
+    _frame_roundtrip(evs)
+    # an id carrying the separator falls back to the JSON id column
+    weird = CloudEvent(subject="s", data={"result": 0})
+    weird.__dict__["id"] = "a\x1fb"
+    _frame_roundtrip([weird, termination_event("s", 1)])
+
+
+def test_frame_truncation_always_raises():
+    evs = [termination_event("s", i) for i in range(4)]
+    payload = codec.encode_frame_payload(evs)
+    for cut in range(2, len(payload)):
+        with pytest.raises(ValueError):
+            codec.decode_frame_payload(payload[:cut])
+
+
+def test_decode_payload_dispatches_on_leading_nul():
+    evs = [termination_event("s", 1)]
+    frame = codec.encode_frame_payload(evs)
+    assert isinstance(codec.decode_payload(frame), EventColumns)
+    line = evs[0].to_json()
+    assert codec.decode_payload(line)["id"] == evs[0].id
+    assert codec.decode_payload(line.encode())["id"] == evs[0].id
+    # events_of normalizes all three payload shapes to event lists
+    assert [e.id for e in codec.events_of(codec.decode_payload(frame))] == \
+        [evs[0].id]
+    assert codec.events_of(json.loads(line))[0].id == evs[0].id
+    assert codec.events_of([json.loads(line)])[0].id == evs[0].id
+
+
+# -- SegmentLog: per-file format, torn tails ----------------------------------
+
+def test_segment_log_binary_append_scan(tmp_path):
+    seg = SegmentLog(str(tmp_path / "a.log"), binary=True)
+    assert seg.active_format() == "tfb1"
+    seg.append([b"p1", "text-record"])
+    seg.append([b"p3"])
+    recs, off = seg.scan(bytes, 0)
+    assert recs == [b"p1", b"text-record", b"p3"]
+    assert off == seg.size()
+    with open(seg.path, "rb") as f:
+        assert f.read(len(codec.MAGIC)) == codec.MAGIC
+
+
+def test_segment_log_existing_file_format_wins(tmp_path):
+    p = str(tmp_path / "a.log")
+    v1 = SegmentLog(p)
+    v1.append(['{"k":1}'])
+    # binary preference must NOT flip a non-empty v1 file
+    seg = SegmentLog(p, binary=True)
+    assert seg.active_format() == "v1"
+    seg.append(['{"k":2}'])
+    recs, _ = seg.scan(json.loads, 0)
+    assert recs == [{"k": 1}, {"k": 2}]
+    # and a tfb1 file stays tfb1 under a text-preferring writer
+    p2 = str(tmp_path / "b.log")
+    SegmentLog(p2, binary=True).append([b"x"])
+    seg2 = SegmentLog(p2)
+    assert seg2.active_format() == "tfb1"
+    seg2.append([b"y"])
+    assert seg2.scan(bytes, 0)[0] == [b"x", b"y"]
+
+
+def test_segment_log_binary_torn_tail_fuzz(tmp_path):
+    p = str(tmp_path / "a.log")
+    seg = SegmentLog(p, binary=True, fsync=False)
+    for i in range(5):
+        seg.append([f"record-{i}".encode() * (i + 2)])
+    whole = open(p, "rb").read()
+    full, _ = seg.scan(bytes, 0)
+    boundaries = {len(codec.MAGIC)}
+    n_at = {len(codec.MAGIC): 0}
+    o = len(codec.MAGIC)
+    for k, (_, end) in enumerate(codec.iter_records(whole, o)):
+        boundaries.add(end)
+        n_at[end] = k + 1
+    for cut in range(len(whole) + 1):
+        with open(p, "wb") as f:
+            f.write(whole[:cut])
+        fresh = SegmentLog(p, binary=True, fsync=False)
+        recs, valid = fresh.repair(bytes)
+        expect_valid = max((b for b in boundaries if b <= cut), default=0)
+        if cut < len(codec.MAGIC):
+            # a torn magic header counts as v1 text: no whole line → empty
+            assert recs == [] and fresh.size() == 0, cut
+        else:
+            assert recs == full[:n_at[expect_valid]], cut
+            assert valid == expect_valid == fresh.size(), cut
+        # post-repair appends land clean and replay
+        fresh.append([b"after-repair"])
+        assert SegmentLog(p, binary=True).scan(bytes, 0)[0][-1] \
+            == b"after-repair", cut
+
+
+# -- store-level: formats, migration, replication -----------------------------
+
+def test_file_store_binary_and_json_same_observables(tmp_path):
+    obs = []
+    for fmt in ("json", "binary"):
+        store = FileEventStore(str(tmp_path / fmt), codec=fmt)
+        store.create_stream("w")
+        evs = [termination_event(f"s{i % 2}", i) for i in range(8)]
+        store.publish_batch("w", evs)
+        store.to_dlq("w", evs[3])
+        store.commit("w", [evs[0].id, evs[1].id])
+        # restart: replay from disk (ids are process-sequenced, so compare
+        # by position in the published stream)
+        idx = {e.id: i for i, e in enumerate(evs)}
+        fresh = FileEventStore(str(tmp_path / fmt), codec=fmt)
+        obs.append({
+            "pending": [idx[e.id] for e in fresh.consume("w", 100)],
+            "committed": sorted(idx[e.id]
+                                for e in fresh.committed_events("w")),
+            "dlq": fresh.dlq_size("w"),
+            "lag": fresh.lag("w"),
+        })
+    assert obs[0] == obs[1]
+    log = tmp_path / "binary" / "w.log"
+    assert log.read_bytes().startswith(codec.MAGIC)
+    assert not (tmp_path / "json" / "w.log").read_bytes().startswith(codec.MAGIC)
+
+
+def test_v1_root_migrates_under_binary_reader(tmp_path):
+    """CI migration smoke: a v1 (JSON-lines) segment root opened by a
+    binary-preferring store replays identically, existing segments keep
+    receiving v1 appends (no mixed formats within a file), and only
+    brand-new segments adopt TFB1."""
+    root = str(tmp_path / "ev")
+    old = FileEventStore(root, codec="json")
+    old.create_stream("w")
+    evs = [termination_event("s", i) for i in range(6)]
+    old.publish_batch("w", evs)
+    old.commit("w", [evs[0].id])
+    v1_bytes = (tmp_path / "ev" / "w.log").read_bytes()
+
+    new = FileEventStore(root)  # binary-preferring default
+    assert [e.id for e in new.consume("w", 100)] == [e.id for e in evs[1:]]
+    assert new.is_committed("w", evs[0].id)
+    assert (tmp_path / "ev" / "w.log").read_bytes() == v1_bytes  # untouched
+    more = [termination_event("s", 100 + i) for i in range(3)]
+    new.publish_batch("w", more)
+    log_bytes = (tmp_path / "ev" / "w.log").read_bytes()
+    assert not log_bytes.startswith(codec.MAGIC)  # appends stayed v1
+    assert log_bytes.startswith(v1_bytes)
+    new.create_stream("w2")
+    new.publish("w2", termination_event("x", 1))
+    assert (tmp_path / "ev" / "w2.log").read_bytes().startswith(codec.MAGIC)
+    # a third open (any preference) replays the mixed root identically
+    third = FileEventStore(root, codec="json")
+    assert [e.id for e in third.consume("w", 100)] == \
+        [e.id for e in evs[1:] + more]
+
+
+def test_binary_segment_replicates_byte_for_byte(tmp_path):
+    from repro.bus import ReplicaServer, ReplicationClient
+
+    replica = str(tmp_path / "replica")
+    primary = str(tmp_path / "primary")
+    os.makedirs(primary)
+    server = ReplicaServer(replica)
+    client = ReplicationClient(server.address, primary, sync=True)
+    try:
+        path = os.path.join(primary, "w.log")
+        seg = SegmentLog(path, binary=True, fsync=False)
+        seg.replicator = client
+        append_events(seg, [termination_event("s", i) for i in range(4)])
+        append_events(seg, [termination_event("s", 9)])
+        rbytes = open(os.path.join(replica, "w.log"), "rb").read()
+        assert rbytes == open(path, "rb").read()
+        assert rbytes.startswith(codec.MAGIC)
+        # the mirrored bytes replay through the ordinary parse path
+        batches, _ = SegmentLog(os.path.join(replica, "w.log")).scan(
+            parse_event_record, 0)
+        assert [e.data["result"] for b in batches for e in b] == \
+            [0, 1, 2, 3, 9]
+    finally:
+        client.close()
+        server.close()
+
+
+# -- chaos: binary torn frames ------------------------------------------------
+
+def test_tear_segment_tail_matches_wire_format(tmp_path):
+    from repro.chaos.faults import TORN_BINARY_RECORD, tear_segment_tail
+
+    store = FileEventStore(str(tmp_path / "ev"))
+    store.create_stream("w")
+    evs = [termination_event("s", i) for i in range(3)]
+    store.publish_batch("w", evs)
+    torn = tear_segment_tail(str(tmp_path / "ev"))
+    assert torn == [str(tmp_path / "ev" / "w.log")]
+    assert open(torn[0], "rb").read().endswith(TORN_BINARY_RECORD)
+    # a fresh store repairs the tear and loses nothing acknowledged
+    fresh = FileEventStore(str(tmp_path / "ev"))
+    assert [e.id for e in fresh.consume("w", 10)] == [e.id for e in evs]
+    assert not open(torn[0], "rb").read().endswith(TORN_BINARY_RECORD)
+
+
+# -- columnar ingestion into the vector join plane ----------------------------
+
+def _plane_fixture(subjects, n_per):
+    pytest.importorskip("numpy")
+    from repro.core.batch import VectorJoinPlane
+
+    plane = VectorJoinPlane(backend="numpy")
+    ctxs = {s: {"count": 0} for s in subjects}
+    entries = {
+        s: [SimpleNamespace(
+            cname="counter",
+            cspec={"expected": 10 * n_per * len(subjects), "aggregate": True},
+            ctx=ctxs[s],
+            trg=SimpleNamespace(trigger_id=f"t-{s}"),
+            matches=lambda t: True)]
+        for s in subjects
+    }
+    stats = SimpleNamespace(activations=0)
+    evs = [termination_event(subjects[i % len(subjects)], i)
+           for i in range(n_per * len(subjects))]
+    return plane, ctxs, entries, stats, evs
+
+
+def test_triage_consumes_event_columns_without_materializing():
+    subjects = ["a", "b", "c"]
+    plane, ctxs, entries, stats, evs = _plane_fixture(subjects, 4)
+    cols = codec.decode_frame_payload(codec.encode_frame_payload(evs))
+    res = plane.triage(cols, lambda s: entries.get(s, ()), stats)
+    assert res is not None
+    handled, leftover = res
+    assert handled == [e.id for e in evs] and leftover == []
+    # the whole batch flowed from the decoded frame into the kernel without
+    # a single CloudEvent being built
+    assert cols._events is None
+    assert stats.activations == len(evs)
+    for s in subjects:
+        assert ctxs[s]["count"] == 4
+        assert ctxs[s]["results"] == \
+            [e.data["result"] for e in evs if e.subject == s]
+
+
+def test_triage_columns_match_list_semantics():
+    subjects = ["a", "b", "unknown"]
+    plane, ctxs, entries, stats, evs = _plane_fixture(subjects, 3)
+    del entries["unknown"]  # its events go leftover (split path)
+    runs = []
+    for shape in ("list", "columns"):
+        for c in ctxs.values():
+            c.clear()
+            c["count"] = 0
+        stats.activations = 0
+        batch = evs if shape == "list" else \
+            codec.decode_frame_payload(codec.encode_frame_payload(evs))
+        handled, leftover = plane.triage(
+            batch, lambda s: entries.get(s, ()), stats)
+        runs.append((handled, [e.id for e in leftover],
+                     {s: dict(c) for s, c in ctxs.items()},
+                     stats.activations))
+    assert runs[0] == runs[1]
+    handled, leftover_ids, _, _ = runs[1]
+    assert handled == [e.id for e in evs if e.subject != "unknown"]
+    assert leftover_ids == [e.id for e in evs if e.subject == "unknown"]
+
+
+def test_join_counts_segments_matches_repeat_expansion():
+    np = pytest.importorskip("numpy")
+    from repro.kernels.event_join.dispatch import (join_counts_segments,
+                                                   resolve_join_backend)
+
+    lens = np.array([3, 0, 5, 1], dtype=np.int64)
+    counts = np.array([1, 2, 3, 4], dtype=np.int32)
+    expected = np.array([100, 1, 100, 100], dtype=np.int32)
+    _, fn = resolve_join_backend("numpy")
+    ref = fn(np.repeat(np.arange(4, dtype=np.int32), lens), counts, expected)
+    got = join_counts_segments(lens, counts, expected)
+    assert (got[0] == ref[0]).all() and (got[1] == ref[1]).all()
+    assert got[0].tolist() == [4, 2, 8, 5]

@@ -200,18 +200,19 @@ def test_torn_log_tail_repair(tmp_path):
     store.publish_batch("w", evs)
     p = store.partition_for("s0")
     log_path = os.path.join(str(tmp_path / "bus"), "w", "p%04d.log" % p)
-    with open(log_path, "a") as f:
-        f.write('[{"torn": ')  # crash mid-append: no newline, bad json
+    with open(log_path, "ab") as f:
+        # crash mid-append: a record whose length prefix promises more
+        # bytes than ever hit the disk
+        f.write(b"\x63torn-frame")
     # a fresh instance (reader) sees only the acknowledged events
     reader = FilePartitionedEventStore(str(tmp_path / "bus"), 4)
     assert {e.id for e in reader.consume("w", 100)} == {e.id for e in evs}
     # the next locked writer truncates the torn tail before appending
     extra = termination_event("s0", 99)
     reader.publish("w", extra)
-    with open(log_path) as f:
+    with open(log_path, "rb") as f:
         content = f.read()
-    assert "torn" not in content
-    assert content.endswith("\n")
+    assert b"torn-frame" not in content
     got = {e.id for e in reader.consume("w", 100)}
     assert got == {e.id for e in evs} | {extra.id}
     # and the original instance also converges
