@@ -429,12 +429,14 @@ def _encode_event_batch(seg: SegmentLog, events: List[CloudEvent]):
 
 
 def _decode_event_batch(rec) -> List[CloudEvent]:
-    """A scanned log record → events: bytes payloads are columnar frames,
-    str lines are v1 JSON arrays."""
-    if isinstance(rec, bytes):
-        return codec.decode_frame_payload(rec).events()
-    from_dict = CloudEvent.from_dict
-    return [from_dict(d) for d in json.loads(rec)]
+    """A scanned log record → events, payload-shape-blind: columnar
+    frames, JSON arrays and single JSON event dicts all decode, whether
+    the record arrived as bytes (tfb1) or a str line (v1).  Tolerance
+    matters: a str record appended through ``SegmentLog.append`` on a
+    binary segment arrives as JSON *bytes*, and hard-routing every bytes
+    payload to the frame decoder would stall the scan at an acknowledged
+    record forever (and the next locked writer would chop it)."""
+    return codec.events_of(codec.decode_payload(rec))
 
 
 #: Separator between a committed record's lease-epoch prefix and the event
@@ -793,6 +795,19 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         seg.truncate(off)
         return off + seg.append(lines)
 
+    def _append_batch_clean(
+        self, seg: SegmentLog, off: int, events: List[CloudEvent]
+    ) -> int:
+        """Like ``_append_clean`` for one event batch, but the record is
+        encoded AFTER the repair truncate: a truncate below the binary
+        magic (a crash can leave a 1–4 byte header fragment, which sniffs
+        as v1) frees the file to re-commit to the preferred format, so a
+        format sniffed *before* the truncate can be stale — the append
+        would then frame a v1 JSON line as a TFB1 record (or vice versa)
+        and poison the scan at an acknowledged offset."""
+        seg.truncate(off)
+        return off + seg.append([_encode_event_batch(seg, events)])
+
     # -- lease-fenced ownership (the host-loss fault domain) -------------------
     # One JSON lease record per partition, next to ``stream.json``:
     # ``{"partition": p, "owner": <node id>, "epoch": n, "expires": unix-ts}``.
@@ -1000,8 +1015,7 @@ class FilePartitionedEventStore(PartitionedStoreBase):
             # scan_log before appending is mandatory: log_off must sit at the
             # true parseable EOF or _append_clean would chop foreign records
             fp.sync()
-            fp.log_off = self._append_clean(
-                fp.log, fp.log_off, [_encode_event_batch(fp.log, events)])
+            fp.log_off = self._append_batch_clean(fp.log, fp.log_off, events)
             committed = fp.shard.committed_ids
             live = [e for e in events if e.id not in committed]
             if live:
@@ -1164,11 +1178,14 @@ class FilePartitionedEventStore(PartitionedStoreBase):
         with fp.shard.lock, self._plock(fp):
             fp.sync(full=True)
             self._check_lease(workflow, p)
+            # truncate BEFORE sniffing the format (see _append_batch_clean):
+            # a sub-magic repair truncate can flip the active format
+            fp.dlq.truncate(fp.dlq_off)
             if fp.dlq.active_format() == "tfb1":
                 rec = codec.encode_frame_payload([event])
             else:
                 rec = event.to_json()  # legacy ledger shape: one event dict
-            fp.dlq_off = self._append_clean(fp.dlq, fp.dlq_off, [rec])
+            fp.dlq_off += fp.dlq.append([rec])
             fp.dlq_ids.add(event.id)
             fp.shard.to_dlq(event)
 

@@ -271,9 +271,13 @@ def encode_frame_payload(events) -> bytes:
         parts.append(bytes(src))
         parts.append(bytes(spec))
     else:
-        parts.append(b"\x02")
+        # 2-byte indices up to 65535 interned strings, 4-byte beyond —
+        # a pathological batch with huge subject/type cardinality still
+        # encodes instead of overflowing array("H")
+        code = "H" if len(table) <= 0xFFFF else "I"
+        parts.append(b"\x02" if code == "H" else b"\x04")
         for col in (subj, typ, src, spec):
-            a = array("H", col)
+            a = array(code, col)
             if sys.byteorder != "little":
                 a.byteswap()
             parts.append(a.tobytes())
@@ -343,17 +347,21 @@ def decode_frame_payload(payload: bytes) -> "EventColumns":
         typ_i: Any = cur.take(n)
         src_i: Any = cur.take(n)
         spec_i: Any = cur.take(n)
-    else:
-        def u16(blob: bytes) -> array:
-            a = array("H")
+    elif width in (2, 4):
+        code = "H" if width == 2 else "I"
+
+        def uint(blob: bytes) -> array:
+            a = array(code)
             a.frombytes(blob)
             if sys.byteorder != "little":
                 a.byteswap()
             return a
-        subj_i = u16(cur.take(2 * n))
-        typ_i = u16(cur.take(2 * n))
-        src_i = u16(cur.take(2 * n))
-        spec_i = u16(cur.take(2 * n))
+        subj_i = uint(cur.take(width * n))
+        typ_i = uint(cur.take(width * n))
+        src_i = uint(cur.take(width * n))
+        spec_i = uint(cur.take(width * n))
+    else:
+        raise ValueError("unknown frame index width %d" % width)
 
     itag = cur.byte()
     blob = cur.take(cur.varint())
@@ -447,10 +455,12 @@ class EventColumns:
     def results(self) -> List[Any]:
         """Per-event result values, matching ``conditions._result_of``:
         ``data["result"]`` when data is a dict carrying one, else data
-        itself.  On a ``_D_RESULT`` frame this is the stored scalar
-        column — zero per-event work."""
+        itself.  Always a fresh list the caller owns — on a ``_D_RESULT``
+        frame a flat copy of the stored scalar column (no per-event work;
+        handing out the cached column by reference would let a mutating
+        caller corrupt what ``data_at``/``events`` later read)."""
         if self._data_tag == _D_RESULT:
-            return self._data_col
+            return list(self._data_col)
         return [d["result"] if isinstance(d, dict) and "result" in d else d
                 for d in self._data_col]
 

@@ -102,9 +102,10 @@ def _frame_roundtrip(events):
 def test_frame_roundtrip_result_batch():
     evs = [termination_event(f"s{i % 3}", i) for i in range(10)]
     payload, cols = _frame_roundtrip(evs)
-    # the common shape stores the result scalars directly: results() is the
-    # decoded column itself, zero per-event work
-    assert cols.results() is cols._data_col
+    # the common shape stores the result scalars directly: results() is a
+    # flat copy of the decoded column (zero per-event work, caller-owned)
+    assert cols.results() == cols._data_col
+    assert cols.results() is not cols._data_col
     assert cols.results() == [_result_of(e) for e in evs]
 
 
@@ -130,6 +131,31 @@ def test_frame_roundtrip_empty_and_wide_tables():
     weird = CloudEvent(subject="s", data={"result": 0})
     weird.__dict__["id"] = "a\x1fb"
     _frame_roundtrip([weird, termination_event("s", 1)])
+
+
+def test_frame_wide_table_u32_indices():
+    # >65535 interned strings forces the 4-byte index arrays instead of
+    # overflowing array("H") and failing the publish
+    evs = [termination_event("subject-%d" % i, i % 7) for i in range(0x10001)]
+    payload = codec.encode_frame_payload(evs)
+    cols = codec.decode_frame_payload(payload)
+    assert len(cols) == len(evs)
+    assert cols.subjects[0] == "subject-0"
+    assert cols.subjects[-1] == "subject-%d" % 0x10000
+    assert cols.ids == [e.id for e in evs]
+    assert cols.results() == [e.data["result"] for e in evs]
+
+
+def test_results_returns_caller_owned_list():
+    # mutating the returned list must not corrupt the cached columns that
+    # data_at()/events() later read
+    evs = [termination_event("s", i) for i in range(4)]
+    cols = codec.decode_frame_payload(codec.encode_frame_payload(evs))
+    res = cols.results()
+    res[0] = "mutated"
+    assert cols.results() == [0, 1, 2, 3]
+    assert cols.data_at(0) == {"result": 0}
+    assert cols.events()[0].data == {"result": 0}
 
 
 def test_frame_truncation_always_raises():
@@ -399,3 +425,80 @@ def test_join_counts_segments_matches_repeat_expansion():
     got = join_counts_segments(lens, counts, expected)
     assert (got[0] == ref[0]).all() and (got[1] == ref[1]).all()
     assert got[0].tolist() == [4, 2, 8, 5]
+
+
+# -- partitioned bus: format decided after the repair truncate ----------------
+# (REVIEW regressions: a crashed creator can leave a 1-4 byte magic fragment
+# that sniffs as v1; the repair truncate then frees the empty file to
+# re-commit to the preferred binary format, so the record must be encoded
+# AFTER the truncate or a v1 JSON line lands TFB1-framed, readers stall at
+# the acknowledged record, and the next locked writer chops the fsynced
+# batch.)
+
+def test_partitioned_publish_after_torn_magic_header(tmp_path):
+    from repro.bus.partitioned import FilePartitionedEventStore
+    for frag in range(1, len(codec.MAGIC)):
+        root = str(tmp_path / ("bus%d" % frag))
+        store = FilePartitionedEventStore(root, 1, fsync=False)
+        store.create_stream("w")
+        log = os.path.join(root, "w", "p0000.log")
+        with open(log, "wb") as f:
+            f.write(codec.MAGIC[:frag])
+        e1 = termination_event("s", 1)
+        store.publish("w", e1)
+        # the repaired (empty) file re-committed to binary, and the record
+        # was encoded in THAT format
+        with open(log, "rb") as f:
+            assert f.read(len(codec.MAGIC)) == codec.MAGIC, frag
+        # a fresh reader replays the acknowledged publish...
+        reader = FilePartitionedEventStore(root, 1, fsync=False)
+        assert [e.id for e in reader.consume("w")] == [e1.id], frag
+        # ...and the next locked writer appends after it, never chops it
+        e2 = termination_event("s", 2)
+        FilePartitionedEventStore(root, 1, fsync=False).publish("w", e2)
+        reader2 = FilePartitionedEventStore(root, 1, fsync=False)
+        assert [e.id for e in reader2.consume("w")] == [e1.id, e2.id], frag
+
+
+def test_partitioned_dlq_after_torn_magic_header(tmp_path):
+    from repro.bus.partitioned import FilePartitionedEventStore
+    root = str(tmp_path / "bus")
+    store = FilePartitionedEventStore(root, 1, fsync=False)
+    store.create_stream("w")
+    dlq = os.path.join(root, "w", "p0000.dlq")
+    with open(dlq, "wb") as f:
+        f.write(codec.MAGIC[:3])
+    ev = termination_event("s", None, failure_reason="boom")
+    store.to_dlq("w", ev)
+    with open(dlq, "rb") as f:
+        assert f.read(len(codec.MAGIC)) == codec.MAGIC
+    fresh = FilePartitionedEventStore(root, 1, fsync=False)
+    assert fresh.dlq_size("w") == 1
+
+
+def test_decode_event_batch_is_payload_shape_blind(tmp_path):
+    from repro.bus.partitioned import (FilePartitionedEventStore,
+                                       _decode_event_batch)
+    evs = [termination_event("s", 1), termination_event("t", 2)]
+    ids = [e.id for e in evs]
+    arr = json.dumps([e.to_dict() for e in evs], separators=(",", ":"))
+    assert [e.id for e in _decode_event_batch(
+        codec.encode_frame_payload(evs))] == ids
+    assert [e.id for e in _decode_event_batch(arr)] == ids
+    # a str record framed through SegmentLog.append on a binary segment
+    # arrives as JSON *bytes*: it must decode, not stall the scan forever
+    assert [e.id for e in _decode_event_batch(arr.encode())] == ids
+    # and a legacy single-dict record normalizes to a one-event list
+    assert [e.id for e in _decode_event_batch(evs[0].to_json())] == ids[:1]
+
+    # end to end: such a record on disk must not hide later batches
+    root = str(tmp_path / "bus")
+    store = FilePartitionedEventStore(root, 1, fsync=False)
+    store.create_stream("w")
+    store.publish("w", evs[0])
+    side = SegmentLog(os.path.join(root, "w", "p0000.log"), fsync=False)
+    side.append([json.dumps([evs[1].to_dict()], separators=(",", ":"))])
+    e3 = termination_event("u", 3)
+    FilePartitionedEventStore(root, 1, fsync=False).publish("w", e3)
+    reader = FilePartitionedEventStore(root, 1, fsync=False)
+    assert [e.id for e in reader.consume("w")] == ids + [e3.id]
